@@ -1,0 +1,71 @@
+"""Benchmark orchestrator — one module per paper table.
+
+Prints ``table,name,metric,value`` CSV and writes
+experiments/bench_results.json. ``--quick`` (default) keeps everything
+CPU-minutes; ``--full`` runs longer training. ``--only tableN`` selects one.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="experiments/bench_results.json")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (table1_vit, table2_dit, table3_mdm, table4_ar,
+                            table5_recurrent, table6_noprop,
+                            table7_partitioning, table8_blockcount,
+                            table12_walltime)
+    from benchmarks.common import emit
+
+    tables = {
+        "table1_vit_classification": table1_vit.run,
+        "table2_dit_generation": table2_dit.run,
+        "table3_mdm_text": table3_mdm.run,
+        "table4_ar_text": table4_ar.run,
+        "table5_recurrent_depth": table5_recurrent.run,
+        "table6_noprop": table6_noprop.run,
+        "table7_partitioning": table7_partitioning.run,
+        "table8_blockcount": table8_blockcount.run,
+        "table12_walltime_memory": table12_walltime.run,
+    }
+    if args.only:
+        tables = {k: v for k, v in tables.items() if args.only in k}
+
+    lines = ["table,name,metric,value"]
+    results = {}
+    failures = []
+    for name, fn in tables.items():
+        t0 = time.time()
+        try:
+            rows = fn(quick=quick)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+            continue
+        results[name] = rows
+        emit([dict(r) for r in rows], name, lines)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+    print("\n".join(lines))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=float)
+    if failures:
+        print("FAILURES:", failures, file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

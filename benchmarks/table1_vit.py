@@ -1,0 +1,154 @@
+"""Paper Table 1 (+ Table 9): ViT classification — e2e backprop vs
+DiffusionBlocks vs Forward-Forward. DB must track e2e; FF must collapse
+(paper: 60.25 / 59.30 / 7.85 on CIFAR-100)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core.vit import ViTDiffusionBlocks
+from repro.data import GaussianMixtureImages
+from repro.optim import adamw, apply_updates
+
+
+CFG = ModelConfig(name="vit-bench", family="dense", n_layers=6, d_model=64,
+                  n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=10,
+                  norm="layernorm", mlp="gelu", rope_theta=0.0)
+
+
+def _train(vit, params, loss_fn, data, steps, lr=2e-3, seed=0):
+    init, update = adamw(lr)
+    st = init(params)
+    rng = jax.random.PRNGKey(seed)
+    grad_fn = jax.jit(jax.value_and_grad(
+        lambda p, x, y, r: loss_fn(p, x, y, r)[0]))
+    for i in range(steps):
+        x, y = next(data)
+        rng, r = jax.random.split(rng)
+        loss, grads = grad_fn(params, x, y, r)
+        upd, st, _ = update(grads, st, params)
+        params = apply_updates(params, upd)
+    return params
+
+
+def _accuracy(pred, y):
+    return float((np.asarray(pred) == np.asarray(y)).mean())
+
+
+def _forward_forward(images, labels, test_x, test_y, num_classes, steps,
+                     d=64, n_layers=4, lr=2e-3, seed=0):
+    """Forward-Forward baseline (Hinton 2022): layer-local goodness training
+    with label overlaid on the input; classify by total goodness."""
+    rngk = jax.random.PRNGKey(seed)
+    flat = images.reshape(images.shape[0], -1)
+    din = flat.shape[-1] + num_classes
+    dims = [din] + [d] * n_layers
+    ws = [jax.random.normal(jax.random.fold_in(rngk, i),
+                            (dims[i], dims[i + 1])) / np.sqrt(dims[i])
+          for i in range(n_layers)]
+
+    def overlay(x, y):
+        onehot = jax.nn.one_hot(y, num_classes)
+        return jnp.concatenate([x, onehot], -1)
+
+    def layer_fwd(w, h):
+        h = h / (jnp.linalg.norm(h, axis=-1, keepdims=True) + 1e-6)
+        return jax.nn.relu(h @ w)
+
+    def goodness_loss(w, h_pos, h_neg):
+        gp = jnp.sum(jnp.square(layer_fwd(w, h_pos)), -1)
+        gn = jnp.sum(jnp.square(layer_fwd(w, h_neg)), -1)
+        theta = 2.0
+        return jnp.mean(jax.nn.softplus(theta - gp)
+                        + jax.nn.softplus(gn - theta))
+
+    rng = np.random.RandomState(seed)
+    init, update = adamw(lr)
+    sts = [init(w) for w in ws]
+    gfn = jax.jit(jax.value_and_grad(goodness_loss))
+    n = flat.shape[0]
+    for it in range(steps):
+        idx = rng.randint(0, n, 32)
+        x, y = flat[idx], labels[idx]
+        y_neg = (y + rng.randint(1, num_classes, 32)) % num_classes
+        h_pos, h_neg = overlay(x, y), overlay(x, y_neg)
+        for li in range(n_layers):
+            _, g = gfn(ws[li], h_pos, h_neg)
+            upd, sts[li], _ = update(g, sts[li], ws[li])
+            ws[li] = apply_updates(ws[li], upd)
+            h_pos = jax.lax.stop_gradient(layer_fwd(ws[li], h_pos))
+            h_neg = jax.lax.stop_gradient(layer_fwd(ws[li], h_neg))
+
+    tflat = test_x.reshape(test_x.shape[0], -1)
+    goods = []
+    for c in range(num_classes):
+        h = overlay(tflat, jnp.full((tflat.shape[0],), c))
+        total = 0.0
+        for w in ws:
+            h = layer_fwd(w, h)
+            total = total + jnp.sum(jnp.square(h), -1)
+        goods.append(total)
+    pred = jnp.argmax(jnp.stack(goods, -1), -1)
+    return _accuracy(pred, test_y)
+
+
+def run(quick: bool = True):
+    steps = 150 if quick else 600
+    g = GaussianMixtureImages(num_classes=10, image_size=16, noise_scale=2.0,
+                              seed=0)
+    data_rng = np.random.RandomState(1)
+
+    def data():
+        while True:
+            x, y = g.sample(data_rng, 32)
+            yield jnp.asarray(x), jnp.asarray(y)
+
+    test_x, test_y = g.sample(np.random.RandomState(99), 256)
+    test_x, test_y = jnp.asarray(test_x), jnp.asarray(test_y)
+
+    db = DBConfig(num_blocks=3, overlap_gamma=0.05)
+    vit = ViTDiffusionBlocks(CFG, db, image_size=16, patch=4, channels=3)
+
+    # e2e baseline
+    p = vit.init(jax.random.PRNGKey(0))
+    p = _train(vit, p, lambda pp, x, y, r: vit.e2e_loss(pp, x, y, r),
+               data(), steps)
+    pred_e2e, _ = vit.predict_e2e(p, test_x)
+    acc_e2e = _accuracy(pred_e2e, test_y)
+
+    # DiffusionBlocks (block-cycling)
+    p = vit.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    it = data()
+    from repro.optim import adamw as _ad
+    init, update = _ad(2e-3)
+    st = init(p)
+    grad_fns = [jax.jit(jax.value_and_grad(
+        lambda pp, x, y, r, b=b: vit.block_loss(pp, b, x, y, r)[0]))
+        for b in range(db.num_blocks)]
+    key = jax.random.PRNGKey(1)
+    for i in range(steps):
+        x, y = next(it)
+        key, r = jax.random.split(key)
+        b = rng.randint(0, db.num_blocks)
+        loss, grads = grad_fns[b](p, x, y, r)
+        upd, st, _ = update(grads, st, p)
+        p = apply_updates(p, upd)
+    pred_db, _ = vit.predict(p, test_x, jax.random.PRNGKey(7), num_steps=8)
+    acc_db = _accuracy(pred_db, test_y)
+
+    # Forward-Forward
+    train_x, train_y = g.sample(np.random.RandomState(2), 2048)
+    acc_ff = _forward_forward(jnp.asarray(train_x), jnp.asarray(train_y),
+                              test_x, test_y, 10, steps)
+
+    return [
+        {"name": "ViT-e2e", "accuracy": acc_e2e, "layers_with_grads": 6},
+        {"name": "ViT+DiffusionBlocks", "accuracy": acc_db,
+         "layers_with_grads": 2},
+        {"name": "Forward-Forward", "accuracy": acc_ff,
+         "layers_with_grads": 1},
+    ]

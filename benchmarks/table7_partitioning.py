@@ -1,0 +1,22 @@
+"""Paper Table 7: block partitioning strategy ablation — equi-probability vs
+uniform σ-partitioning × layer distributions, on the DiT synthetic task
+(overlap disabled, as in the paper's ablation)."""
+from __future__ import annotations
+
+from benchmarks import table2_dit as T2
+
+
+def run(quick: bool = True):
+    steps = 220 if quick else 1000
+    rows = []
+    for partition in ("uniform", "equiprob"):
+        for dist in ([2, 2, 2], [1, 4, 1]):
+            out = T2.run(quick=quick, db_blocks=3, steps=steps,
+                         partition=partition, distribution=dist)
+            db_row = [r for r in out if "DiffusionBlocks" in r["name"]][0]
+            rows.append({
+                "name": f"{partition}-{'-'.join(map(str, dist))}",
+                "fid_proxy_dist": db_row["fid_proxy_dist"],
+                "mode_coverage": db_row["mode_coverage"],
+            })
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Tables 8/10/11: effect of block count B.
+
+Image-generation variant (Tables 8/10): DiT synthetic, B ∈ {1,2,3,6} —
+fidelity vs layers-per-step. LM variant (Table 11): AR synthetic, same Bs —
+generation quality. Relative speed = B (exact: L/B layers get gradients)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as CM
+from benchmarks import table2_dit as T2
+from repro.configs import DBConfig
+from repro.data import MarkovLM
+
+
+def run(quick: bool = True):
+    steps = 220 if quick else 1000
+    rows = []
+    for B in (1, 2, 3, 6):
+        out = T2.run(quick=quick, db_blocks=max(B, 1), steps=steps)
+        row = out[1] if B > 1 else out[0]
+        rows.append({"name": f"dit-B={B}",
+                     "fid_proxy_dist": row["fid_proxy_dist"],
+                     "mode_coverage": row["mode_coverage"],
+                     "layers_per_block": 6 // B, "relative_speed": float(B)})
+    # Table 11: LM
+    lm = MarkovLM(vocab_size=32, branching=2, seed=5)
+    for B in (2, 3, 6):
+        db = DBConfig(num_blocks=B, overlap_gamma=0.0)
+        dbm, p, hist = CM.train_lm_db(db, steps, lm, seed=0)
+        m = CM.generation_metrics(dbm, p, lm)
+        rows.append({"name": f"lm-B={B}", "mauve_proxy": m["mauve_proxy"],
+                     "teacher_nll": m["teacher_nll"],
+                     "layers_per_block": 6 // B,
+                     "relative_speed": float(B)})
+    return rows

@@ -1,0 +1,57 @@
+"""Masked diffusion LM with DiffusionBlocks (paper §5.3 / App. D): the
+masking schedule α(t) is partitioned by equal decrements — each block owns an
+equal share of the demasking work.
+
+    PYTHONPATH=src python examples/masked_diffusion.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core.masked import MaskedDiffusionBlocks
+from repro.data import MarkovLM
+from repro.optim import adamw, apply_updates
+
+
+def main():
+    cfg = ModelConfig(name="mdm-ex", family="dense", n_layers=6, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=33,
+                      norm="layernorm", mlp="gelu")
+    db = DBConfig(num_blocks=3, overlap_gamma=0.0)
+    mdm = MaskedDiffusionBlocks(cfg, db)
+    print("masking-rate ranges per block:",
+          [mdm.t_range(b) for b in range(db.num_blocks)])
+
+    lm = MarkovLM(vocab_size=32, branching=2, seed=4)
+    params = mdm.init(jax.random.PRNGKey(0))
+    init, update = adamw(2e-3)
+    st = init(params)
+    grad_fns = [jax.jit(jax.value_and_grad(
+        lambda p, t, r, b=b: mdm.block_loss(p, b, t, r)[0]))
+        for b in range(db.num_blocks)]
+    rng = jax.random.PRNGKey(1)
+    it = np.random.RandomState(1)
+    brng = np.random.RandomState(0)
+    for i in range(200):
+        toks = jnp.asarray(lm.sample(it, 16, 32))
+        rng, r = jax.random.split(rng)
+        b = brng.randint(0, db.num_blocks)
+        loss, g = grad_fns[b](params, toks, r)
+        upd, st, _ = update(g, st, params)
+        params = apply_updates(params, upd)
+        if i % 40 == 0:
+            print(f"it={i:4d} block={b} loss={float(loss):.4f}")
+
+    test = jnp.asarray(lm.sample(np.random.RandomState(9), 16, 32))
+    bpc = float(mdm.nelbo_bpc(params, test, jax.random.PRNGKey(5),
+                              n_samples=4))
+    floor = -lm.log_likelihood(np.array(test))
+    print(f"BPC: {bpc:.3f} (entropy floor of the chain: {floor:.3f})")
+    gen = mdm.generate(params, jax.random.PRNGKey(6), 4, 32)
+    print("generation legal-rate:", lm.transition_accuracy(np.array(gen)))
+
+
+if __name__ == "__main__":
+    main()

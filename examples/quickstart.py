@@ -1,0 +1,55 @@
+"""Quickstart: convert a small transformer into DiffusionBlocks, train the
+blocks independently on synthetic text, and generate with the block-wise
+Euler sampler.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import DiffusionBlocksModel, train_db
+from repro.data import MarkovLM
+from repro.launch.serve import generate
+
+
+def main():
+    # 1. Any residual/transformer architecture (paper §3.1: the recipe needs
+    #    only the residual structure).
+    cfg = ModelConfig(name="quickstart", family="dense", n_layers=6,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=32)
+
+    # 2. DiffusionBlocks conversion: B=3 blocks, EDM noise schedule,
+    #    equi-probability partitioning (§3.3), AR adapter (App. E.4).
+    db = DBConfig(num_blocks=3, overlap_gamma=0.1)
+    dbm = DiffusionBlocksModel(cfg, db)
+    print("units per block:", dbm.ranges)
+    print("sigma ranges   :", [tuple(round(x, 4) for x in
+                                     dbm.edges[b:b + 2])
+                               for b in range(db.num_blocks)])
+
+    # 3. Train block-wise: each step samples ONE block; gradients exist for
+    #    n_layers/B layers only.
+    lm = MarkovLM(vocab_size=32, branching=2, seed=5)
+
+    def data():
+        rng = np.random.RandomState(1)
+        while True:
+            yield jnp.asarray(lm.sample(rng, 16, 32))
+
+    tcfg = TrainConfig(steps=150, lr=2e-3, warmup_steps=10, log_every=25)
+    params, hist = train_db(dbm, tcfg, data(), jax.random.PRNGKey(0))
+
+    # 4. Generate: denoise each new token through the blocks (σ_max -> 0).
+    prompts = jnp.asarray(lm.sample(np.random.RandomState(2), 2, 8))
+    out = generate(dbm, params, prompts, max_new=16)
+    print("prompt+generation:", np.array(out))
+    print("legal-transition rate:",
+          lm.transition_accuracy(np.array(out)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Recurrent-depth (Huginn-style) training, baseline vs DiffusionBlocks
+(paper §5.5): K-iteration truncated BPTT vs single-pass denoiser training.
+
+    PYTHONPATH=src python examples/recurrent_depth.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core.recurrent import RecurrentDepthModel
+from repro.data import MarkovLM
+from repro.optim import adamw, apply_updates
+
+
+def train(model, loss_name, steps, lm, lr=2e-3):
+    params = model.init(jax.random.PRNGKey(0))
+    init, update = adamw(lr)
+    st = init(params)
+    loss_fn = getattr(model, loss_name)
+    grad = jax.jit(jax.value_and_grad(lambda p, t, r: loss_fn(p, t, r)[0]))
+    rng = jax.random.PRNGKey(1)
+    it = np.random.RandomState(1)
+    t0, losses = time.time(), []
+    for i in range(steps):
+        toks = jnp.asarray(lm.sample(it, 8, 32))
+        rng, r = jax.random.split(rng)
+        loss, g = grad(params, toks, r)
+        upd, st, _ = update(g, st, params)
+        params = apply_updates(params, upd)
+        losses.append(float(loss))
+    return params, losses, time.time() - t0
+
+
+def main():
+    cfg = ModelConfig(name="huginn-ex", family="dense", n_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=32)
+    K = 8
+    lm = MarkovLM(vocab_size=32, branching=2, seed=6)
+    steps = 100
+
+    base = RecurrentDepthModel(cfg, DBConfig(num_blocks=1), prelude=1,
+                               coda=1, recurrence=K, bptt_k=4)
+    _, lb, tb = train(base, "baseline_loss", steps, lm)
+    print(f"Huginn baseline (K={K}, tbptt): first={np.mean(lb[:5]):.3f} "
+          f"last={np.mean(lb[-5:]):.3f}  time={tb:.1f}s "
+          f"({K} core passes/step)")
+
+    dbm = RecurrentDepthModel(cfg, DBConfig(num_blocks=1), prelude=1,
+                              coda=1, recurrence=K, bptt_k=4)
+    _, ld, td = train(dbm, "db_loss", steps, lm)
+    print(f"Huginn+DiffusionBlocks:      first={np.mean(ld[:5]):.3f} "
+          f"last={np.mean(ld[-5:]):.3f}  time={td:.1f}s (1 core pass/step)")
+    print(f"training speedup: {tb/td:.2f}x (paper: up to K-fold)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Batched serving with the block-wise sampler — train briefly, then serve a
+batch of prompts and report throughput + quality.
+
+    PYTHONPATH=src python examples/serve_generate.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import DiffusionBlocksModel, train_db
+from repro.data import MarkovLM
+from repro.launch.serve import generate
+
+
+def main():
+    cfg = ModelConfig(name="serve-ex", family="dense", n_layers=6,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=32)
+    db = DBConfig(num_blocks=3, overlap_gamma=0.1)
+    dbm = DiffusionBlocksModel(cfg, db)
+    lm = MarkovLM(vocab_size=32, branching=2, seed=5)
+
+    def data():
+        rng = np.random.RandomState(1)
+        while True:
+            yield jnp.asarray(lm.sample(rng, 16, 32))
+
+    tcfg = TrainConfig(steps=150, lr=2e-3, warmup_steps=10, log_every=50)
+    params, _ = train_db(dbm, tcfg, data(), jax.random.PRNGKey(0))
+
+    batch, prompt_len, max_new = 8, 8, 32
+    prompts = jnp.asarray(lm.sample(np.random.RandomState(2), batch,
+                                    prompt_len))
+    t0 = time.time()
+    out = generate(dbm, params, prompts, max_new=max_new)
+    dt = time.time() - t0
+    print(f"served {batch} sequences × {max_new} new tokens in {dt:.1f}s "
+          f"({batch*max_new/dt:.1f} tok/s, includes compile)")
+    print("legal-transition rate:", lm.transition_accuracy(np.array(out)))
+    # each denoising step touched only n_layers/B layers (paper App. H)
+    print(f"layers per denoise step: {cfg.n_layers // db.num_blocks} "
+          f"of {cfg.n_layers}")
+
+
+if __name__ == "__main__":
+    main()

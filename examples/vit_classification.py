@@ -1,0 +1,63 @@
+"""ViT classification with DiffusionBlocks (paper §5.1): noise the label
+embedding, each block denoises it within its σ-range; inference runs the
+Euler chain and classifies the final estimate.
+
+    PYTHONPATH=src python examples/vit_classification.py [--steps 200]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core.vit import ViTDiffusionBlocks
+from repro.data import GaussianMixtureImages
+from repro.optim import adamw, apply_updates
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--blocks", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="vit-ex", family="dense", n_layers=6, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=10,
+                      norm="layernorm", mlp="gelu", rope_theta=0.0)
+    db = DBConfig(num_blocks=args.blocks, overlap_gamma=0.05)
+    vit = ViTDiffusionBlocks(cfg, db, image_size=16, patch=4, channels=3)
+    params = vit.init(jax.random.PRNGKey(0))
+
+    g = GaussianMixtureImages(num_classes=10, image_size=16, noise_scale=0.6)
+    it = np.random.RandomState(1)
+    test_x, test_y = g.sample(np.random.RandomState(99), 256)
+    test_x = jnp.asarray(test_x)
+
+    init, update = adamw(2e-3)
+    st = init(params)
+    key = jax.random.PRNGKey(1)
+    grad_fns = [jax.jit(jax.value_and_grad(
+        lambda p, x, y, r, b=b: vit.block_loss(p, b, x, y, r)[0]))
+        for b in range(args.blocks)]
+    brng = np.random.RandomState(0)
+    for i in range(args.steps):
+        x, y = g.sample(it, 32)
+        key, r = jax.random.split(key)
+        b = brng.randint(0, args.blocks)
+        loss, grads = grad_fns[b](params, jnp.asarray(x), jnp.asarray(y), r)
+        upd, st, _ = update(grads, st, params)
+        params = apply_updates(params, upd)
+        if i % 40 == 0:
+            print(f"it={i:4d} block={b} loss={float(loss):.4f}")
+
+    pred, _ = vit.predict(params, test_x, jax.random.PRNGKey(7))
+    acc = float((np.asarray(pred) == test_y).mean())
+    print(f"DiffusionBlocks ViT accuracy: {acc:.3f} "
+          f"(training {cfg.n_layers // args.blocks}/{cfg.n_layers} layers "
+          f"at a time)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (load_blocks, load_metadata, load_pytree,
+                                   save_block, save_pytree)

@@ -1,0 +1,92 @@
+"""Checkpointing: npz-based pytree save/restore with path-flattened keys,
+plus BLOCK-WISE checkpoints — each DiffusionBlocks block saves/restores its
+unit slice independently, which is what block-parallel training across pods
+needs (each pod writes only its block; a merge step assembles the full model).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:   # npz has no bf16; widen (load_pytree
+            arr = arr.astype(np.float32)  # casts back to the template dtype)
+        flat[key] = arr
+    return flat
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def load_pytree(path: str, template) -> Any:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for p, leaf in leaves_t:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = jnp.asarray(data[key])
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def load_metadata(path: str) -> Optional[dict]:
+    meta = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    if os.path.exists(meta):
+        with open(meta) as f:
+            return json.load(f)
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Block-wise checkpoints (DiffusionBlocks)
+# ---------------------------------------------------------------------------
+STACK_KEYS = ("layers", "units")
+
+
+def save_block(ckpt_dir: str, params, block: int, start: int, size: int,
+               step: int = 0) -> str:
+    """Save block ``block``'s unit slice + the shared periphery."""
+    from repro.core.training import extract_block_view
+    view = extract_block_view(params, start, size)
+    path = os.path.join(ckpt_dir, f"block_{block:02d}.npz")
+    save_pytree(path, view, {"block": block, "start": start, "size": size,
+                             "step": step})
+    return path
+
+
+def load_blocks(ckpt_dir: str, params_template, ranges) -> Any:
+    """Assemble a full model from per-block checkpoints (shared periphery is
+    taken from the highest-numbered block present)."""
+    from repro.core.training import (extract_block_view,
+                                     write_back_block_view)
+    params = params_template
+    for b, (start, size) in enumerate(ranges):
+        path = os.path.join(ckpt_dir, f"block_{b:02d}.npz")
+        if not os.path.exists(path):
+            continue
+        tmpl = extract_block_view(params, start, size)
+        view = load_pytree(path, tmpl)
+        params = write_back_block_view(params, view, start)
+    return params

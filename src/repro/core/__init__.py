@@ -1,0 +1,7 @@
+# The paper's primary contribution: DiffusionBlocks — block-wise training via
+# continuous-time diffusion interpretation (conversion recipe, equi-probability
+# partitioning, block-local score-matching objectives, block-wise sampler).
+from repro.core.blocks import DiffusionBlocksModel
+from repro.core import edm, partition
+from repro.core.training import (make_db_train_step, make_e2e_train_step,
+                                 train_db, train_e2e)

@@ -1,0 +1,294 @@
+"""DiffusionBlocks conversion (paper §3.1–3.3) — the framework's core.
+
+``DiffusionBlocksModel`` wraps any family model (``repro.models``) and exposes:
+
+  * block partitioning: unit ranges per block + equi-probability noise ranges;
+  * per-block training losses (paper Eq. 6) via the AR adapter (App. E.4),
+    in ``concat`` (clean‖noisy single stream, modified causal mask) or
+    ``two_pass`` (paired streams; required for SSM/hybrid) mode;
+  * end-to-end baseline loss (vanilla next-token CE) for the comparisons;
+  * block-wise inference: the Euler sampler (Eq. 5) that denoises the next
+    token's embedding through the blocks, plus ``serve_step`` used by the
+    dry-run decode shapes.
+
+Block independence is structural: ``block_loss(params, b, …)`` only ever
+*reads* units[start_b : start_b+size_b] (+ shared embed/head/cond), so
+gradients for other blocks are never materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AUDIO, HYBRID, SSM, VLM, DBConfig, ModelConfig
+from repro.core import edm
+from repro.core import partition as P
+from repro.models import build_model
+from repro.models.common import LayerCtx
+from repro.nn import attention as A
+from repro.nn.scan_util import uscan
+
+
+def chunked_ce(model, params, h: jax.Array, targets: jax.Array,
+               chunk: int = 512) -> jax.Array:
+    """Memory-safe cross-entropy through the readout: the (S, vocab) logits
+    are never materialized for the full sequence — per-chunk logits are
+    computed, reduced, and REMATERIALIZED in the backward pass
+    (jax.checkpoint). Standard production-LM trick; cuts the loss memory from
+    O(S·V) to O(chunk·V)."""
+    B, S = targets.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    nc = h.shape[1] // chunk
+    hc = h.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(h_i, t_i):
+        logits = model.logits(params, h_i)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.maximum(t_i, 0)
+        ce = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return jnp.sum(jnp.where(t_i >= 0, ce, 0.0))
+
+    def step(tot, xs):
+        h_i, t_i = xs
+        return tot + one(h_i, t_i), None
+
+    total, _ = uscan(step, jnp.zeros((), jnp.float32), (hc, tc))
+    return total / (B * S)
+
+
+def _needs_two_pass(cfg: ModelConfig) -> bool:
+    """SSM recurrences have no attention mask — the concat trick does not
+    apply (DESIGN.md §Arch-applicability)."""
+    return cfg.family in (HYBRID, SSM)
+
+
+class DiffusionBlocksModel:
+    def __init__(self, cfg: ModelConfig, db: DBConfig,
+                 distribution: Optional[Sequence[int]] = None):
+        self.cfg = cfg
+        self.db = db
+        self.model = build_model(cfg, db)
+        self.edges = P.sigma_edges(db)                     # descending, B+1
+        self.ranges = P.unit_ranges(self.model.n_units, db.num_blocks,
+                                    distribution)
+        self.causal_mode = ("two_pass" if _needs_two_pass(cfg)
+                            else db.causal_mode)
+
+    # ------------------------------------------------------------------
+    @property
+    def num_blocks(self) -> int:
+        return self.db.num_blocks
+
+    def init(self, rng, dtype=jnp.float32):
+        return self.model.init(rng, dtype)
+
+    def sample_block_sigma(self, rng, shape, b: int) -> jax.Array:
+        q_lo, q_hi = P.block_qrange(self.db, b, with_overlap=True)
+        return edm.sample_sigma_in_qrange(rng, shape, self.db, q_lo, q_hi)
+
+    # ------------------------------------------------------------------
+    # conditioning inputs (stubbed modality frontends)
+    # ------------------------------------------------------------------
+    def make_ctx(self, params, S: int, mode: str, sigma=None,
+                 aux_inputs: Optional[Dict[str, jax.Array]] = None,
+                 **kw) -> LayerCtx:
+        ctx = LayerCtx(cfg=self.cfg, mode=mode, positions=jnp.arange(S), **kw)
+        if sigma is not None:
+            ctx.cond = self.model.cond(params, jnp.log(sigma.reshape(-1)))
+        aux_inputs = aux_inputs or {}
+        # decode reads cross-attention K/V from the cache (filled at prefill);
+        # re-encoding the modality frontend per decode step would be wasted.
+        if self.cfg.family == VLM and mode != "decode":
+            ctx.kv_x = aux_inputs["image_embs"]
+            ctx.kv_positions = jnp.arange(ctx.kv_x.shape[1])
+        if self.cfg.family == AUDIO and mode != "decode":
+            ctx.kv_x = self.model.encode(params, aux_inputs["audio_embs"], ctx)
+            ctx.kv_positions = jnp.arange(ctx.kv_x.shape[1])
+        return ctx
+
+    # ------------------------------------------------------------------
+    # Training losses
+    # ------------------------------------------------------------------
+    def block_loss(self, params, b: int, tokens: jax.Array, rng,
+                   aux_inputs=None, impl: str = "auto",
+                   unit_range: Optional[Tuple[int, int]] = None
+                   ) -> Tuple[jax.Array, Dict]:
+        """Paper Eq. (6) for the AR adapter: noisy slot i carries
+        z_i = emb(x_i) + σ ε, conditioned on clean x_{<i}; the block denoises
+        it and CE is taken through the readout. σ ~ p_noise restricted to
+        block b's (overlap-expanded) range, one σ per example."""
+        Bsz, S = tokens.shape
+        start, size = unit_range if unit_range is not None else self.ranges[b]
+        r_sig, r_eps = jax.random.split(rng)
+        sigma = self.sample_block_sigma(r_sig, (Bsz, 1, 1), b)
+
+        table = self.model.embedding_table(params)
+        emb_clean = table[tokens]
+        z, _ = edm.add_noise(r_eps, emb_clean, sigma)
+        c_skip, c_out, c_in, _ = edm.preconditioning(sigma, self.db.sigma_data)
+        z_in = (c_in * z).astype(emb_clean.dtype)
+
+        if self.causal_mode == "concat":
+            stream = jnp.concatenate([emb_clean, z_in], axis=1)
+            ctx = self.make_ctx(
+                params, 2 * S, "train", sigma, aux_inputs, impl=impl)
+            ctx.mask_mod = A.db_concat_mask(S)
+            ctx.rope_positions = jnp.concatenate(
+                [jnp.arange(S), jnp.arange(S)])
+            ctx.cond_mask = jnp.arange(2 * S) >= S
+            h, _, aux = self.model.apply_units(params, stream, start, size, ctx)
+            f_out = h[:, S:]
+        else:
+            ctx = self.make_ctx(params, S, "train", sigma, aux_inputs,
+                                impl=impl)
+            _, f_out, aux = self.model.apply_units_two_pass(
+                params, emb_clean, z_in, start, size, ctx)
+
+        d_hat = edm.denoise_combine(z, f_out.astype(jnp.float32), sigma,
+                                    self.db.sigma_data)
+        loss = chunked_ce(self.model, params, d_hat.astype(emb_clean.dtype),
+                          tokens)
+        metrics = {"ce": loss, "aux": aux,
+                   "sigma_mean": jnp.mean(sigma)}
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.router_aux_weight * aux
+        return loss, metrics
+
+    def e2e_loss(self, params, tokens, rng=None, aux_inputs=None,
+                 impl: str = "auto"):
+        """Standard end-to-end next-token CE over the FULL stack — the
+        backprop baseline the paper compares against (model built with the
+        same AdaLN params; cond=None keeps them inert)."""
+        Bsz, S = tokens.shape
+        ctx = self.make_ctx(params, S, "train", None, aux_inputs, impl=impl)
+        h = self.model.embed(params, tokens)
+        h, _, aux = self.model.apply_units(params, h, 0, self.model.n_units,
+                                           ctx)
+        loss = chunked_ce(self.model, params, h[:, :-1], tokens[:, 1:])
+        metrics = {"ce": loss, "aux": aux}
+        if self.cfg.moe is not None:
+            loss = loss + self.cfg.moe.router_aux_weight * aux
+        return loss, metrics
+
+    # ------------------------------------------------------------------
+    # Inference: block-wise Euler sampling of the next token (App. B / H)
+    # ------------------------------------------------------------------
+    def denoise_schedule(self, steps_per_block: int = 1) -> list:
+        """[(block, σ_from, σ_to)] — descending; the last step lands on 0."""
+        out = []
+        Bn = self.num_blocks
+        for b in range(Bn):
+            hi, lo = float(self.edges[b]), float(self.edges[b + 1])
+            if b == Bn - 1:
+                lo = 0.0
+            qs = np.linspace(hi, lo, steps_per_block + 1)
+            for i in range(steps_per_block):
+                out.append((b, float(qs[i]), float(qs[i + 1])))
+        return out
+
+    def _probe_block(self, params, b: int, z: jax.Array, sigma: float,
+                     cache, pos, ctx_base: LayerCtx) -> jax.Array:
+        """Run block b's units over one noisy token (decode probe: cache is
+        read, its update discarded). Returns F (B,1,d)."""
+        start, size = self.ranges[b]
+        sig = jnp.full((z.shape[0], 1, 1), sigma, jnp.float32)
+        _, _, c_in, _ = edm.preconditioning(sig, self.db.sigma_data)
+        ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos)
+        ctx.cond = self.model.cond(params, jnp.log(sig.reshape(-1)))
+        sub_cache = jax.tree_util.tree_map(
+            lambda c: c[start:start + size], cache)
+        h = (c_in * z).astype(z.dtype)
+        h, _, _ = self.model.apply_units(params, h, start, size, ctx,
+                                         sub_cache)
+        return h
+
+    def denoise_next_token(self, params, cache, pos, rng, ctx_base,
+                           steps_per_block: int = 1) -> jax.Array:
+        """Full Euler chain (σ_max → 0) for the token at ``pos``.
+        Returns the denoised embedding D (B,1,d)."""
+        batch = self.model.cache_batch(cache)
+        d = self.cfg.d_model
+        z = self.db.sigma_max * jax.random.normal(rng, (batch, 1, d))
+        for b, s_from, s_to in self.denoise_schedule(steps_per_block):
+            f = self._probe_block(params, b, z, s_from, cache, pos, ctx_base)
+            sig = jnp.asarray(s_from, jnp.float32)
+            d_hat = edm.denoise_combine(z, f.astype(jnp.float32), sig,
+                                        self.db.sigma_data)
+            z = edm.euler_step(z, d_hat, s_from, max(s_to, 0.0)) \
+                if s_to > 0 else d_hat
+            z = z.astype(f.dtype)
+        return z
+
+    def commit_token(self, params, cache, pos, token, ctx_base):
+        """Append the chosen clean token to every unit's cache.
+
+        Training-consistent: each block's clean stream starts from RAW token
+        embeddings (blocks are independent denoisers — block b never sees
+        block b-1's output), so the commit pass restarts the hidden stream at
+        every block boundary. Total cost is still L layer evaluations."""
+        ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos, cond=None)
+        emb = self.model.embed(params, token)
+        new_parts = []
+        for b in range(self.num_blocks):
+            start, size = self.ranges[b]
+            sub = jax.tree_util.tree_map(lambda c: c[start:start + size],
+                                         cache)
+            _, new_sub, _ = self.model.apply_units(params, emb, start, size,
+                                                   ctx, sub)
+            new_parts.append(new_sub)
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *new_parts)
+
+    def serve_step(self, params, cache, pos, rng, aux_inputs=None,
+                   steps_per_block: int = 1):
+        """One generation step: denoise token at ``pos`` through the blocks,
+        greedy-pick, commit to caches. This is what decode dry-run shapes
+        lower. Returns (token (B,), new_cache)."""
+        S1 = 1
+        ctx_base = self.make_ctx(params, S1, "decode", None, aux_inputs)
+        ctx_base.positions = None
+        d_final = self.denoise_next_token(params, cache, pos, rng, ctx_base,
+                                          steps_per_block)
+        logits = self.model.logits(params, d_final)
+        token = jnp.argmax(logits[:, 0], axis=-1)
+        new_cache = self.commit_token(params, cache, pos, token[:, None],
+                                      ctx_base)
+        return token, new_cache
+
+    def prefill_probe(self, params, tokens, k: int, aux_inputs=None,
+                      impl: str = "auto"):
+        """Dry-run probe: prefill over only the first k units (cost
+        extrapolation — see launch/dryrun.py)."""
+        S = tokens.shape[1]
+        ctx = self.make_ctx(params, S, "prefill", None, aux_inputs, impl=impl)
+        emb = self.model.embed(params, tokens)
+        h, sub, _ = self.model.apply_units(params, emb, 0, k, ctx)
+        return self.model.logits(params, h[:, -1:]), sub
+
+    def prefill(self, params, tokens, aux_inputs=None, impl: str = "auto"):
+        """Clean-stream prefill of all units' caches over a prompt. Each
+        block's clean stream starts from raw embeddings (see commit_token)."""
+        S = tokens.shape[1]
+        ctx = self.make_ctx(params, S, "prefill", None, aux_inputs, impl=impl)
+        emb = self.model.embed(params, tokens)
+        parts, h_last = [], None
+        for b in range(self.num_blocks):
+            start, size = self.ranges[b]
+            h_last, sub, _ = self.model.apply_units(params, emb, start, size,
+                                                    ctx)
+            parts.append(sub)
+        cache = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        logits = self.model.logits(params, h_last[:, -1:])
+        return logits, cache

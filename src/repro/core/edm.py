@@ -1,0 +1,84 @@
+"""EDM machinery (Karras et al. 2022) as used by the paper (§2.1, App. C/E).
+
+Variance-Exploding formulation: z_σ = y + σ ε. Denoiser parameterization
+
+    D_θ(z; σ) = c_skip(σ) z + c_out(σ) F_θ(c_in(σ) z; c_noise(σ))
+
+with  c_skip = σ_d²/(σ²+σ_d²),  c_out = σ σ_d/√(σ²+σ_d²),
+      c_in  = 1/√(σ²+σ_d²),    c_noise = log(σ)/4,
+and loss weighting w(σ) = (σ²+σ_d²)/(σ σ_d)².  Note w(σ)·c_out(σ)² ≡ 1, so the
+L2 objective expressed in F-space has unit weight — we exploit this for
+numerical stability (and use unweighted CE for discrete targets, where the
+same identity motivates weight 1 after the readout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DBConfig
+
+
+def weighting(sigma: jax.Array, sigma_data: float) -> jax.Array:
+    return (sigma ** 2 + sigma_data ** 2) / (sigma * sigma_data) ** 2
+
+
+def preconditioning(sigma: jax.Array, sigma_data: float):
+    """Returns (c_skip, c_out, c_in, c_noise); sigma broadcastable."""
+    s2 = sigma ** 2
+    d2 = sigma_data ** 2
+    c_skip = d2 / (s2 + d2)
+    c_out = sigma * sigma_data * jax.lax.rsqrt(s2 + d2)
+    c_in = jax.lax.rsqrt(s2 + d2)
+    c_noise = jnp.log(sigma) / 4.0
+    return c_skip, c_out, c_in, c_noise
+
+
+def sample_sigma_in_qrange(rng, shape, db: DBConfig, q_lo, q_hi) -> jax.Array:
+    """Truncated log-normal sampling via inverse CDF on uniform q in
+    [q_lo, q_hi] (q is the CDF of log σ under N(P_mean, P_std²))."""
+    u = jax.random.uniform(rng, shape, minval=q_lo, maxval=q_hi)
+    # ndtri = inverse standard normal CDF
+    from jax.scipy.special import ndtri
+    return jnp.exp(db.p_mean + db.p_std * ndtri(u))
+
+
+def add_noise(rng, y: jax.Array, sigma: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """y: (..., d); sigma broadcastable to y[..., :1]. Returns (z_sigma, eps)."""
+    eps = jax.random.normal(rng, y.shape, jnp.float32)
+    return y + sigma * eps.astype(y.dtype), eps
+
+
+def denoise_combine(z: jax.Array, f_out: jax.Array, sigma: jax.Array,
+                    sigma_data: float) -> jax.Array:
+    """D = c_skip z + c_out F. z is the UNSCALED noisy input (the block saw
+    c_in·z)."""
+    c_skip, c_out, _, _ = preconditioning(sigma, sigma_data)
+    return c_skip * z + c_out * f_out
+
+
+def edm_l2_loss(f_out: jax.Array, z: jax.Array, y: jax.Array,
+                sigma: jax.Array, sigma_data: float) -> jax.Array:
+    """w(σ)·||D − y||² rewritten in F-space with unit weight:
+    ||F − (y − c_skip z)/c_out||² (elementwise mean)."""
+    c_skip, c_out, _, _ = preconditioning(sigma, sigma_data)
+    target = (y - c_skip * z) / c_out
+    return jnp.mean(jnp.square(f_out.astype(jnp.float32)
+                               - target.astype(jnp.float32)))
+
+
+def euler_step(z: jax.Array, d_hat: jax.Array, sigma_from: jax.Array,
+               sigma_to: jax.Array) -> jax.Array:
+    """PF-ODE Euler step σ_from -> σ_to (< σ_from), paper Eq. (5).
+
+    dz/dσ = (z − D)/σ  ⇒  z' = z + (σ_to − σ_from)(z − D)/σ_from
+                           = (σ_to/σ_from) z + (1 − σ_to/σ_from) D.
+    (At σ_to = 0 this returns D exactly — the update moves TOWARD the
+    denoiser output; the transcribed Eq. (4) has the difference reversed,
+    which moves away from D and cannot reach the data manifold; we implement
+    the sign consistent with Eq. (1)+Tweedie.)"""
+    r = sigma_to / sigma_from
+    return r * z + (1.0 - r) * d_hat

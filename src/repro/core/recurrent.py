@@ -1,0 +1,165 @@
+"""Recurrent-depth (Huginn) adapter — paper §5.5 / App. E.5 / Fig. 1 right.
+
+Architecture: prelude (2 layers) → recurrent core (4 layers, applied K times)
+→ coda (2 layers). The baseline trains with K recurrences and truncated BPTT
+(last ``bptt_k`` iterations carry gradients). DiffusionBlocks reinterprets the
+recurrence as a diffusion process: the core is trained as a single-pass
+denoiser D(z_σ, x, σ) — eliminating the K-fold training compute — while
+inference keeps K iterations, now as Euler steps of the PF-ODE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DBConfig, ModelConfig
+from repro.core import edm
+from repro.core import partition as P
+from repro.models import common as C
+from repro.models.common import LayerCtx
+from repro.nn import adaln
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn.init import ParamSpec, init_params, stack_specs
+
+
+class RecurrentDepthModel:
+    def __init__(self, cfg: ModelConfig, db: DBConfig, prelude: int = 2,
+                 coda: int = 2, recurrence: int = 32, bptt_k: int = 8):
+        self.cfg, self.db = cfg, db
+        self.K, self.bptt_k = recurrence, bptt_k
+        d = cfg.d_model
+        self.spec = {
+            "embed": L.embed_spec(cfg.vocab_size, d),
+            "prelude": stack_specs(C.tlayer_spec(cfg, db=False), prelude),
+            # the core is σ-conditioned (AdaLN) — it IS the denoiser
+            "core": stack_specs(C.tlayer_spec(cfg, db=True), cfg.n_layers),
+            "adapter": L.linear_spec(2 * d, d, (None, "embed")),
+            "coda": stack_specs(C.tlayer_spec(cfg, db=False), coda),
+            "final_norm": L.norm_spec(d, cfg.norm),
+            "head": L.readout_spec(d, cfg.vocab_size),
+            "cond": adaln.sigma_embed_spec(db.cond_dim, d),
+        }
+
+    def init(self, rng, dtype=jnp.float32):
+        return init_params(rng, self.spec, dtype)
+
+    def _stack(self, layers_params, h, ctx):
+        def step(carry, p):
+            h, _, _ = C.tlayer_apply(p, carry, ctx)
+            return h, None
+        h, _ = jax.lax.scan(step, h, layers_params)
+        return h
+
+    def _embed_ctx(self, tokens):
+        S = tokens.shape[1]
+        return LayerCtx(cfg=self.cfg, mode="train", positions=jnp.arange(S))
+
+    def prelude_out(self, params, tokens):
+        ctx = self._embed_ctx(tokens)
+        table = L.l2_normalize_embeddings(params["embed"]["table"])
+        h = table[tokens]
+        return self._stack(params["prelude"], h, ctx), ctx
+
+    def core_once(self, params, e, s, ctx):
+        """One core application: s' from adapter([s, e]) through core layers."""
+        x = jnp.concatenate([s, e], axis=-1)
+        h = L.linear(params["adapter"], x)
+        return self._stack(params["core"], h, ctx)
+
+    def readout(self, params, s, ctx):
+        h = self._stack(params["coda"], s, ctx)
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm)
+        return L.readout(params["head"], h)
+
+    # ------------------------------------------------------------------
+    # Baseline: K-iteration recurrence with truncated BPTT
+    # ------------------------------------------------------------------
+    def baseline_loss(self, params, tokens, rng):
+        e, ctx = self.prelude_out(params, tokens)
+        s = self.db.sigma_data * jax.random.normal(rng, e.shape, e.dtype)
+        for k in range(self.K):
+            if k == self.K - self.bptt_k:
+                s = jax.lax.stop_gradient(s)
+            s = s + self.core_once(params, e, s, ctx)
+        logits = self.readout(params, s, ctx)
+        logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), -1)
+        ce = -jnp.take_along_axis(logp, tokens[:, 1:, None], -1)[..., 0]
+        return jnp.mean(ce), {"ce": jnp.mean(ce)}
+
+    # ------------------------------------------------------------------
+    # DiffusionBlocks: single-pass denoiser training (B=1 over the core)
+    # ------------------------------------------------------------------
+    def db_loss(self, params, tokens, rng):
+        """AR adapter with the core as one block: noisy slot i carries
+        z = emb(x_i) + σε with σ ~ p_noise over the FULL range; one forward
+        pass, no BPTT. Causal consistency via the concat mask."""
+        Bsz, S = tokens.shape
+        r_s, r_e = jax.random.split(rng)
+        q_lo = float(P.q_of_sigma(self.db.sigma_min, self.db))
+        q_hi = float(P.q_of_sigma(self.db.sigma_max, self.db))
+        sigma = edm.sample_sigma_in_qrange(r_s, (Bsz, 1, 1), self.db,
+                                           q_lo, q_hi)
+        e, _ = self.prelude_out(params, tokens)
+        table = L.l2_normalize_embeddings(params["embed"]["table"])
+        y = table[tokens]
+        z, _ = edm.add_noise(r_e, y, sigma)
+        c_skip, c_out, c_in, _ = edm.preconditioning(sigma, self.db.sigma_data)
+
+        ctx = LayerCtx(cfg=self.cfg, mode="train",
+                       positions=jnp.arange(2 * S),
+                       rope_positions=jnp.concatenate([jnp.arange(S),
+                                                       jnp.arange(S)]),
+                       mask_mod=A.db_concat_mask(S))
+        ctx.cond = adaln.sigma_embedding(params["cond"],
+                                         jnp.log(sigma.reshape(-1)) / 4.0,
+                                         self.db.cond_dim)
+        ctx.cond_mask = jnp.arange(2 * S) >= S
+        e2 = jnp.concatenate([e, e], axis=1)
+        s2 = jnp.concatenate([e.astype(z.dtype),
+                              (c_in * z).astype(z.dtype)], axis=1)
+        f = self.core_once(params, e2, s2, ctx)[:, S:]
+        d_hat = edm.denoise_combine(z, f.astype(jnp.float32), sigma,
+                                    self.db.sigma_data)
+        ctx_r = self._embed_ctx(tokens)
+        logits = self.readout(params, d_hat.astype(f.dtype), ctx_r)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ce = -jnp.take_along_axis(logp, tokens[..., None], -1)[..., 0]
+        return jnp.mean(ce), {"ce": jnp.mean(ce)}
+
+    # ------------------------------------------------------------------
+    def db_generate_logits(self, params, tokens, num_steps=None):
+        """Teacher-forced parallel sampling of all positions (evaluation):
+        K Euler steps of the core as denoiser, conditioned on the clean
+        prefix via the concat mask (positions denoise in parallel)."""
+        Bsz, S = tokens.shape
+        N = num_steps or self.K
+        sched = P.sampling_schedule(self.db, N)
+        e, _ = self.prelude_out(params, tokens)
+        rng = jax.random.PRNGKey(0)
+        z = self.db.sigma_max * jax.random.normal(rng, e.shape, jnp.float32)
+        ctx = LayerCtx(cfg=self.cfg, mode="train",
+                       positions=jnp.arange(2 * S),
+                       rope_positions=jnp.concatenate([jnp.arange(S),
+                                                       jnp.arange(S)]),
+                       mask_mod=A.db_concat_mask(S))
+        ctx.cond_mask = jnp.arange(2 * S) >= S
+        e2 = jnp.concatenate([e, e], axis=1)
+        for i in range(N):
+            s_from, s_to = float(sched[i]), float(sched[i + 1])
+            sig = jnp.full((Bsz, 1, 1), s_from)
+            _, _, c_in, _ = edm.preconditioning(sig, self.db.sigma_data)
+            ctx.cond = adaln.sigma_embedding(
+                params["cond"], jnp.log(sig.reshape(-1)) / 4.0,
+                self.db.cond_dim)
+            s2 = jnp.concatenate([e.astype(e.dtype),
+                                  (c_in * z).astype(e.dtype)], axis=1)
+            f = self.core_once(params, e2, s2, ctx)[:, S:]
+            d_hat = edm.denoise_combine(z, f.astype(jnp.float32), sig,
+                                        self.db.sigma_data)
+            z = edm.euler_step(z, d_hat, s_from, s_to) if s_to > 0 else d_hat
+        ctx_r = self._embed_ctx(tokens)
+        return self.readout(params, z.astype(e.dtype), ctx_r)

@@ -1,0 +1,163 @@
+"""Train-step builders.
+
+``make_db_train_step(dbm, b, …)`` returns a jitted step that computes the
+paper's block-local loss (Eq. 6) and takes gradients ONLY for block b's unit
+slice plus the shared periphery (embeddings / readout / σ-conditioning /
+shared-attention weights in hybrid / encoder in audio). Activations and
+optimizer state exist only for those parameters — the B× memory reduction is
+structural, not simulated.
+
+``make_e2e_train_step`` is the end-to-end backprop baseline.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core.blocks import DiffusionBlocksModel
+from repro.optim import adamw, apply_updates, warmup_cosine
+
+STACK_KEYS = ("layers", "units")
+
+
+def extract_block_view(params: Dict, start: int, size: int) -> Dict:
+    """Sub-tree containing ONLY block b's unit slice + shared periphery.
+    The view is itself a valid params dict whose stacks have length ``size``
+    (apply with unit_range=(0, size))."""
+    view = {}
+    for k, v in params.items():
+        if k in STACK_KEYS:
+            view[k] = jax.tree_util.tree_map(
+                lambda p: jax.lax.slice_in_dim(p, start, start + size, axis=0),
+                v)
+        else:
+            view[k] = v
+    return view
+
+
+def write_back_block_view(params: Dict, view: Dict, start: int) -> Dict:
+    out = {}
+    for k, v in params.items():
+        if k in STACK_KEYS:
+            out[k] = jax.tree_util.tree_map(
+                lambda whole, blk: jax.lax.dynamic_update_slice_in_dim(
+                    whole, blk.astype(whole.dtype), start, axis=0),
+                v, view[k])
+        else:
+            out[k] = view[k]
+    return out
+
+
+def make_optimizer(tcfg: TrainConfig):
+    lr = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.steps)
+    return adamw(lr, tcfg.b1, tcfg.b2, tcfg.eps,
+                 weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+
+
+def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
+                       impl: str = "auto", jit: bool = True,
+                       donate: bool = False, unit_range=None):
+    """Returns (init_opt_state_fn, step_fn).
+
+    step_fn(params, opt_state_b, tokens, rng, aux_inputs=None)
+        -> (params, opt_state_b, loss, metrics)
+
+    ``unit_range`` overrides the block's unit slice (dry-run probes).
+    """
+    start, size = unit_range if unit_range is not None else dbm.ranges[b]
+    opt_init, opt_update = make_optimizer(tcfg)
+
+    def init_opt(params):
+        return opt_init(extract_block_view(params, start, size))
+
+    def step(params, opt_state, tokens, rng, aux_inputs=None):
+        view = extract_block_view(params, start, size)
+
+        def loss_fn(v):
+            return dbm.block_loss(v, b, tokens, rng, aux_inputs=aux_inputs,
+                                  impl=impl, unit_range=(0, size))
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(view)
+        updates, opt_state, om = opt_update(grads, opt_state, view)
+        view = apply_updates(view, updates)
+        params = write_back_block_view(params, view, start)
+        metrics = {**metrics, **om}
+        return params, opt_state, loss, metrics
+
+    if jit:
+        step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
+    return init_opt, step
+
+
+def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,
+                        impl: str = "auto", jit: bool = True,
+                        remat: bool = False):
+    opt_init, opt_update = make_optimizer(tcfg)
+
+    def step(params, opt_state, tokens, rng, aux_inputs=None):
+        def loss_fn(p):
+            return dbm.e2e_loss(p, tokens, rng, aux_inputs=aux_inputs,
+                                impl=impl)
+
+        if remat:
+            loss_fn = jax.checkpoint(loss_fn)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, opt_state, om = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, {**metrics, **om}
+
+    if jit:
+        step = jax.jit(step)
+    return opt_init, step
+
+
+def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
+             rng, params=None, log=print, aux_fn=None):
+    """Block-cycling single-host training driver (paper Fig. 3 right):
+    each iteration samples a block uniformly and trains only it."""
+    rng, r0 = jax.random.split(rng)
+    if params is None:
+        params = dbm.init(r0)
+    steppers, opt_states = [], []
+    for b in range(dbm.num_blocks):
+        init_opt, step = make_db_train_step(dbm, b, tcfg)
+        steppers.append(step)
+        opt_states.append(init_opt(params))
+    history = []
+    for it in range(tcfg.steps):
+        tokens = next(data_iter)
+        aux = aux_fn(tokens) if aux_fn else None
+        rng, rb, rs = jax.random.split(rng, 3)
+        b = int(jax.random.randint(rb, (), 0, dbm.num_blocks))
+        params, opt_states[b], loss, m = steppers[b](
+            params, opt_states[b], tokens, rs, aux)
+        history.append((it, b, float(loss)))
+        if tcfg.log_every and it % tcfg.log_every == 0:
+            log(f"[db] it={it} block={b} loss={float(loss):.4f} "
+                f"gn={float(m['grad_norm']):.2f}")
+    return params, history
+
+
+def train_e2e(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
+              rng, params=None, log=print, aux_fn=None):
+    rng, r0 = jax.random.split(rng)
+    if params is None:
+        params = dbm.init(r0)
+    init_opt, step = make_e2e_train_step(dbm, tcfg)
+    opt_state = init_opt(params)
+    history = []
+    for it in range(tcfg.steps):
+        tokens = next(data_iter)
+        aux = aux_fn(tokens) if aux_fn else None
+        rng, rs = jax.random.split(rng)
+        params, opt_state, loss, m = step(params, opt_state, tokens, rs, aux)
+        history.append((it, -1, float(loss)))
+        if tcfg.log_every and it % tcfg.log_every == 0:
+            log(f"[e2e] it={it} loss={float(loss):.4f}")
+    return params, history

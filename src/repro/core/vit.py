@@ -1,0 +1,168 @@
+"""ViT classification adapter (paper §5.1 / App. B top-left, App. E.1).
+
+Input sequence = [CLS, patch embeddings x, noisy label embedding z_σ].
+Each block denoises the label token within its noise range; CE is taken
+through the classification head on the denoised label embedding (Eq. 6 with
+CE inner loss). Inference runs the Euler chain over blocks and classifies the
+final z. The end-to-end baseline is a standard ViT ([CLS] readout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DBConfig, ModelConfig
+from repro.core import edm
+from repro.core import partition as P
+from repro.models import common as C
+from repro.models.common import LayerCtx
+from repro.nn import adaln
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn.init import ParamSpec, init_params, stack_specs
+
+
+class ViTDiffusionBlocks:
+    def __init__(self, cfg: ModelConfig, db: DBConfig, image_size: int = 32,
+                 patch: int = 4, channels: int = 3,
+                 distribution: Optional[Sequence[int]] = None):
+        self.cfg, self.db = cfg, db
+        self.patch, self.channels, self.image_size = patch, channels, image_size
+        self.n_patches = (image_size // patch) ** 2
+        self.num_classes = cfg.vocab_size
+        self.ranges = P.unit_ranges(cfg.n_layers, db.num_blocks, distribution)
+        self.edges = P.sigma_edges(db)
+        d = cfg.d_model
+        self.spec = {
+            "patch": L.linear_spec(patch * patch * channels, d,
+                                   (None, "embed")),
+            "cls": ParamSpec((1, d), (None, "embed"), "embed", 0.02),
+            "pos": ParamSpec((1 + self.n_patches + 1, d), (None, "embed"),
+                             "embed", 0.02),
+            "label_emb": ParamSpec((self.num_classes, d), ("vocab", "embed"),
+                                   "embed", 1.0),
+            "layers": stack_specs(C.tlayer_spec(cfg, db=True), cfg.n_layers),
+            "final_norm": L.norm_spec(d, cfg.norm),
+            "head": L.readout_spec(d, self.num_classes),
+            "cond": adaln.sigma_embed_spec(db.cond_dim, d),
+        }
+
+    def init(self, rng, dtype=jnp.float32):
+        return init_params(rng, self.spec, dtype)
+
+    # ------------------------------------------------------------------
+    def patchify(self, images: jax.Array) -> jax.Array:
+        """(B, H, W, C) -> (B, n_patches, p*p*C)."""
+        B, H, W, Ch = images.shape
+        p = self.patch
+        x = images.reshape(B, H // p, p, W // p, p, Ch)
+        return x.transpose(0, 1, 3, 2, 4, 5).reshape(B, self.n_patches,
+                                                     p * p * Ch)
+
+    def tokens(self, params, images, z_label):
+        B = images.shape[0]
+        patches = L.linear(params["patch"], self.patchify(images))
+        cls = jnp.broadcast_to(params["cls"], (B, 1, self.cfg.d_model))
+        seq = jnp.concatenate(
+            [cls, patches, z_label.astype(patches.dtype)], axis=1)
+        return seq + params["pos"][None].astype(seq.dtype)
+
+    def label_table(self, params):
+        return L.l2_normalize_embeddings(params["label_emb"])
+
+    def _run(self, params, seq, start, size, cond):
+        ctx = LayerCtx(cfg=self.cfg, mode="train",
+                       positions=jnp.arange(seq.shape[1]),
+                       mask_mod=A.bidirectional_mask, cond=cond)
+        if cond is not None:   # modulate only the label token
+            cm = jnp.zeros((seq.shape[1],), bool).at[-1].set(True)
+            ctx.cond_mask = cm
+        lp = jax.tree_util.tree_map(lambda p: p[start:start + size],
+                                    params["layers"])
+
+        def step(h, p):
+            h, _, _ = C.tlayer_apply(p, h, ctx)
+            return h, None
+
+        h, _ = jax.lax.scan(step, seq, lp)
+        return h
+
+    # ------------------------------------------------------------------
+    def block_loss(self, params, b, images, labels, rng,
+                   unit_range=None) -> Tuple[jax.Array, dict]:
+        start, size = unit_range or self.ranges[b]
+        Bsz = images.shape[0]
+        r_s, r_e = jax.random.split(rng)
+        q_lo, q_hi = P.block_qrange(self.db, b)
+        sigma = edm.sample_sigma_in_qrange(r_s, (Bsz, 1, 1), self.db,
+                                           q_lo, q_hi)
+        y_emb = self.label_table(params)[labels][:, None]          # (B,1,d)
+        z, _ = edm.add_noise(r_e, y_emb, sigma)
+        c_skip, c_out, c_in, _ = edm.preconditioning(sigma, self.db.sigma_data)
+        cond = adaln.sigma_embedding(params["cond"],
+                                     jnp.log(sigma.reshape(-1)) / 4.0,
+                                     self.db.cond_dim)
+        seq = self.tokens(params, images, c_in * z)
+        h = self._run(params, seq, start, size, cond)
+        f_out = h[:, -1:]
+        d_hat = edm.denoise_combine(z, f_out.astype(jnp.float32), sigma,
+                                    self.db.sigma_data)
+        d_hat = L.apply_norm(params["final_norm"], d_hat.astype(h.dtype),
+                             self.cfg.norm)
+        logits = L.readout(params["head"], d_hat[:, 0])
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ce = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+        return jnp.mean(ce), {"ce": jnp.mean(ce)}
+
+    def e2e_loss(self, params, images, labels, rng=None):
+        """Standard ViT baseline: [CLS, patches] through all layers, head on
+        CLS. (The label slot is fed zeros, conditioning off.)"""
+        Bsz = images.shape[0]
+        z0 = jnp.zeros((Bsz, 1, self.cfg.d_model))
+        seq = self.tokens(params, images, z0)
+        h = self._run(params, seq, 0, self.cfg.n_layers, cond=None)
+        cls = L.apply_norm(params["final_norm"], h[:, 0], self.cfg.norm)
+        logits = L.readout(params["head"], cls)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+        ce = -jnp.take_along_axis(logp, labels[:, None], -1)[:, 0]
+        return jnp.mean(ce), {"ce": jnp.mean(ce)}
+
+    # ------------------------------------------------------------------
+    def predict(self, params, images, rng, num_steps: Optional[int] = None):
+        """Euler chain σ_max→0 over the blocks; classify the final z."""
+        steps = num_steps or max(self.db.num_blocks,
+                                 self.cfg.n_layers // self.db.num_blocks)
+        sched = P.sampling_schedule(self.db, steps)
+        Bsz = images.shape[0]
+        z = self.db.sigma_max * jax.random.normal(
+            rng, (Bsz, 1, self.cfg.d_model))
+        for i in range(len(sched) - 1):
+            s_from, s_to = float(sched[i]), float(sched[i + 1])
+            b = P.block_of_sigma(self.db, s_from)
+            start, size = self.ranges[b]
+            sig = jnp.full((Bsz, 1, 1), s_from)
+            _, _, c_in, _ = edm.preconditioning(sig, self.db.sigma_data)
+            cond = adaln.sigma_embedding(params["cond"],
+                                         jnp.log(sig.reshape(-1)) / 4.0,
+                                         self.db.cond_dim)
+            seq = self.tokens(params, images, c_in * z)
+            h = self._run(params, seq, start, size, cond)
+            d_hat = edm.denoise_combine(z, h[:, -1:].astype(jnp.float32),
+                                        sig, self.db.sigma_data)
+            z = edm.euler_step(z, d_hat, s_from, s_to) if s_to > 0 else d_hat
+        zf = L.apply_norm(params["final_norm"], z.astype(h.dtype),
+                          self.cfg.norm)
+        logits = L.readout(params["head"], zf[:, 0])
+        return jnp.argmax(logits, -1), logits
+
+    def predict_e2e(self, params, images):
+        Bsz = images.shape[0]
+        z0 = jnp.zeros((Bsz, 1, self.cfg.d_model))
+        seq = self.tokens(params, images, z0)
+        h = self._run(params, seq, 0, self.cfg.n_layers, cond=None)
+        cls = L.apply_norm(params["final_norm"], h[:, 0], self.cfg.norm)
+        logits = L.readout(params["head"], cls)
+        return jnp.argmax(logits, -1), logits

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (GaussianMixtureImages, MarkovLM,
+                                  MixtureImagesContinuous, arithmetic_stream)
+from repro.data.pipeline import HostDataLoader, repeat_batches
+from repro.data.tokenizer import ByteTokenizer, Text8Tokenizer

@@ -1,0 +1,76 @@
+"""Fused EDM denoising loss kernel (paper Eq. 2/6, F-space form).
+
+Computes per-tile partial sums of ||F − (y − c_skip z)/c_out||² without
+materializing the target tensor in HBM: each (block_rows × d) tile of F, z, y
+is read once, the target is formed in VMEM, squared error reduced on the VPU,
+and one partial scalar per tile is written out. The caller sums the partials
+(a (grid,) vector) — O(B·S/block_rows) bytes instead of O(B·S·d).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+
+
+def _loss_kernel(f_ref, z_ref, y_ref, cs_ref, co_ref, o_ref, *, rows: int,
+                 block_rows: int):
+    i = pl.program_id(1)
+    f = f_ref[0].astype(jnp.float32)
+    z = z_ref[0].astype(jnp.float32)
+    y = y_ref[0].astype(jnp.float32)
+    c_skip = cs_ref[0, 0]
+    c_out = co_ref[0, 0]
+    target = (y - c_skip * z) / c_out
+    err = jnp.square(f - target)
+    # zero padded rows
+    ridx = i * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, err.shape, 0)
+    err = jnp.where(ridx < rows, err, 0.0)
+    o_ref[0, 0] = jnp.sum(err)
+
+
+def edm_loss_partials(f: jax.Array, z: jax.Array, y: jax.Array,
+                      sigma: jax.Array, sigma_data: float,
+                      block_rows: int = BLOCK_ROWS,
+                      interpret: bool = False) -> jax.Array:
+    """f/z/y: (B, S, d); sigma: (B,). Returns partial sums (B, n_tiles);
+    loss = sum(partials) / (B*S*d)."""
+    B, S, d = f.shape
+    s2 = sigma.astype(jnp.float32) ** 2
+    d2 = sigma_data ** 2
+    c_skip = (d2 / (s2 + d2)).reshape(B, 1)
+    c_out = (sigma * sigma_data * jax.lax.rsqrt(s2 + d2)).reshape(B, 1)
+    block_rows = min(block_rows, S)
+    pad = (-S) % block_rows
+    if pad:
+        f = jnp.pad(f, ((0, 0), (0, pad), (0, 0)))
+        z = jnp.pad(z, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad), (0, 0)))
+    ns = f.shape[1] // block_rows
+    out = pl.pallas_call(
+        functools.partial(_loss_kernel, rows=S, block_rows=block_rows),
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_rows, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_rows, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_rows, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, i: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((B, ns), jnp.float32),
+        interpret=interpret,
+    )(f, z, y, c_skip, c_out)
+    return out
+
+
+def edm_loss(f, z, y, sigma, sigma_data: float, interpret: bool = False):
+    B, S, d = f.shape
+    partials = edm_loss_partials(f, z, y, sigma, sigma_data,
+                                 interpret=interpret)
+    return jnp.sum(partials) / (B * S * d)

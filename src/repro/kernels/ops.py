@@ -1,0 +1,58 @@
+"""Jitted kernel wrappers. On the CPU dev container the Pallas kernels run in
+interpret mode (the kernel body executes as JAX ops — correctness path); on a
+TPU backend they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import edm_loss as _edm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import fused_adaln as _ad
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention_hmajor(q, k, v, causal: bool = True,
+                           window: Optional[int] = None):
+    """(B, H, S, hd) layout."""
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, mask_mod=None, qpos=None, kpos=None,
+                    causal: bool = True, window: Optional[int] = None):
+    """(B, S, H, hd) layout adapter used by repro.nn.attention."""
+    qh = q.transpose(0, 2, 1, 3)
+    kh = k.transpose(0, 2, 1, 3)
+    vh = v.transpose(0, 2, 1, 3)
+    out = flash_attention_hmajor(qh, kh, vh, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+@jax.jit
+def ln_modulate(x, scale, shift):
+    return _ad.fused_ln_modulate(x, scale, shift, interpret=_interpret())
+
+
+@jax.jit
+def gate_residual(res, branch, gate):
+    return _ad.fused_gate_residual(res, branch, gate, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sigma_data",))
+def euler_update(z, f, sigma, sigma_to, sigma_data: float = 0.5):
+    return _ad.fused_euler(z, f, sigma, sigma_to, sigma_data,
+                           interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("sigma_data",))
+def edm_loss(f, z, y, sigma, sigma_data: float = 0.5):
+    return _edm.edm_loss(f, z, y, sigma, sigma_data, interpret=_interpret())

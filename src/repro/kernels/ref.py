@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd)."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, kf) / (hd ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def ln_modulate_reference(x, scale, shift, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + scale[:, None].astype(jnp.float32)) \
+        + shift[:, None].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gate_residual_reference(res, branch, gate):
+    return (res.astype(jnp.float32) + branch.astype(jnp.float32)
+            * (1.0 + gate[:, None].astype(jnp.float32))).astype(res.dtype)
+
+
+def euler_reference(z, f, sigma, sigma_to, sigma_data: float):
+    s2 = sigma.astype(jnp.float32) ** 2
+    d2 = sigma_data ** 2
+    c_skip = d2 / (s2 + d2)
+    c_out = sigma * sigma_data * jax.lax.rsqrt(s2 + d2)
+    r = sigma_to / sigma
+    a = (r + (1 - r) * c_skip)[:, None, None]
+    b = ((1 - r) * c_out)[:, None, None]
+    return (a * z.astype(jnp.float32) + b * f.astype(jnp.float32)
+            ).astype(z.dtype)
+
+
+def edm_loss_reference(f, z, y, sigma, sigma_data: float):
+    s2 = sigma.astype(jnp.float32) ** 2
+    d2 = sigma_data ** 2
+    c_skip = (d2 / (s2 + d2))[:, None, None]
+    c_out = (sigma * sigma_data * jax.lax.rsqrt(s2 + d2))[:, None, None]
+    target = (y.astype(jnp.float32) - c_skip * z.astype(jnp.float32)) / c_out
+    return jnp.mean(jnp.square(f.astype(jnp.float32) - target))

@@ -1,0 +1,394 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh with 512 placeholder host devices, and extract the
+roofline terms from the compiled artifact.
+
+MUST set XLA_FLAGS before any other import — jax locks the device count on
+first init. Do NOT set this anywhere global (tests/benches must see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+      --shape train_4k [--multi-pod] [--mode db|e2e] [--out DIR]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import os
+
+if "--real-devices" not in __import__("sys").argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+# true trip-count FLOPs in cost analysis + per-layer activation remat
+os.environ.setdefault("REPRO_SCAN_UNROLL", "1")
+os.environ.setdefault("REPRO_LAYER_REMAT", "1")
+os.environ.setdefault("REPRO_ATTN_CHUNK", "4096")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                                    # noqa: E402
+from repro.configs import DBConfig, INPUT_SHAPES, get_config, get_shape  # noqa: E402
+from repro.configs.base import AUDIO, TrainConfig, VLM       # noqa: E402
+from repro.core import DiffusionBlocksModel                  # noqa: E402
+from repro.core.training import (extract_block_view,         # noqa: E402
+                                 make_db_train_step, make_e2e_train_step)
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.optim import adamw                                # noqa: E402
+from repro.roofline import analysis as RA                    # noqa: E402
+from repro.sharding import (cache_sharding, param_shardings,  # noqa: E402
+                            replicated, tokens_sharding)
+from repro.sharding.rules import zero1_shardings  # noqa: E402
+
+DTYPE = jnp.bfloat16
+
+
+def input_specs(cfg, shape, dtype=DTYPE):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == VLM:
+        specs["image_embs"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.family == AUDIO:
+        specs["audio_embs"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_audio_frames, cfg.d_model), dtype)
+    return specs
+
+
+def aux_specs(cfg, batch, dtype=DTYPE):
+    aux = {}
+    if cfg.family == VLM:
+        aux["image_embs"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    if cfg.family == AUDIO:
+        aux["audio_embs"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    return aux or None
+
+
+def aux_shardings(cfg, mesh, batch):
+    aux = aux_specs(cfg, batch)
+    if aux is None:
+        return None
+    return {k: tokens_sharding(mesh, batch) for k in aux}
+
+
+def set_unroll(on: bool) -> None:
+    os.environ["REPRO_SCAN_UNROLL"] = "1" if on else "0"
+
+
+# scans with more units than this use the 1-vs-2-unit probe extrapolation
+# (XLA counts a rolled loop body once; fully unrolling 64-layer MoE stacks is
+# compile-prohibitive on this 1-core container — see EXPERIMENTS.md §Dry-run)
+PROBE_THRESHOLD = 2
+
+
+def lower_train(dbm, shape, mesh, mode: str, block: int = 0,
+                unit_range=None):
+    cfg = dbm.cfg
+    tcfg = TrainConfig(steps=1000)
+    model = dbm.model
+    abs_params = model.abstract_params(DTYPE)
+    axes = model.axes()
+    p_shard = param_shardings(axes, mesh, abs_params)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                  jnp.int32)
+    t_shard = tokens_sharding(mesh, shape.global_batch)
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    aux = aux_specs(cfg, shape.global_batch)
+    a_shard = aux_shardings(cfg, mesh, shape.global_batch)
+
+    if mode == "db":
+        init_opt, step = make_db_train_step(dbm, block, tcfg, jit=False,
+                                            impl="chunked",
+                                            unit_range=unit_range)
+        opt_abs = jax.eval_shape(init_opt, abs_params)
+        start, size = (unit_range if unit_range is not None
+                       else dbm.ranges[block])
+        view_axes = {k: axes[k] for k in axes}
+        view_abs = jax.eval_shape(
+            lambda p: extract_block_view(p, start, size), abs_params)
+        if os.environ.get("REPRO_ZERO1", "0") == "1":   # §Perf P1
+            view_shard = zero1_shardings(view_axes, mesh, view_abs)
+        else:
+            view_shard = param_shardings(view_axes, mesh, view_abs)
+        opt_shard = type(opt_abs)(replicated(mesh), view_shard, view_shard)
+    else:
+        init_opt, step = make_e2e_train_step(dbm, tcfg, jit=False,
+                                             impl="chunked")
+        opt_abs = jax.eval_shape(init_opt, abs_params)
+        opt_shard = type(opt_abs)(replicated(mesh), p_shard, p_shard)
+
+    fn = jax.jit(step, in_shardings=(p_shard, opt_shard, t_shard,
+                                     replicated(mesh),
+                                     a_shard))
+    with mesh:
+        lowered = fn.lower(abs_params, opt_abs, tokens, rng, aux)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def lower_prefill(dbm, shape, mesh, probe_k=None):
+    cfg = dbm.cfg
+    model = dbm.model
+    abs_params = model.abstract_params(DTYPE)
+    p_shard = param_shardings(model.axes(), mesh, abs_params)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
+                                  jnp.int32)
+    t_shard = tokens_sharding(mesh, shape.global_batch)
+    aux = aux_specs(cfg, shape.global_batch)
+    a_shard = aux_shardings(cfg, mesh, shape.global_batch)
+
+    if probe_k is not None:
+        def prefill(params, tokens, aux):
+            return dbm.prefill_probe(params, tokens, probe_k,
+                                     aux_inputs=aux, impl="chunked")
+    else:
+        def prefill(params, tokens, aux):
+            return dbm.prefill(params, tokens, aux_inputs=aux,
+                               impl="chunked")
+
+    fn = jax.jit(prefill, in_shardings=(p_shard, t_shard, a_shard))
+    with mesh:
+        lowered = fn.lower(abs_params, tokens, aux)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def _probe_dbm(dbm, k: int):
+    """A DiffusionBlocksModel view whose single block covers units [0, k)."""
+    import copy
+    d2 = copy.copy(dbm)
+    d2.ranges = [(0, k)]
+    import dataclasses as _dc
+    d2.db = _dc.replace(dbm.db, num_blocks=1)
+    return d2
+
+
+def lower_decode(dbm, shape, mesh):
+    cfg = dbm.cfg
+    model = dbm.model
+    abs_params = model.abstract_params(DTYPE)
+    p_shard = param_shardings(model.axes(), mesh, abs_params)
+    B = shape.global_batch
+    cache_abs = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len, DTYPE))
+    c_shard = cache_sharding(mesh, cache_abs, B)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    aux = aux_specs(cfg, B)
+    a_shard = aux_shardings(cfg, mesh, B)
+
+    def serve(params, cache, pos, rng, aux):
+        return dbm.serve_step(params, cache, pos, rng, aux_inputs=aux)
+
+    fn = jax.jit(serve, in_shardings=(p_shard, c_shard, replicated(mesh),
+                                      replicated(mesh), a_shard))
+    with mesh:
+        lowered = fn.lower(abs_params, cache_abs, pos, rng, aux)
+        compiled = lowered.compile()
+    return lowered, compiled
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, mode: str,
+            out_dir: str, num_blocks: int = 4, verbose: bool = True,
+            mesh_shape=None, reduce_cfg: bool = False, shape_override=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name) if shape_override is None else shape_override
+    if reduce_cfg:
+        cfg = configs.reduced(cfg)
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: unbounded 500k KV cache "
+                          "(see DESIGN.md shape applicability)"}
+    if mesh_shape is not None:
+        axes = ("pod", "data", "model") if len(mesh_shape) == 3 else \
+            ("data", "model")
+        mesh = jax.make_mesh(tuple(mesh_shape), axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    # at least 1 unit per block
+    n_units = DiffusionBlocksModel(cfg, DBConfig(num_blocks=1)).model.n_units
+    db = DBConfig(num_blocks=min(num_blocks, n_units), overlap_gamma=0.1)
+    dbm = DiffusionBlocksModel(cfg, db)
+
+    mf = RA.model_flops(cfg, shape, db_concat=(shape.kind == "train"
+                                               and mode == "db"))
+    if shape.kind == "train" and mode == "db":
+        mf = mf / db.num_blocks        # block step: fwd+bwd of 1/B of stack
+    chips = mesh.devices.size
+    n_units = dbm.model.n_units
+    block_size = dbm.ranges[0][1]
+    t0 = time.time()
+
+    no_probes = os.environ.get("REPRO_NO_PROBES", "0") == "1"
+    if no_probes:
+        # compile-proof only (multi-pod pass): rolled scans, fast compile;
+        # roofline terms for the table come from the single-pod probed runs.
+        set_unroll(False)
+        if shape.kind == "train":
+            lowered, compiled = lower_train(dbm, shape, mesh, mode)
+        elif shape.kind == "prefill":
+            lowered, compiled = lower_prefill(dbm, shape, mesh)
+        else:
+            lowered, compiled = lower_decode(dbm, shape, mesh)
+        rec = RA.analyze(compiled, model_flops_per_step=mf, chips=chips)
+        rec["rolled_only"] = True
+    elif shape.kind == "train":
+        scope = block_size if mode == "db" else n_units
+        if scope <= PROBE_THRESHOLD:
+            set_unroll(True)
+            lowered, compiled = lower_train(dbm, shape, mesh, mode)
+            rec = RA.analyze(compiled, model_flops_per_step=mf, chips=chips)
+        else:
+            set_unroll(False)   # full-size compile: memory proof
+            lowered, compiled = lower_train(dbm, shape, mesh, mode)
+            mem_rec = RA.analyze(compiled, chips=chips)
+            set_unroll(True)    # 1- and 2-unit probes: exact costs
+            _, c1 = lower_train(dbm, shape, mesh, mode, unit_range=(0, 1))
+            _, c2 = lower_train(dbm, shape, mesh, mode, unit_range=(0, 2))
+            r1 = RA.analyze(c1, chips=chips)
+            r2 = RA.analyze(c2, model_flops_per_step=mf, chips=chips)
+            rec = RA.extrapolate(r1, r2, scope, mem_rec)
+    elif shape.kind == "prefill":
+        if n_units <= PROBE_THRESHOLD:
+            set_unroll(True)
+            lowered, compiled = lower_prefill(dbm, shape, mesh)
+            rec = RA.analyze(compiled, model_flops_per_step=mf, chips=chips)
+        else:
+            set_unroll(False)
+            lowered, compiled = lower_prefill(dbm, shape, mesh)
+            mem_rec = RA.analyze(compiled, chips=chips)
+            set_unroll(True)
+            _, c1 = lower_prefill(dbm, shape, mesh, probe_k=1)
+            _, c2 = lower_prefill(dbm, shape, mesh, probe_k=2)
+            r1 = RA.analyze(c1, chips=chips)
+            r2 = RA.analyze(c2, model_flops_per_step=mf, chips=chips)
+            rec = RA.extrapolate(r1, r2, n_units, mem_rec)
+    else:
+        if n_units <= PROBE_THRESHOLD:
+            set_unroll(True)
+            lowered, compiled = lower_decode(dbm, shape, mesh)
+            rec = RA.analyze(compiled, model_flops_per_step=mf, chips=chips)
+        else:
+            set_unroll(False)
+            lowered, compiled = lower_decode(dbm, shape, mesh)
+            mem_rec = RA.analyze(compiled, chips=chips)
+            set_unroll(True)
+            _, c1 = lower_decode(_probe_dbm(dbm, 1), shape, mesh)
+            _, c2 = lower_decode(_probe_dbm(dbm, 2), shape, mesh)
+            r1 = RA.analyze(c1, chips=chips)
+            r2 = RA.analyze(c2, model_flops_per_step=mf, chips=chips)
+            rec = RA.extrapolate(r1, r2, n_units, mem_rec)
+    compile_s = time.time() - t0
+    # analytic per-chip memory lower bound (the CPU lowering is unfused, so
+    # memory_analysis().temp_size overestimates what a TPU build needs; this
+    # bound = sharded params + block-view grads/opt (f32) + remat-resident
+    # activation streams). See EXPERIMENTS.md §Dry-run methodology.
+    model_ax = dict(mesh.shape).get("model", 1)
+    data_ax = max(dict(mesh.shape).get("data", 1)
+                  * dict(mesh.shape).get("pod", 1), 1)
+    p_bytes = sum(int(np.prod(l.shape)) * 2 for l in
+                  jax.tree_util.tree_leaves(dbm.model.abstract_params()))
+    view = jax.eval_shape(lambda p: extract_block_view(
+        p, *dbm.ranges[0]), dbm.model.abstract_params())
+    v_bytes = sum(int(np.prod(l.shape)) * 2 for l in
+                  jax.tree_util.tree_leaves(view))
+    b_local = max(shape.global_batch // data_ax, 1)
+    s_eff = (2 * shape.seq_len if (shape.kind == "train" and mode == "db")
+             else (shape.seq_len if shape.kind != "decode" else 1))
+    stream = b_local * s_eff * cfg.d_model * 2
+    n_resident = (dbm.ranges[0][1] if shape.kind == "train" else 4)
+    analytic = {
+        "params_bytes": p_bytes // model_ax,
+        "grads_opt_bytes": (2 + 4 + 8) * v_bytes // 2 // model_ax
+        if shape.kind == "train" else 0,
+        "activation_bytes": stream * (n_resident + 4),
+    }
+    analytic["total"] = sum(analytic.values())
+    rec["analytic_min_bytes_per_chip"] = analytic
+    rec["analytic_fits_hbm"] = analytic["total"] <= 16e9
+
+    rec.update({"arch": arch, "shape": shape_name, "mode": mode,
+                "multi_pod": multi_pod, "compile_s": compile_s,
+                "num_blocks": db.num_blocks, "skipped": False})
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"== {arch} × {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} mode={mode}")
+        print(f"   memory_analysis: {ma}")
+        print("   " + RA.format_row(f"{arch}/{shape_name}", rec))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{'mp' if multi_pod else 'sp'}_{mode}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mode", default="db", choices=["db", "e2e"])
+    ap.add_argument("--blocks", type=int, default=4)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--real-devices", action="store_true",
+                    help="use the actual device count (tests)")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh shape, e.g. 4x2 (tests)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced arch config (tests)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    args = ap.parse_args()
+    mesh_shape = (tuple(int(x) for x in args.mesh.split("x"))
+                  if args.mesh else None)
+    shape_override = None
+    if args.batch or args.seq:
+        import dataclasses as _dc
+        base = get_shape(args.shape)
+        shape_override = _dc.replace(base,
+                                     global_batch=args.batch or base.global_batch,
+                                     seq_len=args.seq or base.seq_len)
+
+    pairs = []
+    if args.all:
+        order = sorted(configs.list_archs(),
+                       key=lambda a: get_config(a).param_count())
+        for a in order:                       # cheapest archs first
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in pairs:
+        try:
+            rec = run_one(arch, shape, args.multi_pod, args.mode, args.out,
+                          args.blocks, mesh_shape=mesh_shape,
+                          reduce_cfg=args.reduced,
+                          shape_override=shape_override)
+            if rec.get("skipped"):
+                print(f"-- skipped {arch} × {shape}: {rec['reason']}")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape, repr(e)))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single-pod TPU v5e: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod: 2 pods × 256 = 512 chips, axes ("pod", "data", "model"). The pod
+axis carries either extra data parallelism (default) or DiffusionBlocks
+BLOCK-parallelism (blocks are gradient-isolated, so the pod axis then needs
+ZERO optimizer/gradient collectives — the paper's embarrassing parallelism
+realized as a mesh axis; see launch/train.py --block-parallel).
+
+``make_production_mesh`` is a function (not a module constant) so importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / CPU dev)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

@@ -1,0 +1,73 @@
+"""Batched block-wise serving driver: prefill a batch of prompts, then
+generate with the DiffusionBlocks sampler (one Euler step per block per token
+by default — compute-equivalent to a standard forward pass, paper App. H).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DBConfig, get_config, reduced
+from repro.core import DiffusionBlocksModel
+from repro.checkpoint import load_blocks
+from repro.data import MarkovLM
+
+
+def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
+             steps_per_block: int = 1, rng=None):
+    """prompts: (B, S0) -> (B, S0+max_new)."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    B, S0 = prompts.shape
+    cache = dbm.model.init_cache(B, S0 + max_new, jnp.float32)
+    ctx0 = dbm.make_ctx(params, 1, "decode")
+    ctx0.positions = None
+    commit = jax.jit(lambda p, c, pos, tok: dbm.commit_token(
+        p, c, pos, tok, ctx0))
+    serve = jax.jit(lambda p, c, pos, r: dbm.serve_step(
+        p, c, pos, r, steps_per_block=steps_per_block))
+    for t in range(S0):
+        cache = commit(params, cache, t, prompts[:, t:t + 1])
+    out = [prompts]
+    for t in range(S0, S0 + max_new):
+        rng, rs = jax.random.split(rng)
+        tok, cache = serve(params, cache, t, rs)
+        out.append(tok[:, None])
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--blocks", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--ckpt-dir", default="")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    n_units = DiffusionBlocksModel(cfg, DBConfig(num_blocks=1)).model.n_units
+    db = DBConfig(num_blocks=min(args.blocks, n_units), overlap_gamma=0.1)
+    dbm = DiffusionBlocksModel(cfg, db)
+    params = dbm.init(jax.random.PRNGKey(0))
+    if args.ckpt_dir:
+        params = load_blocks(args.ckpt_dir, params, dbm.ranges)
+
+    lm = MarkovLM(vocab_size=cfg.vocab_size, seed=7)
+    prompts = jnp.asarray(lm.sample(np.random.RandomState(1), args.batch,
+                                    args.prompt_len))
+    t0 = time.time()
+    out = generate(dbm, params, prompts, args.max_new)
+    dt = time.time() - t0
+    gen = np.array(out[:, args.prompt_len:])
+    print(f"generated {gen.shape} in {dt:.2f}s "
+          f"({args.batch*args.max_new/dt:.1f} tok/s)")
+    print("legal-transition rate:", lm.transition_accuracy(np.array(out)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.model_api import BaseModel, build_model
+from repro.models.common import LayerCtx

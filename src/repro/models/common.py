@@ -1,0 +1,208 @@
+"""Shared layer machinery for all architecture families.
+
+``LayerCtx`` threads everything a layer needs through scans: conditioning
+(AdaLN mods from σ), positions, mask construction, KV caches, execution mode.
+
+Modes:
+  train      — full sequence, causal (+SWA) mask
+  prefill    — like train, additionally returns KV/state caches
+  decode     — one token + cache
+  db_concat  — DB AR training, [clean || noisy] single stream, custom mask
+               (paper App. E.4 concat variant; attention layers only)
+  db_two_pass— DB AR training, paired (clean, noisy) streams; noisy stream is
+               denoised against the clean prefix state (works for SSM too)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import runtime
+from repro.configs.base import ModelConfig
+from repro.nn import layers as L
+from repro.nn import attention as A
+from repro.nn import adaln
+from repro.nn.init import ParamSpec
+from repro.nn.moe import moe_fwd, moe_spec
+
+
+@dataclasses.dataclass
+class LayerCtx:
+    cfg: ModelConfig
+    mode: str = "train"
+    positions: Optional[jax.Array] = None       # mask positions (S,)
+    rope_positions: Optional[jax.Array] = None  # rope phases (S,)
+    mask_mod: Optional[Callable] = None
+    cond: Optional[jax.Array] = None            # (B, d) sigma embedding, or None
+    cond_mask: Optional[jax.Array] = None       # (S,) bool: where AdaLN applies
+    pos: Any = None                             # decode: scalar position
+    kv_x: Optional[jax.Array] = None            # cross-attn memory (B, Sk, d)
+    kv_positions: Optional[jax.Array] = None
+    impl: str = "auto"                          # attention impl
+    q_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
+    kv_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
+
+    def dims(self) -> A.AttnDims:
+        c = self.cfg
+        return A.AttnDims(c.n_heads, c.n_kv_heads, c.head_dim, c.rope_theta)
+
+
+def default_mask(cfg: ModelConfig, bidirectional: bool = False):
+    if bidirectional:
+        return A.bidirectional_mask
+    if cfg.sliding_window:
+        return A.sliding_window_mask(cfg.sliding_window)
+    return A.causal_mask
+
+
+# ---------------------------------------------------------------------------
+# Standard transformer layer (attention + MLP/MoE), with optional AdaLN
+# ---------------------------------------------------------------------------
+
+def tlayer_spec(cfg: ModelConfig, db: bool, *, cross: bool = False,
+                moe_layer: bool = False):
+    d = cfg.d_model
+    dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.rope_theta)
+    spec = {
+        "ln1": L.norm_spec(d, cfg.norm),
+        "attn": A.attention_spec(d, dims, cfg.qkv_bias),
+        "ln2": L.norm_spec(d, cfg.norm),
+    }
+    if moe_layer:
+        assert cfg.moe is not None
+        spec["moe"] = moe_spec(d, cfg.d_ff, cfg.moe, cfg.mlp)
+    else:
+        spec["mlp"] = L.mlp_spec(d, cfg.d_ff, cfg.mlp)
+    if db:
+        spec["adaln"] = adaln.adaln_spec(d, n_mods=6)
+    if cross:
+        # gate for cross-attn output (llama-3.2-vision style tanh gate)
+        spec["xgate"] = ParamSpec((1,), (None,), "zeros")
+    return spec
+
+
+def _mods(params, ctx: LayerCtx):
+    if ctx.cond is None or "adaln" not in params:
+        return (None,) * 6
+    return adaln.adaln_mods(params["adaln"], ctx.cond, ctx.cfg.d_model, 6)
+
+
+def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
+                 moe_layer: bool = False, bidirectional: bool = False,
+                 cache=None):
+    """Returns (h, new_cache, aux_loss)."""
+    cfg = ctx.cfg
+    dims = ctx.dims()
+    s1, c1, g1, s2, c2, g2 = _mods(params, ctx)
+    aux = jnp.zeros((), jnp.float32)
+    cm = ctx.cond_mask
+
+    x = adaln.modulate(L.apply_norm(params["ln1"], h, cfg.norm), s1, c1, cm)
+    if ctx.mode == "decode" and not cross:
+        attn_out, new_cache = A.decode_attention(
+            params["attn"], x, dims, cache, ctx.pos,
+            window=cfg.sliding_window, kv_chunk=ctx.kv_chunk)
+    elif cross:
+        # cross-attention to ctx.kv_x (image/audio memory); cache holds
+        # precomputed (k, v) in decode/prefill reuse.
+        if cache is not None and ctx.mode == "decode":
+            q, _, _ = A.project_qkv(params["attn"], x, dims)
+            out = A.attend(q, cache["k"].astype(x.dtype),
+                           cache["v"].astype(x.dtype), mask_mod=None,
+                           qpos=jnp.zeros((x.shape[1],), jnp.int32),
+                           kpos=jnp.arange(cache["k"].shape[1]),
+                           impl="naive")
+            attn_out = out.reshape(*x.shape[:2], dims.n_heads * dims.head_dim) \
+                @ params["attn"]["wo"].astype(x.dtype)
+            new_cache = cache
+        else:
+            attn_out, (k, v) = A.attention_fwd(
+                params["attn"], x, dims, positions=ctx.positions,
+                mask_mod=None, kv_x=ctx.kv_x,
+                kv_positions=ctx.kv_positions, impl=ctx.impl,
+                q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+            new_cache = {"k": k, "v": v} if ctx.mode == "prefill" else None
+        attn_out = attn_out * jnp.tanh(params["xgate"].astype(attn_out.dtype))
+    else:
+        mask_mod = ctx.mask_mod or default_mask(cfg, bidirectional)
+        attn_out, (k, v) = A.attention_fwd(
+            params["attn"], x, dims, positions=ctx.positions,
+            mask_mod=mask_mod, rope_positions=ctx.rope_positions,
+            impl=ctx.impl, q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+        new_cache = {"k": k, "v": v} if ctx.mode == "prefill" else None
+    h = adaln.gate(h, attn_out, g1, cm)
+
+    x = adaln.modulate(L.apply_norm(params["ln2"], h, cfg.norm), s2, c2, cm)
+    if moe_layer:
+        mlp_out, aux = moe_fwd(params["moe"], x, cfg.moe, cfg.mlp)
+    else:
+        mlp_out = L.apply_mlp(params["mlp"], x, cfg.mlp)
+    h = adaln.gate(h, mlp_out, g2, cm)
+    return h, new_cache, aux
+
+
+def two_pass_mask(seq_len: int):
+    """Mask for two-pass DB attention: q are the S noisy tokens; keys are
+    [clean(0..S-1) || noisy_diag(0..S-1)]. Noisy query i sees clean j < i and
+    its own noisy key (position S+i)."""
+    S = seq_len
+
+    def mask(qpos, kpos):
+        q = qpos[:, None]          # noisy query index i (0..S-1)
+        k = kpos[None, :]
+        clean = (k < S) & (k < q)
+        self_k = k == q + S
+        return clean | self_k
+    return mask
+
+
+def tlayer_two_pass(params, h_clean, h_noisy, ctx: LayerCtx, *,
+                    moe_layer: bool = False):
+    """DB two-pass for an attention layer: clean stream runs standard causal;
+    noisy stream attends clean past + own noisy kv. Returns (clean, noisy, aux)."""
+    cfg = ctx.cfg
+    dims = ctx.dims()
+    S = h_clean.shape[1]
+    s1, c1, g1, s2, c2, g2 = _mods(params, ctx)
+    aux = jnp.zeros((), jnp.float32)
+
+    # --- attention ---
+    xc = L.apply_norm(params["ln1"], h_clean, cfg.norm)          # clean: no mods
+    xn = adaln.modulate(L.apply_norm(params["ln1"], h_noisy, cfg.norm), s1, c1)
+    qc, kc, vc = A.project_qkv(params["attn"], xc, dims)
+    qn, kn, vn = A.project_qkv(params["attn"], xn, dims)
+    pos = ctx.positions if ctx.positions is not None else jnp.arange(S)
+    qc = L.apply_rope(qc, pos, dims.rope_theta)
+    kc = L.apply_rope(kc, pos, dims.rope_theta)
+    qn = L.apply_rope(qn, pos, dims.rope_theta)
+    kn = L.apply_rope(kn, pos, dims.rope_theta)
+    base_mask = ctx.mask_mod or default_mask(cfg, False)
+    oc = A.attend(qc, kc, vc, mask_mod=base_mask, qpos=pos, kpos=pos,
+                  impl=ctx.impl, q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
+    k_cat = jnp.concatenate([kc, kn], axis=1)
+    v_cat = jnp.concatenate([vc, vn], axis=1)
+    kpos_cat = jnp.concatenate([pos, pos + S])
+    on = A.attend(qn, k_cat, v_cat, mask_mod=two_pass_mask(S), qpos=pos,
+                  kpos=kpos_cat, impl=ctx.impl, q_chunk=ctx.q_chunk,
+                  kv_chunk=ctx.kv_chunk)
+    proj = lambda o: o.reshape(*o.shape[:2], dims.n_heads * dims.head_dim) \
+        @ params["attn"]["wo"].astype(o.dtype)
+    h_clean = h_clean + proj(oc)
+    h_noisy = adaln.gate(h_noisy, proj(on), g1)
+
+    # --- mlp ---
+    xc = L.apply_norm(params["ln2"], h_clean, cfg.norm)
+    xn = adaln.modulate(L.apply_norm(params["ln2"], h_noisy, cfg.norm), s2, c2)
+    if moe_layer:
+        mc, aux1 = moe_fwd(params["moe"], xc, cfg.moe, cfg.mlp)
+        mn, aux2 = moe_fwd(params["moe"], xn, cfg.moe, cfg.mlp)
+        aux = aux1 + aux2
+    else:
+        mc = L.apply_mlp(params["mlp"], xc, cfg.mlp)
+        mn = L.apply_mlp(params["mlp"], xn, cfg.mlp)
+    h_clean = h_clean + mc
+    h_noisy = adaln.gate(h_noisy, mn, g2)
+    return h_clean, h_noisy, aux

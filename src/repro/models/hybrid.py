@@ -1,0 +1,161 @@
+"""Zamba2-style hybrid model: Mamba2 backbone with a SHARED-weight attention
+(+MLP) block applied after every ``attn_every`` mamba layers.
+
+Unit = superblock of ``attn_every`` mamba layers + one application of the
+shared attention block. The shared block's weights are the same for every
+unit (closure constants under the unit scan) but each application keeps its
+own KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from repro.nn.scan_util import uscan
+import jax.numpy as jnp
+
+from repro.configs.base import HYBRID
+from repro.models import common as C
+from repro.models.model_api import BaseModel, register
+from repro.nn import adaln
+from repro.nn import attention as A
+from repro.nn import layers as L
+from repro.nn import ssm as SSM
+from repro.nn.init import stack_specs
+
+
+def _scan_slice(params, start, size):
+    return jax.tree_util.tree_map(lambda p: p[start:start + size], params)
+
+
+def mamba_layer_spec(cfg, db: bool):
+    spec = {
+        "ln": L.norm_spec(cfg.d_model, cfg.norm),
+        "mixer": SSM.mamba2_spec(cfg.d_model, cfg.ssm),
+    }
+    if db:
+        spec["adaln"] = adaln.adaln_spec(cfg.d_model, n_mods=3)
+    return spec
+
+
+def mamba_layer_apply(p, h, ctx, state=None):
+    cfg = ctx.cfg
+    if ctx.cond is not None and "adaln" in p:
+        s, c, g = adaln.adaln_mods(p["adaln"], ctx.cond, cfg.d_model, 3)
+    else:
+        s = c = g = None
+    x = adaln.modulate(L.apply_norm(p["ln"], h, cfg.norm), s, c)
+    if ctx.mode == "decode":
+        y, new_state = SSM.mamba2_decode_step(p["mixer"], x, cfg.ssm,
+                                              cfg.d_model, state)
+    else:
+        y, new_state = SSM.mamba2_fwd(p["mixer"], x, cfg.ssm, cfg.d_model,
+                                      state if ctx.mode == "decode" else None)
+    return adaln.gate(h, y, g), (new_state if ctx.mode in ("prefill", "decode")
+                                 else None)
+
+
+def mamba_layer_two_pass(p, hc, hn, ctx):
+    cfg = ctx.cfg
+    if ctx.cond is not None and "adaln" in p:
+        s, c, g = adaln.adaln_mods(p["adaln"], ctx.cond, cfg.d_model, 3)
+    else:
+        s = c = g = None
+    xc = L.apply_norm(p["ln"], hc, cfg.norm)
+    xn = adaln.modulate(L.apply_norm(p["ln"], hn, cfg.norm), s, c)
+    yc, yn = SSM.mamba2_two_pass(p["mixer"], xc, xn, cfg.ssm, cfg.d_model)
+    return hc + yc, adaln.gate(hn, yn, g)
+
+
+@register(HYBRID)
+class HybridModel(BaseModel):
+    @property
+    def inner(self) -> int:
+        return self.cfg.attn_every
+
+    @property
+    def n_units(self) -> int:
+        return self.cfg.n_layers // self.inner
+
+    def build_spec(self):
+        db = self.db is not None
+        spec = self.common_spec()
+        m = mamba_layer_spec(self.cfg, db)
+        spec["units"] = {"mamba": stack_specs(
+            stack_specs(m, self.inner, "inner"), self.n_units)}
+        spec["shared"] = C.tlayer_spec(self.cfg, db)   # shared attention block
+        return spec
+
+    def apply_units(self, params, h, start, size, ctx, cache=None):
+        up = _scan_slice(params["units"], start, size)
+        shared = params["shared"]
+        zero = jnp.zeros((), jnp.float32)
+
+        def unit(carry, xs):
+            h, aux = carry
+            if cache is None:
+                p, c = xs, None
+            else:
+                p, c = xs
+
+            def inner(carry2, xs2):
+                h2 = carry2
+                if c is None:
+                    p2, st2 = xs2, None
+                else:
+                    p2, st2 = xs2
+                h2, new_st = mamba_layer_apply(p2, h2, ctx, st2)
+                return h2, new_st
+
+            inner_xs = p["mamba"] if c is None else (p["mamba"], c["mamba"])
+            h, new_states = uscan(inner, h, inner_xs)
+            h, new_kv, a = C.tlayer_apply(
+                shared, h, ctx, cache=None if c is None else c["shared_kv"])
+            new_c = {"mamba": new_states, "shared_kv": new_kv}
+            return (h, aux + a), new_c
+
+        xs = up if cache is None else (up, cache)
+        (h, aux), new_cache = uscan(unit, (h, zero), xs)
+        keep = ctx.mode in ("prefill", "decode")
+        return h, new_cache if keep else None, aux
+
+    def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
+        up = _scan_slice(params["units"], start, size)
+        shared = params["shared"]
+        zero = jnp.zeros((), jnp.float32)
+
+        def unit(carry, p):
+            hc, hn, aux = carry
+
+            def inner(carry2, p2):
+                hc2, hn2 = carry2
+                hc2, hn2 = mamba_layer_two_pass(p2, hc2, hn2, ctx)
+                return (hc2, hn2), None
+
+            (hc, hn), _ = uscan(inner, (hc, hn), p["mamba"])
+            hc, hn, a = C.tlayer_two_pass(shared, hc, hn, ctx)
+            return (hc, hn, aux + a), None
+
+        (h_clean, h_noisy, aux), _ = uscan(
+            unit, (h_clean, h_noisy, zero), up)
+        return h_clean, h_noisy, aux
+
+    def cache_batch(self, cache) -> int:
+        return cache["shared_kv"]["k"].shape[1]
+
+    def init_cache(self, batch, cache_len, dtype=jnp.bfloat16, start=0,
+                   size=None):
+        size = self.n_units if size is None else size
+        cfg = self.cfg
+        clen = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        kv_one = A.init_kv_cache(batch, clen, dims, dtype)
+        m_one = SSM.mamba2_init_state(batch, cfg.ssm, cfg.d_model, dtype)
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        return {
+            "mamba": jax.tree_util.tree_map(
+                lambda x: bc(bc(x, self.inner), size), m_one),
+            "shared_kv": jax.tree_util.tree_map(lambda x: bc(x, size), kv_one),
+        }

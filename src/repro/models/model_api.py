@@ -1,0 +1,131 @@
+"""Uniform model API across the six architecture families.
+
+A model is partitioned into ``n_units`` *units* — the granularity at which
+DiffusionBlocks slices the network into blocks (paper §3.1 Step 1 /
+"treating entire architectural blocks as single denoising units"):
+
+  dense/moe      unit = one transformer layer
+  vlm            unit = superblock of (cross_attn_every-1 self + 1 cross) layers
+  hybrid/zamba2  unit = superblock of attn_every mamba layers + shared attn
+  ssm/xlstm      unit = (sLSTM, mLSTM) pair
+  audio/whisper  unit = one decoder layer (encoder is conditioning, unpartitioned)
+
+Every family implements:
+  init / abstract_params / axes
+  embed(params, batch)                      -> hidden stream h (B,S,d)
+  cond(params, log_sigma)                   -> (B,d) AdaLN conditioning (DB only)
+  apply_units(params, h, start, size, ctx, cache) -> (h, cache', aux)
+  apply_units_two_pass(params, hc, hn, start, size, ctx) -> (hc, hn, aux)
+  logits(params, h)                         -> (B,S,V)
+  init_cache(batch, cache_len, dtype, start, size) -> cache pytree for units
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM, DBConfig,
+                                ModelConfig)
+from repro.nn import adaln
+from repro.nn import layers as L
+from repro.nn.init import (ParamSpec, init_params, logical_axes, spec_shapes,
+                           stack_specs)
+
+
+class BaseModel:
+    def __init__(self, cfg: ModelConfig, db: Optional[DBConfig] = None):
+        self.cfg = cfg
+        self.db = db
+        self.spec = self.build_spec()
+
+    # ---- to be provided by subclasses ------------------------------------
+    @property
+    def n_units(self) -> int:
+        raise NotImplementedError
+
+    def build_spec(self):
+        raise NotImplementedError
+
+    def apply_units(self, params, h, start: int, size: int, ctx, cache=None):
+        raise NotImplementedError
+
+    def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
+        raise NotImplementedError
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
+                   start: int = 0, size: Optional[int] = None):
+        raise NotImplementedError
+
+    def cache_batch(self, cache) -> int:
+        """Batch size of a cache pytree (leaf layout is family-specific)."""
+        return jax.tree_util.tree_leaves(cache)[0].shape[1]
+
+    # ---- shared ----------------------------------------------------------
+    def init(self, rng, dtype=jnp.float32):
+        return init_params(rng, self.spec, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return spec_shapes(self.spec, dtype)
+
+    def axes(self):
+        return logical_axes(self.spec)
+
+    def common_spec(self):
+        """embedding / head / final norm / sigma-conditioning specs."""
+        cfg = self.cfg
+        spec = {
+            "embed": L.embed_spec(cfg.vocab_size, cfg.d_model),
+            "final_norm": L.norm_spec(cfg.d_model, cfg.norm),
+        }
+        if not cfg.tie_embeddings:
+            spec["head"] = L.readout_spec(cfg.d_model, cfg.vocab_size)
+        if self.db is not None:
+            spec["cond"] = adaln.sigma_embed_spec(self.db.cond_dim, cfg.d_model)
+        return spec
+
+    def embedding_table(self, params):
+        table = params["embed"]["table"]
+        if self.db is not None and self.db.embed_l2_normalize:
+            table = L.l2_normalize_embeddings(table)
+        return table
+
+    def embed(self, params, tokens, dtype=None):
+        h = self.embedding_table(params)[tokens]
+        return h if dtype is None else h.astype(dtype)
+
+    def cond(self, params, log_sigma, dtype=jnp.float32):
+        assert self.db is not None
+        return adaln.sigma_embedding(params["cond"], log_sigma / 4.0,
+                                     self.db.cond_dim, dtype)
+
+    def logits(self, params, h):
+        h = L.apply_norm(params["final_norm"], h, self.cfg.norm)
+        if self.cfg.tie_embeddings:
+            return h @ self.embedding_table(params).T.astype(h.dtype)
+        return L.readout(params["head"], h)
+
+    # full forward (all units) — convenience for e2e baseline / smoke tests
+    def forward(self, params, tokens, ctx, cache=None):
+        h = self.embed(params, tokens)
+        h, cache, aux = self.apply_units(params, h, 0, self.n_units, ctx, cache)
+        return self.logits(params, h), cache, aux
+
+
+_REGISTRY = {}
+
+
+def register(family: str):
+    def deco(cls):
+        _REGISTRY[family] = cls
+        return cls
+    return deco
+
+
+def build_model(cfg: ModelConfig, db: Optional[DBConfig] = None) -> BaseModel:
+    # imports deferred to avoid cycles
+    from repro.models import transformer, hybrid, ssm_model, encdec  # noqa: F401
+    return _REGISTRY[cfg.family](cfg, db)

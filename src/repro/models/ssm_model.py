@@ -1,0 +1,131 @@
+"""xLSTM model: units of (sLSTM, mLSTM) block pairs with pre-norm residuals."""
+from __future__ import annotations
+
+import jax
+from repro.nn.scan_util import uscan
+import jax.numpy as jnp
+
+from repro.configs.base import SSM
+from repro.models.model_api import BaseModel, register
+from repro.nn import adaln
+from repro.nn import layers as L
+from repro.nn import xlstm as X
+from repro.nn.init import stack_specs
+
+
+def _scan_slice(params, start, size):
+    return jax.tree_util.tree_map(lambda p: p[start:start + size], params)
+
+
+def _block_spec(cfg, db: bool, kind: str):
+    spec = {"ln": L.norm_spec(cfg.d_model, cfg.norm)}
+    if kind == "slstm":
+        spec["cell"] = X.slstm_spec(cfg.d_model, cfg.n_heads, cfg.xlstm)
+    else:
+        spec["cell"] = X.mlstm_spec(cfg.d_model, cfg.n_heads, cfg.xlstm)
+    if db:
+        spec["adaln"] = adaln.adaln_spec(cfg.d_model, n_mods=3)
+    return spec
+
+
+def _mods3(p, ctx):
+    if ctx.cond is not None and "adaln" in p:
+        return adaln.adaln_mods(p["adaln"], ctx.cond, ctx.cfg.d_model, 3)
+    return (None, None, None)
+
+
+def _block_apply(p, h, ctx, kind: str, state=None):
+    cfg = ctx.cfg
+    s, c, g = _mods3(p, ctx)
+    x = adaln.modulate(L.apply_norm(p["ln"], h, cfg.norm), s, c)
+    if kind == "slstm":
+        if ctx.mode == "decode":
+            y, new_state = X.slstm_decode_step(p["cell"], x, cfg.n_heads,
+                                               cfg.xlstm, state)
+        else:
+            y, new_state = X.slstm_fwd(p["cell"], x, cfg.n_heads, cfg.xlstm)
+    else:
+        if ctx.mode == "decode":
+            y, new_state = X.mlstm_decode_step(p["cell"], x, cfg.n_heads,
+                                               cfg.xlstm, state)
+        else:
+            y, new_state = X.mlstm_fwd(p["cell"], x, cfg.n_heads, cfg.xlstm,
+                                       return_state=ctx.mode == "prefill")
+    keep = ctx.mode in ("prefill", "decode")
+    return adaln.gate(h, y, g), (new_state if keep else None)
+
+
+def _block_two_pass(p, hc, hn, ctx, kind: str):
+    cfg = ctx.cfg
+    s, c, g = _mods3(p, ctx)
+    xc = L.apply_norm(p["ln"], hc, cfg.norm)
+    xn = adaln.modulate(L.apply_norm(p["ln"], hn, cfg.norm), s, c)
+    if kind == "slstm":
+        yc, yn = X.slstm_two_pass(p["cell"], xc, xn, cfg.n_heads, cfg.xlstm)
+    else:
+        yc, yn = X.mlstm_two_pass(p["cell"], xc, xn, cfg.n_heads, cfg.xlstm)
+    return hc + yc, adaln.gate(hn, yn, g)
+
+
+@register(SSM)
+class XLSTMModel(BaseModel):
+    @property
+    def n_units(self) -> int:
+        return self.cfg.n_layers // 2      # (sLSTM, mLSTM) pairs
+
+    def build_spec(self):
+        db = self.db is not None
+        spec = self.common_spec()
+        spec["units"] = {
+            "slstm": stack_specs(_block_spec(self.cfg, db, "slstm"),
+                                 self.n_units),
+            "mlstm": stack_specs(_block_spec(self.cfg, db, "mlstm"),
+                                 self.n_units),
+        }
+        return spec
+
+    def apply_units(self, params, h, start, size, ctx, cache=None):
+        up = _scan_slice(params["units"], start, size)
+        zero = jnp.zeros((), jnp.float32)
+
+        def unit(carry, xs):
+            h, aux = carry
+            if cache is None:
+                p, c = xs, {"slstm": None, "mlstm": None}
+            else:
+                p, c = xs
+            h, s_new = _block_apply(p["slstm"], h, ctx, "slstm", c["slstm"])
+            h, m_new = _block_apply(p["mlstm"], h, ctx, "mlstm", c["mlstm"])
+            return (h, aux), {"slstm": s_new, "mlstm": m_new}
+
+        xs = up if cache is None else (up, cache)
+        (h, aux), new_cache = uscan(unit, (h, zero), xs)
+        keep = ctx.mode in ("prefill", "decode")
+        return h, new_cache if keep else None, aux
+
+    def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
+        up = _scan_slice(params["units"], start, size)
+        zero = jnp.zeros((), jnp.float32)
+
+        def unit(carry, p):
+            hc, hn, aux = carry
+            hc, hn = _block_two_pass(p["slstm"], hc, hn, ctx, "slstm")
+            hc, hn = _block_two_pass(p["mlstm"], hc, hn, ctx, "mlstm")
+            return (hc, hn, aux), None
+
+        (h_clean, h_noisy, aux), _ = uscan(
+            unit, (h_clean, h_noisy, zero), up)
+        return h_clean, h_noisy, aux
+
+    def init_cache(self, batch, cache_len, dtype=jnp.bfloat16, start=0,
+                   size=None):
+        size = self.n_units if size is None else size
+        cfg = self.cfg
+        d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+        s_one = X.slstm_init_state(batch, cfg.n_heads, cfg.d_model)
+        m_one = X.mlstm_init_state(batch, cfg.n_heads, d_in)
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        return {
+            "slstm": jax.tree_util.tree_map(lambda x: bc(x, size), s_one),
+            "mlstm": jax.tree_util.tree_map(lambda x: bc(x, size), m_one),
+        }

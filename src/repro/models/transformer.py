@@ -1,0 +1,186 @@
+"""Dense / MoE decoder and VLM (cross-attn superblock) models."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from repro.nn.scan_util import uscan
+import jax.numpy as jnp
+
+from repro.configs.base import DENSE, MOE, VLM
+from repro.models import common as C
+from repro.models.model_api import BaseModel, register
+from repro.nn import attention as A
+from repro.nn.init import init_params, stack_specs
+
+
+def _scan_slice(params, start, size):
+    return jax.tree_util.tree_map(lambda p: p[start:start + size], params)
+
+
+@register(DENSE)
+@register(MOE)
+class DecoderModel(BaseModel):
+    """Standard decoder stack; every layer is MoE for the moe family."""
+
+    @property
+    def n_units(self) -> int:
+        return self.cfg.n_layers
+
+    @property
+    def is_moe(self) -> bool:
+        return self.cfg.family == MOE
+
+    def build_spec(self):
+        layer = C.tlayer_spec(self.cfg, self.db is not None,
+                              moe_layer=self.is_moe)
+        spec = self.common_spec()
+        spec["layers"] = stack_specs(layer, self.cfg.n_layers)
+        return spec
+
+    def apply_units(self, params, h, start, size, ctx, cache=None):
+        lp = _scan_slice(params["layers"], start, size)
+        zero = jnp.zeros((), jnp.float32)
+
+        if cache is None:
+            def step_nc(carry, p):
+                h, aux = carry
+                h, new_c, a = C.tlayer_apply(p, h, ctx,
+                                             moe_layer=self.is_moe, cache=None)
+                return (h, aux + a), new_c
+
+            (h, aux), caches = uscan(step_nc, (h, zero), lp)
+            return h, caches if ctx.mode == "prefill" else None, aux
+
+        def step(carry, xs):
+            h, aux = carry
+            p, c = xs
+            h, new_c, a = C.tlayer_apply(p, h, ctx, moe_layer=self.is_moe,
+                                         cache=c)
+            return (h, aux + a), new_c
+
+        (h, aux), new_cache = uscan(step, (h, zero), (lp, cache))
+        return h, new_cache, aux
+
+    def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
+        lp = _scan_slice(params["layers"], start, size)
+
+        def step(carry, p):
+            hc, hn, aux = carry
+            hc, hn, a = C.tlayer_two_pass(p, hc, hn, ctx,
+                                          moe_layer=self.is_moe)
+            return (hc, hn, aux + a), None
+
+        (h_clean, h_noisy, aux), _ = uscan(
+            step, (h_clean, h_noisy, jnp.zeros((), jnp.float32)), lp)
+        return h_clean, h_noisy, aux
+
+    def init_cache(self, batch, cache_len, dtype=jnp.bfloat16, start=0,
+                   size=None):
+        size = self.n_units if size is None else size
+        cfg = self.cfg
+        clen = min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+            else cache_len
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = A.init_kv_cache(batch, clen, dims, dtype)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (size,) + x.shape), one)
+
+
+@register(VLM)
+class VLMModel(BaseModel):
+    """Llama-3.2-Vision-style decoder: superblocks of (k-1) self layers + 1
+    gated cross-attention layer to stubbed image patch embeddings."""
+
+    @property
+    def k_self(self) -> int:
+        return self.cfg.cross_attn_every - 1
+
+    @property
+    def n_units(self) -> int:
+        return self.cfg.n_layers // self.cfg.cross_attn_every
+
+    def build_spec(self):
+        db = self.db is not None
+        self_layer = C.tlayer_spec(self.cfg, db)
+        cross_layer = C.tlayer_spec(self.cfg, db, cross=True)
+        spec = self.common_spec()
+        spec["units"] = {
+            "self": stack_specs(stack_specs(self_layer, self.k_self, "inner"),
+                                self.n_units),
+            "cross": stack_specs(cross_layer, self.n_units),
+        }
+        return spec
+
+    def apply_units(self, params, h, start, size, ctx, cache=None):
+        up = _scan_slice(params["units"], start, size)
+
+        def unit(carry, xs):
+            h, aux = carry
+            if cache is None:
+                p, c = xs, None
+            else:
+                p, c = xs
+
+            def inner(carry2, xs2):
+                h2, aux2 = carry2
+                if c is None:
+                    p2, c2 = xs2, None
+                else:
+                    p2, c2 = xs2
+                h2, nc2, a2 = C.tlayer_apply(p2, h2, ctx, cache=c2)
+                return (h2, aux2 + a2), nc2
+
+            inner_xs = p["self"] if c is None else (p["self"], c["self"])
+            (h, aux), new_self = uscan(inner, (h, aux), inner_xs)
+            h, new_cross, a = C.tlayer_apply(
+                p["cross"], h, ctx, cross=True,
+                cache=None if c is None else c["cross"])
+            new_c = {"self": new_self, "cross": new_cross}
+            return (h, aux + a), new_c
+
+        xs = up if cache is None else (up, cache)
+        (h, aux), new_cache = uscan(
+            unit, (h, jnp.zeros((), jnp.float32)), xs)
+        keep = ctx.mode in ("prefill", "decode")
+        return h, new_cache if keep else None, aux
+
+    def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
+        up = _scan_slice(params["units"], start, size)
+
+        def unit(carry, p):
+            hc, hn, aux = carry
+
+            def inner(carry2, p2):
+                hc2, hn2, aux2 = carry2
+                hc2, hn2, a2 = C.tlayer_two_pass(p2, hc2, hn2, ctx)
+                return (hc2, hn2, aux2 + a2), None
+
+            (hc, hn, aux), _ = uscan(inner, (hc, hn, aux), p["self"])
+            # cross-attn: both streams attend the image memory (conditioning)
+            hc, _, a1 = C.tlayer_apply(p["cross"], hc, ctx, cross=True)
+            hn, _, a2 = C.tlayer_apply(p["cross"], hn, ctx, cross=True)
+            return (hc, hn, aux + a1 + a2), None
+
+        (h_clean, h_noisy, aux), _ = uscan(
+            unit, (h_clean, h_noisy, jnp.zeros((), jnp.float32)), up)
+        return h_clean, h_noisy, aux
+
+    def cache_batch(self, cache) -> int:
+        return cache["cross"]["k"].shape[1]
+
+    def init_cache(self, batch, cache_len, dtype=jnp.bfloat16, start=0,
+                   size=None):
+        size = self.n_units if size is None else size
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = A.init_kv_cache(batch, cache_len, dims, dtype)
+        x_one = A.init_kv_cache(batch, cfg.n_image_tokens, dims, dtype)
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        return {
+            "self": jax.tree_util.tree_map(
+                lambda x: bc(bc(x, self.k_self), size), one),
+            "cross": jax.tree_util.tree_map(lambda x: bc(x, size), x_one),
+        }

@@ -1,0 +1,2 @@
+from repro.nn.init import (ParamSpec, init_params, logical_axes, spec_shapes,
+                           stack_specs)

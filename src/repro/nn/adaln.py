@@ -1,0 +1,87 @@
+"""Noise-level conditioning (paper §3.1 Step 3): DiT-style AdaLN.
+
+``sigma_embedding`` maps log σ through Fourier features + MLP to a conditioning
+vector c; each layer owns an ``adaln`` head producing (shift, scale, gate) pairs
+that modulate the pre-norm stream and gate the residual branch:
+
+    h' = h + gate * f( norm(h) * (1 + scale) + shift )
+
+With DB disabled the modulation params are absent and layers run vanilla.
+The modulate+residual elementwise chain is the target of the fused Pallas
+kernel in ``repro.kernels.fused_adaln``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ParamSpec
+
+
+def sigma_embed_spec(cond_dim: int, d_model: int):
+    return {
+        "mlp1": {"w": ParamSpec((cond_dim, d_model), (None, "mlp"))},
+        "mlp2": {"w": ParamSpec((d_model, d_model), (None, "mlp"))},
+    }
+
+
+def fourier_features(log_sigma: jax.Array, dim: int) -> jax.Array:
+    """log_sigma: (B,) -> (B, dim). EDM c_noise = log(σ)/4 convention applied
+    by the caller; here we embed whatever scalar arrives."""
+    half = dim // 2
+    freqs = jnp.exp(jnp.linspace(0.0, 6.0, half))
+    ang = log_sigma[..., None] * freqs
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def sigma_embedding(params, log_sigma: jax.Array, cond_dim: int,
+                    dtype=jnp.float32) -> jax.Array:
+    ff = fourier_features(log_sigma.astype(jnp.float32), cond_dim).astype(dtype)
+    h = jax.nn.silu(ff @ params["mlp1"]["w"].astype(dtype))
+    return jax.nn.silu(h @ params["mlp2"]["w"].astype(dtype))
+
+
+def adaln_spec(d_model: int, n_mods: int = 6):
+    """Per-layer modulation head: cond (d) -> n_mods * d (zero-init => identity).
+
+    The output dim is sharded on the model axis ("mlp" rule): at qwen scale
+    the per-layer head is d×6d ≈ 315 MB bf16 — replicating it across 64
+    layers wasted ~20 GB/chip (found via the baseline roofline, §Perf P0)."""
+    return {"w": ParamSpec((d_model, n_mods * d_model), (None, "mlp"),
+                           "zeros"),
+            "b": ParamSpec((n_mods * d_model,), ("mlp",), "zeros")}
+
+
+def adaln_mods(params, cond: jax.Array, d_model: int,
+               n_mods: int = 6) -> Tuple[jax.Array, ...]:
+    """cond: (B, d) -> n_mods tensors of (B, 1, d) for broadcasting over S."""
+    m = cond @ params["w"].astype(cond.dtype) + params["b"].astype(cond.dtype)
+    return tuple(m[:, None, i * d_model:(i + 1) * d_model]
+                 for i in range(n_mods))
+
+
+def modulate(x: jax.Array, shift: Optional[jax.Array],
+             scale: Optional[jax.Array],
+             cond_mask: Optional[jax.Array] = None) -> jax.Array:
+    """cond_mask: (S,) bool — positions where modulation applies (DB concat
+    mode modulates only the noisy half; the clean context must stay
+    σ-independent so its KV can be cached at inference)."""
+    if shift is None:
+        return x
+    y = x * (1.0 + scale.astype(x.dtype)) + shift.astype(x.dtype)
+    if cond_mask is None:
+        return y
+    return jnp.where(cond_mask[None, :, None], y, x)
+
+
+def gate(residual: jax.Array, branch: jax.Array,
+         g: Optional[jax.Array],
+         cond_mask: Optional[jax.Array] = None) -> jax.Array:
+    if g is None:
+        return residual + branch
+    gated = branch * (1.0 + g.astype(branch.dtype))
+    if cond_mask is not None:
+        gated = jnp.where(cond_mask[None, :, None], gated, branch)
+    return residual + gated

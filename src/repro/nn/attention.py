@@ -1,0 +1,350 @@
+"""Attention: GQA projections, masks (causal / sliding-window / bidirectional /
+custom), a chunked flash-style implementation in pure JAX (lowers on every
+backend with O(S * chunk) memory — this is what the distributed dry-run uses),
+naive reference, and KV-cache decode (with ring buffer for SWA).
+
+The Pallas TPU kernel lives in ``repro.kernels.flash_attention``; it is the
+hardware-target implementation, validated against these in interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ParamSpec
+from repro.nn.layers import apply_rope
+
+NEG_INF = -1e30
+
+MaskMod = Callable[[jax.Array, jax.Array], jax.Array]  # (qpos, kpos) -> bool
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def causal_mask(qpos, kpos):
+    return kpos[None, :] <= qpos[:, None]
+
+
+causal_mask.lower_tri = True   # every attended key satisfies kp <= qp
+
+
+def sliding_window_mask(window: int):
+    def mask(qpos, kpos):
+        k, q = kpos[None, :], qpos[:, None]
+        return (k <= q) & (k > q - window)
+    mask.lower_tri = True
+    return mask
+
+
+def bidirectional_mask(qpos, kpos):
+    return jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+
+
+def db_concat_mask(seq_len: int) -> MaskMod:
+    """Paper App. E.4 causal-consistency mask for [clean || noisy] sequences.
+
+    Positions 0..S-1 are clean tokens, S..2S-1 are noisy tokens (position i+S is
+    the noisy copy of token i).
+      * clean i attends causally to clean j <= i (standard AR half);
+      * noisy i+S attends to clean j < i (strictly the clean PAST — never clean
+        token i itself, which would leak the denoising target) and to itself.
+    """
+    S = seq_len
+
+    def mask(qpos, kpos):
+        q = qpos[:, None]
+        k = kpos[None, :]
+        q_clean = q < S
+        k_clean = k < S
+        clean_clean = q_clean & k_clean & (k <= q)
+        noisy_clean = (~q_clean) & k_clean & (k < q - S)
+        noisy_self = (~q_clean) & (k == q)
+        return clean_clean | noisy_clean | noisy_self
+    mask.lower_tri = True   # all attended keys satisfy kp <= qp
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def attention_spec(d_model: int, dims: AttnDims, qkv_bias: bool = False):
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    spec = {
+        "wq": ParamSpec((d_model, h * hd), ("embed", "heads")),
+        "wk": ParamSpec((d_model, kv * hd), ("embed", "kv_heads")),
+        "wv": ParamSpec((d_model, kv * hd), ("embed", "kv_heads")),
+        "wo": ParamSpec((h * hd, d_model), ("heads", "embed")),
+    }
+    if qkv_bias:
+        spec["bq"] = ParamSpec((h * hd,), ("heads",), "zeros")
+        spec["bk"] = ParamSpec((kv * hd,), ("kv_heads",), "zeros")
+        spec["bv"] = ParamSpec((kv * hd,), ("kv_heads",), "zeros")
+    return spec
+
+
+def project_qkv(params, x, dims: AttnDims, kv_x=None):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S_kv,KV,hd)."""
+    B, S, _ = x.shape
+    kv_x = x if kv_x is None else kv_x
+    S_kv = kv_x.shape[1]
+    q = x @ params["wq"].astype(x.dtype)
+    k = kv_x @ params["wk"].astype(x.dtype)
+    v = kv_x @ params["wv"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(B, S, dims.n_heads, dims.head_dim)
+    k = k.reshape(B, S_kv, dims.n_kv_heads, dims.head_dim)
+    v = v.reshape(B, S_kv, dims.n_kv_heads, dims.head_dim)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA-aware)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores(q, k, scale):
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> scores (B, KV, G, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) * scale
+
+
+def _gqa_combine(weights, v):
+    """weights (B,KV,G,Sq,Sk), v (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    B, KV, G, Sq, Sk = weights.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", weights, v)
+    return out.reshape(B, Sq, KV * G, v.shape[-1])
+
+
+def naive_attention(q, k, v, mask: Optional[jax.Array]) -> jax.Array:
+    """Reference implementation. mask: (Sq, Sk) bool or None."""
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32), scale)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    weights = jax.nn.softmax(scores, axis=-1)
+    return _gqa_combine(weights, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, mask_mod: Optional[MaskMod], qpos, kpos,
+                      q_chunk: int = 1024, kv_chunk: int = 1024) -> jax.Array:
+    """Flash-style two-level chunked attention with online softmax.
+
+    Memory: O(q_chunk * kv_chunk) score tiles; never materializes (Sq, Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to multiples
+    pad_q = (-Sq) % q_chunk
+    pad_k = (-Sk) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, (0, pad_q), constant_values=qpos[-1])
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, (0, pad_k), constant_values=-10**9)  # masked out
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+    qpos_c = qpos.reshape(nq, q_chunk)
+    kpos_c = kpos.reshape(nk, kv_chunk)
+
+    from repro import runtime
+    unroll = runtime.scan_unroll()
+
+    def one_q_chunk(args):
+        qi, qp = args                     # (B,qc,KV,G,hd), (qc,)
+
+        def kv_step(carry, kv_args):
+            m, l, acc = carry
+            ki, vi, kp = kv_args
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi.astype(jnp.float32),
+                           ki.astype(jnp.float32)) * scale
+            kvalid = kp > -(10 ** 8)      # padded / invalid slots are sentinel
+            if mask_mod is not None:
+                msk = mask_mod(qp, kp) & kvalid[None, :]   # (qc, kvc)
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            else:
+                s = jnp.where(kvalid[None, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        acc0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), kpos_c),
+            unroll=unroll)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,KV,G,qc,hd)
+        return out.transpose(0, 3, 1, 2, 4)             # (B,qc,KV,G,hd)
+
+    # flash-attention-style rematerialization: recompute score tiles in the
+    # backward pass instead of saving O(S·chunk) residuals per layer.
+    one_q_chunk = jax.checkpoint(one_q_chunk)
+
+    def q_step(_, args):
+        return None, one_q_chunk(args)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qc.transpose(1, 0, 2, 3, 4, 5), qpos_c),
+                           unroll=unroll)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_chunk, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def chunked_attention_triangle(q, k, v, mask_mod, qpos, kpos,
+                               q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Causal chunked attention with STRUCTURAL tile skipping (beyond-paper
+    perf variant, §Perf iteration P1): the q-chunk loop is a Python loop with
+    static kv slices [0 : (i+1)·C], so fully-masked future tiles are never
+    computed — exact triangle FLOPs (the masked scan computes the full S²
+    rectangle). Requires qpos/kpos to be the standard ascending ranges."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    assert Sq % q_chunk == 0 and Sq == Sk, "triangle path: aligned causal"
+    nq = Sq // q_chunk
+    outs = []
+    for i in range(nq):
+        qi = q[:, i * q_chunk:(i + 1) * q_chunk]
+        hi = (i + 1) * q_chunk
+        o = chunked_attention(qi, k[:, :hi], v[:, :hi], mask_mod,
+                              qpos[i * q_chunk:(i + 1) * q_chunk],
+                              kpos[:hi], q_chunk, kv_chunk)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+def attend(q, k, v, *, mask_mod: Optional[MaskMod], qpos, kpos,
+           impl: str = "auto", q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Dispatch between naive (small) and chunked (large / dry-run) attention."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if impl == "auto":
+        impl = "naive" if (Sq * Sk <= 256 * 256) else "chunked"
+    if impl == "naive":
+        mask = mask_mod(qpos, kpos) if mask_mod is not None else None
+        return naive_attention(q, k, v, mask)
+    if impl == "triangle":
+        return chunked_attention_triangle(q, k, v, mask_mod, qpos, kpos,
+                                          q_chunk, kv_chunk)
+    if impl == "chunked":
+        import os
+        if (os.environ.get("REPRO_CAUSAL_TRIANGLE", "0") == "1"
+                and getattr(mask_mod, "lower_tri", False)
+                and Sq == Sk and Sq % min(q_chunk, Sq) == 0):
+            return chunked_attention_triangle(q, k, v, mask_mod, qpos, kpos,
+                                              q_chunk, kv_chunk)
+        return chunked_attention(q, k, v, mask_mod, qpos, kpos, q_chunk, kv_chunk)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, mask_mod=mask_mod, qpos=qpos,
+                                    kpos=kpos)
+    raise ValueError(impl)
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer (projections + rope + attend) and decode step
+# ---------------------------------------------------------------------------
+
+def attention_fwd(params, x, dims: AttnDims, *, positions, mask_mod,
+                  kv_x=None, kv_positions=None, rope_positions=None,
+                  impl="auto", q_chunk=1024, kv_chunk=1024):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v)).
+
+    ``positions`` drive the mask; ``rope_positions`` (default: positions) drive
+    rotary phases — they differ for the DB clean||noisy concat sequence, where
+    the noisy copy of token i sits at mask-position S+i but rope-position i.
+    """
+    q, k, v = project_qkv(params, x, dims, kv_x)
+    rpos = positions if rope_positions is None else rope_positions
+    q = apply_rope(q, rpos, dims.rope_theta)
+    kpos = positions if kv_positions is None else kv_positions
+    if kv_x is None:   # self-attention: rope on k too
+        k = apply_rope(k, rpos, dims.rope_theta)
+    out = attend(q, k, v, mask_mod=mask_mod, qpos=positions, kpos=kpos,
+                 impl=impl, q_chunk=q_chunk, kv_chunk=kv_chunk)
+    out = out.reshape(*x.shape[:2], dims.n_heads * dims.head_dim)
+    return out @ params["wo"].astype(x.dtype), (k, v)
+
+
+def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, cache_len, dims.n_kv_heads, dims.head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, dims.n_kv_heads, dims.head_dim), dtype),
+    }
+
+
+def decode_attention(params, x, dims: AttnDims, cache, pos, *,
+                     window: Optional[int] = None, kv_chunk: int = 2048):
+    """One-token decode. x: (B, 1, d); cache k/v: (B, C, KV, hd); pos: scalar
+    current absolute position. SWA uses a ring buffer of size C == window.
+
+    Returns (out, new_cache).
+    """
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    q, k, v = project_qkv(params, x, dims)
+    posv = jnp.full((1,), pos)
+    q = apply_rope(q, posv, dims.rope_theta)
+    k = apply_rope(k, posv, dims.rope_theta)
+    slot = pos % C if window is not None else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    # validity: slot index corresponds to absolute position
+    idx = jnp.arange(C)
+    if window is not None:
+        # ring: entry i holds abs position p with p % C == i, p <= pos, pos-p < C
+        abs_pos = pos - ((pos - idx) % C)
+        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    else:
+        valid = idx <= pos
+    kpos_arr = jnp.where(valid, idx if window is None else 0, -10**9)
+
+    def mask(qp, kp):
+        return (kp > -10**9)[None, :].repeat(qp.shape[0], 0)
+
+    out = attend(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                 mask_mod=mask, qpos=posv, kpos=kpos_arr,
+                 impl="chunked" if C > 4096 else "naive",
+                 q_chunk=1, kv_chunk=kv_chunk)
+    out = out.reshape(B, 1, dims.n_heads * dims.head_dim)
+    return out @ params["wo"].astype(x.dtype), {"k": new_k, "v": new_v}

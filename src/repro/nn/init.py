@@ -1,0 +1,91 @@
+"""Parameter-spec machinery.
+
+Every layer declares a *spec tree*: a nested dict whose leaves are
+``ParamSpec(shape, axes, init, scale)``. From one spec tree we derive
+  * the initialized parameter pytree (``init_params``),
+  * the logical-axis pytree for sharding (``logical_axes``),
+  * abstract shapes for dry-run lowering (``spec_shapes``).
+
+Keeping shapes/axes/init in one place means the sharding rules can never drift
+out of sync with the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes                       # logical axis names; len == len(shape)
+    init: str = "normal"             # normal | zeros | ones | embed | uniform
+    scale: float = 1.0               # multiplier on the fan-in init std
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _fan_in_std(shape: Tuple[int, ...]) -> float:
+    # fan-in = product of all but the last dim (weights stored (in..., out)).
+    fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def init_params(rng: jax.Array, spec_tree: Any, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=_is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = []
+    for key, spec in zip(rngs, leaves):
+        if spec.init == "zeros":
+            p = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            p = jnp.ones(spec.shape, dtype)
+        elif spec.init == "embed":
+            p = jax.random.normal(key, spec.shape, dtype) * spec.scale
+        elif spec.init == "uniform":
+            p = jax.random.uniform(key, spec.shape, dtype, -1.0, 1.0) * spec.scale
+        else:  # normal: fan-in scaled
+            std = _fan_in_std(spec.shape) * spec.scale
+            p = jax.random.normal(key, spec.shape, dtype) * std
+        out.append(p)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def logical_axes(spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda s: s.axes, spec_tree, is_leaf=_is_spec)
+
+
+def spec_shapes(spec_tree: Any, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree,
+        is_leaf=_is_spec)
+
+
+def stack_specs(spec_tree: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    """Prepend a leading stacking dim (for lax.scan over homogeneous layers)."""
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale)
+    return jax.tree_util.tree_map(stack, spec_tree, is_leaf=_is_spec)
+
+
+def slice_tree(params: Any, start: int, size: int) -> Any:
+    """Slice a stacked-param tree along the leading (layers) dim."""
+    return jax.tree_util.tree_map(
+        lambda p: jax.lax.dynamic_slice_in_dim(p, start, size, axis=0), params)
+
+
+def index_tree(params: Any, i) -> Any:
+    return jax.tree_util.tree_map(lambda p: p[i], params)

@@ -1,0 +1,140 @@
+"""Basic layers: linear, norms, rotary embeddings, positional encodings, MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.init import ParamSpec
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, axes=( "embed", "mlp"), bias: bool = False,
+                init: str = "normal", scale: float = 1.0):
+    spec = {"w": ParamSpec((d_in, d_out), axes, init, scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (axes[1],), "zeros")
+    return spec
+
+
+def linear(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_spec(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"g": ParamSpec((d,), (None,), "ones")}
+    if kind == "layernorm":
+        return {"g": ParamSpec((d,), (None,), "ones"),
+                "b": ParamSpec((d,), (None,), "zeros")}
+    if kind == "nonparam_ln":   # OLMo: no affine params
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["g"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if kind == "layernorm":
+        y = y * params["g"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    if theta <= 0:   # architecture without rope (whisper/vit/dit)
+        return x
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper/ViT-style fixed sinusoidal table (S, d)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    div = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / gelu)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d: int, ff: int, kind: str):
+    if kind == "swiglu":
+        return {
+            "wi": ParamSpec((d, ff), ("embed", "mlp")),
+            "wg": ParamSpec((d, ff), ("embed", "mlp")),
+            "wo": ParamSpec((ff, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, ff), ("embed", "mlp")),
+        "wo": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(params, x, kind: str):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"].astype(x.dtype)) * (
+            x @ params["wi"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ params["wi"].astype(x.dtype))
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / readout
+# ---------------------------------------------------------------------------
+
+def embed_spec(vocab: int, d: int, scale: float = 0.02):
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), "embed", scale)}
+
+
+def embed(params, tokens):
+    return params["table"][tokens]
+
+
+def l2_normalize_embeddings(table: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """App. C: L2-normalize embedding rows (anti embedding-collapse)."""
+    n = jnp.linalg.norm(table.astype(jnp.float32), axis=-1, keepdims=True)
+    return (table / jnp.maximum(n, eps)).astype(table.dtype)
+
+
+def readout_spec(d: int, vocab: int):
+    return {"w": ParamSpec((d, vocab), ("embed", "vocab"))}
+
+
+def readout(params, x):
+    return x @ params["w"].astype(x.dtype)

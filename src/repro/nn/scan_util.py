@@ -1,0 +1,28 @@
+"""Unroll/remat-aware scan wrapper (see repro.runtime).
+
+* REPRO_SCAN_UNROLL=1 — unroll scan bodies so XLA cost analysis counts true
+  trip-count FLOPs (dry-run only).
+* REPRO_LAYER_REMAT=1 — jax.checkpoint every scan body: per-layer activation
+  checkpointing (saves only the layer inputs; recomputes the layer in the
+  backward pass). Combined with DiffusionBlocks this realizes the paper's
+  App. G analysis: remat cuts activations to O(1) per layer while DB cuts
+  params/grads/optimizer to L/B — the two compose.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro import runtime
+
+
+def layer_remat() -> bool:
+    return os.environ.get("REPRO_LAYER_REMAT", "0") == "1"
+
+
+def uscan(f, init, xs, length=None):
+    if layer_remat():
+        f = jax.checkpoint(f)
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=runtime.scan_unroll())

@@ -1,0 +1,296 @@
+"""Mamba2 SSD layer, TPU-adapted.
+
+GPU Mamba2 relies on a fused CUDA selective-scan. The TPU-native formulation
+here is the *chunked SSD dual form*: within a chunk of length Q the recurrence
+is evaluated as a masked quadratic (attention-like) contraction — MXU-friendly
+matmuls — while chunk-boundary states are propagated with
+``jax.lax.associative_scan`` over n_chunks elements only. Nothing of size
+(S, heads, head_dim, d_state) is ever materialized.
+
+State-space recurrence (per head, diagonal A):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t ⊗ x_t        h: (P, N)
+    y_t = C_t · h_t + D * x_t
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.nn.init import ParamSpec
+from repro.nn.scan_util import uscan
+
+LOG_EPS = -30.0
+
+
+def mamba2_spec(d_model: int, cfg: SSMConfig):
+    d_in = cfg.expand * d_model
+    n_heads = d_in // cfg.head_dim
+    return {
+        # in_proj produces [x (d_in), z gate (d_in), B (N), C (N), dt (H)]
+        "in_proj": {"w": ParamSpec(
+            (d_model, 2 * d_in + 2 * cfg.d_state + n_heads), ("embed", "heads"))},
+        "conv_w": ParamSpec((cfg.d_conv, d_in + 2 * cfg.d_state),
+                            (None, "heads"), "normal", 1.0),
+        "conv_b": ParamSpec((d_in + 2 * cfg.d_state,), ("heads",), "zeros"),
+        "a_log": ParamSpec((n_heads,), ("heads",), "uniform", 1.0),
+        "dt_bias": ParamSpec((n_heads,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((n_heads,), ("heads",), "ones"),
+        "norm_g": ParamSpec((d_in,), ("heads",), "ones"),
+        "out_proj": {"w": ParamSpec((d_in, d_model), ("heads", "embed"))},
+    }
+
+
+def _split_proj(proj, d_in, d_state, n_heads):
+    xz, rest = proj[..., :2 * d_in], proj[..., 2 * d_in:]
+    x, z = xz[..., :d_in], xz[..., d_in:]
+    B = rest[..., :d_state]
+    C = rest[..., d_state:2 * d_state]
+    dt = rest[..., 2 * d_state:]
+    return x, z, B, C, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. u: (B,S,C), w: (K,C). prev: (B,K-1,C) history.
+
+    Returns (out (B,S,C), new_history (B,K-1,C))."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], K - 1, u.shape[-1]), u.dtype)
+    ext = jnp.concatenate([prev, u], axis=1)
+    out = jnp.zeros_like(u)
+    for i in range(K):
+        out = out + ext[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+    new_hist = ext[:, -(K - 1):] if K > 1 else prev
+    return jax.nn.silu(out + b.astype(u.dtype)), new_hist
+
+
+def _chunk_scan(x, dt, a_log, Bmat, Cmat, chunk: int,
+                h0: Optional[jax.Array] = None, *,
+                strict: bool = False):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); Bmat/Cmat: (B,S,N).
+
+    ``strict=True`` computes y_i = C_i · h_{i-1} (history EXCLUDING token i,
+    decayed only through i-1) — used by the DB two-pass AR adapter, where C may
+    come from the noisy stream while x/dt/B build the clean state.
+
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                 # (H,) negative
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(jnp.float32)
+    Bc = Bmat.reshape(Bsz, nc, chunk, N)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1 if strict else 0)
+    init_state = (jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None
+                  else h0.astype(jnp.float32))
+
+    # Sequential scan over chunks: only ONE (B, Q, Q, H) decay tile is live at
+    # a time (the batched form materialized (B, nc, Q, Q, H) — 15 GB for
+    # zamba2 at 4k). Intra-chunk work stays MXU-friendly matmuls.
+    def one_chunk(h_prev, xs):
+        xci, dti, Bci, Cci = xs                              # (B,Q,...) slices
+        dAi = dti * A                                        # (B,Q,H)
+        cum = jnp.cumsum(dAi, axis=1)
+        total = cum[:, -1]                                   # (B,H)
+        cum_q = cum - dAi if strict else cum
+        diff = cum_q[:, :, None, :] - cum[:, None, :, :]     # (B,Q,Q,H)
+        L = jnp.where(mask[None, :, :, None],
+                      jnp.exp(jnp.maximum(diff, LOG_EPS)), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Cci.astype(jnp.float32),
+                        Bci.astype(jnp.float32))             # (B,Q,Q)
+        xdt = xci.astype(jnp.float32) * dti[..., None]       # (B,Q,H,P)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", CB, L, xdt)
+        # inter-chunk: query the incoming state
+        decay_in = jnp.exp(jnp.maximum(cum_q, LOG_EPS))      # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp",
+                             Cci.astype(jnp.float32), h_prev, decay_in)
+        # state update
+        decay_to_end = jnp.exp(jnp.maximum(total[:, None] - cum, LOG_EPS))
+        s_c = jnp.einsum("bjh,bjhp,bjn->bhpn", decay_to_end * dti,
+                         xci.astype(jnp.float32), Bci.astype(jnp.float32))
+        chunk_decay = jnp.exp(jnp.maximum(total, LOG_EPS))   # (B,H)
+        h_new = chunk_decay[..., None, None] * h_prev + s_c
+        return h_new, y_intra + y_inter
+
+    xs = (xc.transpose(1, 0, 2, 3, 4), dtc.transpose(1, 0, 2, 3),
+          Bc.transpose(1, 0, 2, 3), Cc.transpose(1, 0, 2, 3))
+    h_final, ys = uscan(one_chunk, init_state, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba2_fwd(params, u: jax.Array, cfg: SSMConfig, d_model: int,
+               state=None) -> Tuple[jax.Array, dict]:
+    """Full-sequence forward. u: (B,S,d_model). Returns (out, new_state)."""
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    P, N = cfg.head_dim, cfg.d_state
+    proj = u @ params["in_proj"]["w"].astype(u.dtype)
+    x, z, Bm, Cm, dt = _split_proj(proj, d_in, N, H)
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)
+    prev = state["conv"] if state is not None else None
+    conv_out, conv_hist = _causal_conv(conv_in, params["conv_w"],
+                                       params["conv_b"], prev)
+    x = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + N]
+    Cm = conv_out[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    xh = x.reshape(*x.shape[:2], H, P)
+    h0 = state["h"] if state is not None else None
+    y, h_final = _chunk_scan(xh, dt, params["a_log"], Bm, Cm, cfg.chunk_size, h0)
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(*x.shape[:2], d_in).astype(u.dtype)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_g"].astype(jnp.float32)).astype(u.dtype)
+    out = y @ params["out_proj"]["w"].astype(u.dtype)
+    return out, {"h": h_final, "conv": conv_hist}
+
+
+def mamba2_two_pass(params, u_clean: jax.Array, u_noisy: jax.Array,
+                    cfg: SSMConfig, d_model: int) -> Tuple[jax.Array, jax.Array]:
+    """DB two-pass AR adaptation for an SSM layer (paper App. E.4 alternative).
+
+    Clean stream runs the standard recurrence. Each noisy token i is denoised
+    by a one-step update from the clean state h_{i-1}:
+
+        h_i^noisy = exp(dt_i^n A) h_{i-1}^clean + dt_i^n B_i^n ⊗ x_i^n
+        y_i^noisy = C_i^n · h_i^noisy + D x_i^n
+
+    C_i^n · h_{i-1}^clean is evaluated for ALL i in parallel via the chunked
+    scan in strict mode with the noisy C as the output contraction — no
+    (S, H, P, N) state tensor is ever materialized.
+
+    Returns (y_clean (B,S,d), y_noisy (B,S,d)).
+    """
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    P, N = cfg.head_dim, cfg.d_state
+    W = params["in_proj"]["w"]
+
+    def proj_split(u):
+        return _split_proj(u @ W.astype(u.dtype), d_in, N, H)
+
+    xc, zc, Bc, Cc, dtc = proj_split(u_clean)
+    xn, zn, Bn, Cn, dtn = proj_split(u_noisy)
+
+    # causal conv: clean standard; noisy token i gets clean history i-K+1..i-1
+    # plus its own current input -> conv(clean) - w_last*clean_i + w_last*noisy_i
+    conv_c_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_n_in = jnp.concatenate([xn, Bn, Cn], axis=-1)
+    # pre-activation conv so the noisy correction composes before the silu
+    K = params["conv_w"].shape[0]
+    prev = jnp.zeros((u_clean.shape[0], K - 1, conv_c_in.shape[-1]),
+                     conv_c_in.dtype)
+    ext = jnp.concatenate([prev, conv_c_in], axis=1)
+    lin_c = jnp.zeros_like(conv_c_in)
+    for i in range(K):
+        lin_c = lin_c + ext[:, i:i + conv_c_in.shape[1]] * \
+            params["conv_w"][i].astype(conv_c_in.dtype)
+    lin_c = lin_c + params["conv_b"].astype(conv_c_in.dtype)
+    w_last = params["conv_w"][K - 1].astype(conv_c_in.dtype)
+    lin_n = lin_c - conv_c_in * w_last + conv_n_in * w_last
+    conv_n = jax.nn.silu(lin_n)
+    conv_c = jax.nn.silu(lin_c)
+
+    def unpack(co):
+        return co[..., :d_in], co[..., d_in:d_in + N], co[..., d_in + N:]
+
+    xc_, Bc_, Cc_ = unpack(conv_c)
+    xn_, Bn_, Cn_ = unpack(conv_n)
+    dtc_ = jax.nn.softplus(dtc.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    dtn_ = jax.nn.softplus(dtn.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xch = xc_.reshape(*xc_.shape[:2], H, P)
+    xnh = xn_.reshape(*xn_.shape[:2], H, P)
+
+    # clean pass (standard)
+    y_clean, _ = _chunk_scan(xch, dtc_, params["a_log"], Bc_, Cc_,
+                             cfg.chunk_size)
+    y_clean = y_clean + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xch.astype(jnp.float32)
+
+    # history query: u_i = C_i^noisy · h_{i-1}^clean
+    u_hist, _ = _chunk_scan(xch, dtc_, params["a_log"], Bc_, Cn_,
+                            cfg.chunk_size, strict=True)
+    decay_n = jnp.exp(jnp.maximum(dtn_ * A, LOG_EPS))        # (B,S,H)
+    cb_self = jnp.einsum("bsn,bsn->bs", Cn_.astype(jnp.float32),
+                         Bn_.astype(jnp.float32))            # (B,S)
+    y_noisy = (decay_n[..., None] * u_hist
+               + (dtn_ * cb_self[..., None])[..., None]
+               * xnh.astype(jnp.float32))
+    y_noisy = y_noisy + params["d_skip"].astype(jnp.float32)[None, None, :, None] \
+        * xnh.astype(jnp.float32)
+
+    def finish(y, z):
+        y = y.reshape(*z.shape[:2], d_in).astype(u_clean.dtype)
+        y = y * jax.nn.silu(z)
+        var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+             * params["norm_g"].astype(jnp.float32)).astype(u_clean.dtype)
+        return y @ params["out_proj"]["w"].astype(u_clean.dtype)
+
+    return finish(y_clean, zc), finish(y_noisy, zn)
+
+
+def mamba2_init_state(batch: int, cfg: SSMConfig, d_model: int,
+                      dtype=jnp.float32) -> dict:
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    return {
+        "h": jnp.zeros((batch, H, cfg.head_dim, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_in + 2 * cfg.d_state), dtype),
+    }
+
+
+def mamba2_decode_step(params, u: jax.Array, cfg: SSMConfig, d_model: int,
+                       state: dict) -> Tuple[jax.Array, dict]:
+    """Single-token decode: O(1) state update. u: (B,1,d_model)."""
+    d_in = cfg.expand * d_model
+    H = d_in // cfg.head_dim
+    P, N = cfg.head_dim, cfg.d_state
+    proj = u @ params["in_proj"]["w"].astype(u.dtype)
+    x, z, Bm, Cm, dt = _split_proj(proj, d_in, N, H)
+    conv_in = jnp.concatenate([x, Bm, Cm], axis=-1)
+    conv_out, conv_hist = _causal_conv(conv_in, params["conv_w"],
+                                       params["conv_b"], state["conv"])
+    x = conv_out[..., :d_in]
+    Bm = conv_out[..., d_in:d_in + N]
+    Cm = conv_out[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,1,H)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = x.reshape(-1, H, P).astype(jnp.float32)              # (B,H,P)
+    dt1 = dt[:, 0]                                            # (B,H)
+    decay = jnp.exp(dt1 * A)                                  # (B,H)
+    inc = jnp.einsum("bh,bhp,bn->bhpn", dt1, xh, Bm[:, 0].astype(jnp.float32))
+    h = state["h"] * decay[..., None, None] + inc
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_in).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_g"].astype(jnp.float32)).astype(u.dtype)
+    out = y @ params["out_proj"]["w"].astype(u.dtype)
+    return out, {"h": h, "conv": conv_hist}

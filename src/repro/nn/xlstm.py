@@ -1,0 +1,413 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable,
+attention-like quadratic form for train/prefill + O(1) recurrent decode) and
+sLSTM (scalar memory with recurrent gate connections, lax.scan over time).
+
+Both use the stabilized exponential gating of the paper (log-domain max
+stabilizer m_t).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from repro.nn.scan_util import uscan
+
+from repro.configs.base import XLSTMConfig
+from repro.nn.init import ParamSpec
+
+NEG = -1e30
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_spec(d_model: int, n_heads: int, cfg: XLSTMConfig):
+    d_in = int(cfg.proj_factor * d_model)
+    return {
+        "up": {"w": ParamSpec((d_model, 2 * d_in), ("embed", "heads"))},
+        "wq": ParamSpec((d_in, d_in), ("heads", "heads")),
+        "wk": ParamSpec((d_in, d_in), ("heads", "heads")),
+        "wv": ParamSpec((d_in, d_in), ("heads", "heads")),
+        "wif": ParamSpec((d_in, 2 * n_heads), ("heads", None)),
+        "bif": ParamSpec((2 * n_heads,), (None,), "zeros"),
+        "norm_g": ParamSpec((d_in,), ("heads",), "ones"),
+        "down": {"w": ParamSpec((d_in, d_model), ("heads", "embed"))},
+    }
+
+
+def _mlstm_parallel(q, k, v, log_i, log_f):
+    """q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H). Quadratic stabilized form."""
+    B, S, H, hd = q.shape
+    lf_cum = jnp.cumsum(log_f, axis=1)                       # (B,S,H)
+    # exponent E[t,s] = lf_cum_t - lf_cum_s + log_i_s   (s <= t)
+    E = (lf_cum[:, :, None] - lf_cum[:, None, :] + log_i[:, None, :])
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    E = jnp.where(mask[None, :, :, None], E, NEG)
+    m = jnp.max(E, axis=2)                                   # (B,S,H)
+    D = jnp.exp(E - m[:, :, None])                           # (B,S,S,H)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) / (hd ** 0.5)
+    Ct = scores * D
+    n = jnp.maximum(jnp.abs(jnp.sum(Ct, axis=2)), jnp.exp(-m))  # (B,S,H)
+    return jnp.einsum("btsh,bshd->bthd", Ct, v) / n[..., None]
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, chunk: int = 256):
+    """Chunked mLSTM: intra-chunk quadratic + sequential (C, n, m) state carry
+    across chunks. Memory O(S * chunk) instead of O(S^2).
+
+    All inputs f32. q,k,v: (B,S,H,hd); log_i/log_f: (B,S,H)."""
+    B, S, H, hd = q.shape
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    lic = log_i.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    lfc = log_f.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(carry, xs):
+        C0, n0, m0 = carry                 # (B,H,hd,hd), (B,H,hd), (B,H)
+        qi, ki, vi, li, lf = xs
+        lf_cum = jnp.cumsum(lf, axis=1)    # (B,Q,H)
+        # intra-chunk exponent
+        E = lf_cum[:, :, None] - lf_cum[:, None, :] + li[:, None, :]
+        E = jnp.where(tri[None, :, :, None], E, NEG)
+        m_intra = jnp.max(E, axis=2)                        # (B,Q,H)
+        m_inter = lf_cum + m0[:, None]                      # (B,Q,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(E - m_t[:, :, None])
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki) / (hd ** 0.5)
+        Ct = scores * D
+        inter_w = jnp.exp(m_inter - m_t)                    # (B,Q,H)
+        num = (jnp.einsum("btsh,bshd->bthd", Ct, vi)
+               + inter_w[..., None] * jnp.einsum("bhvk,bthk->bthv", C0, qi))
+        den_val = (jnp.sum(Ct, axis=2)
+                   + inter_w * jnp.einsum("bhk,bthk->bth", n0, qi))
+        den = jnp.maximum(jnp.abs(den_val), jnp.exp(-m_t))
+        y = num / den[..., None]
+        # end-of-chunk state
+        lf_tot = lf_cum[:, -1]                              # (B,H)
+        dk = lf_tot[:, None] - lf_cum + li                  # (B,Q,H) decay->end
+        m_end = jnp.maximum(lf_tot + m0, jnp.max(dk, axis=1))
+        w_end = jnp.exp(dk - m_end[:, None])                # (B,Q,H)
+        k_s = ki / (hd ** 0.5)
+        C_new = (jnp.exp(lf_tot + m0 - m_end)[..., None, None] * C0
+                 + jnp.einsum("bqh,bqhv,bqhk->bhvk", w_end, vi, k_s))
+        n_new = (jnp.exp(lf_tot + m0 - m_end)[..., None] * n0
+                 + jnp.einsum("bqh,bqhk->bhk", w_end, k_s))
+        return (C_new, n_new, m_end), y
+
+    init = mlstm_init_state(B, H, H * hd)
+    final, ys = uscan(step, init, (qc, kc, vc, lic, lfc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, hd)
+    return y[:, :S], final
+
+
+def _mlstm_hist_raw(q, k, v, log_i, log_f, chunk: int = 256):
+    """Strict-history query: for each position i return the stabilized triple
+    (num_i, den_i, m_i) of querying q_i against the clean mLSTM state built
+    from tokens j < i, decayed through f_{i-1} only (exclusive). Chunked, so
+    memory is O(S * chunk). Shapes: num (B,S,H,hd), den/m (B,S,H)."""
+    B, S, H, hd = q.shape
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=NEG)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    nc = q.shape[1] // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    lic = log_i.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    lfc = log_f.reshape(B, nc, chunk, H).transpose(1, 0, 2, 3)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)   # strict
+
+    def step(carry, xs):
+        C0, n0, m0 = carry
+        qi, ki, vi, li, lf = xs
+        lf_cum = jnp.cumsum(lf, axis=1)
+        lf_excl = lf_cum - lf                               # decay through i-1
+        E = lf_excl[:, :, None] - lf_cum[:, None, :] + li[:, None, :]
+        E = jnp.where(tri[None, :, :, None], E, NEG)
+        m_intra = jnp.max(E, axis=2)
+        m_inter = lf_excl + m0[:, None]
+        m_t = jnp.maximum(m_intra, m_inter)
+        D = jnp.exp(E - m_t[:, :, None])
+        scores = jnp.einsum("bthd,bshd->btsh", qi, ki) / (hd ** 0.5)
+        Ct = scores * D
+        inter_w = jnp.exp(m_inter - m_t)
+        num = (jnp.einsum("btsh,bshd->bthd", Ct, vi)
+               + inter_w[..., None] * jnp.einsum("bhvk,bthk->bthv", C0, qi))
+        den = (jnp.sum(Ct, axis=2)
+               + inter_w * jnp.einsum("bhk,bthk->bth", n0, qi))
+        # end-of-chunk state (inclusive, standard)
+        lf_tot = lf_cum[:, -1]
+        dk = lf_tot[:, None] - lf_cum + li
+        m_end = jnp.maximum(lf_tot + m0, jnp.max(dk, axis=1))
+        w_end = jnp.exp(dk - m_end[:, None])
+        k_s = ki / (hd ** 0.5)
+        C_new = (jnp.exp(lf_tot + m0 - m_end)[..., None, None] * C0
+                 + jnp.einsum("bqh,bqhv,bqhk->bhvk", w_end, vi, k_s))
+        n_new = (jnp.exp(lf_tot + m0 - m_end)[..., None] * n0
+                 + jnp.einsum("bqh,bqhk->bhk", w_end, k_s))
+        return (C_new, n_new, m_end), (num, den, m_t)
+
+    init = mlstm_init_state(B, H, H * hd)
+    _, (num, den, m) = uscan(step, init, (qc, kc, vc, lic, lfc))
+    num = num.transpose(1, 0, 2, 3, 4).reshape(B, nc * chunk, H, hd)[:, :S]
+    den = den.transpose(1, 0, 2, 3).reshape(B, nc * chunk, H)[:, :S]
+    m = m.transpose(1, 0, 2, 3).reshape(B, nc * chunk, H)[:, :S]
+    return num, den, m
+
+
+def _mlstm_recurrent_step(state, q, k, v, log_i, log_f):
+    """One step. state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)). q/k/v: (B,H,hd)."""
+    C, n, m = state
+    hd = q.shape[-1]
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    k = k / (hd ** 0.5)
+    C_new = f_p[..., None] * C + i_p[..., None] * v[..., :, None] * k[..., None, :]
+    n_new = f_p * n + i_p * k
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q)),
+                      jnp.exp(-m_new))
+    return (C_new, n_new, m_new), num / den[..., None]
+
+
+def mlstm_fwd(params, x, n_heads: int, cfg: XLSTMConfig,
+              state=None, return_state: bool = False):
+    """x: (B,S,d). Parallel quadratic form (train) or chunked (prefill)."""
+    B, S, _ = x.shape
+    d_in = params["wq"].shape[0]
+    q, k, v, log_i, log_f, z = _mlstm_project(params, x, n_heads)
+    if S <= 512 and not return_state:
+        y = _mlstm_parallel(q, k, v, log_i, log_f)
+        final_state = None
+    else:
+        y, final_state = _mlstm_chunked(q, k, v, log_i, log_f)
+    out = _mlstm_finish(params, y.reshape(B, S, d_in), z, x.dtype)
+    return out, final_state
+
+
+def mlstm_init_state(batch: int, n_heads: int, d_in: int):
+    hd = d_in // n_heads
+    return (jnp.zeros((batch, n_heads, hd, hd), jnp.float32),
+            jnp.zeros((batch, n_heads, hd), jnp.float32),
+            jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+def mlstm_decode_step(params, x, n_heads: int, cfg: XLSTMConfig,
+                      state) -> Tuple[jax.Array, tuple]:
+    """x: (B,1,d). O(1) recurrent update."""
+    B = x.shape[0]
+    d_in = params["wq"].shape[0]
+    hd = d_in // n_heads
+    up = x @ params["up"]["w"].astype(x.dtype)
+    h, z = up[..., :d_in], up[..., d_in:]
+    q = (h @ params["wq"].astype(x.dtype)).reshape(B, n_heads, hd)
+    k = (h @ params["wk"].astype(x.dtype)).reshape(B, n_heads, hd)
+    v = (h @ params["wv"].astype(x.dtype)).reshape(B, n_heads, hd)
+    gif = (h @ params["wif"].astype(x.dtype)
+           + params["bif"].astype(x.dtype)).astype(jnp.float32)
+    log_i = gif[..., 0, :n_heads]
+    log_f = jax.nn.log_sigmoid(gif[..., 0, n_heads:])
+    new_state, y = _mlstm_recurrent_step(
+        state, q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), log_i, log_f)
+    y = y.reshape(B, 1, d_in)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_g"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["down"]["w"].astype(x.dtype), new_state
+
+
+def _mlstm_project(params, x, n_heads):
+    B, S, _ = x.shape
+    d_in = params["wq"].shape[0]
+    hd = d_in // n_heads
+    up = x @ params["up"]["w"].astype(x.dtype)
+    h, z = up[..., :d_in], up[..., d_in:]
+    q = (h @ params["wq"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    k = (h @ params["wk"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    v = (h @ params["wv"].astype(x.dtype)).reshape(B, S, n_heads, hd)
+    gif = (h @ params["wif"].astype(x.dtype)
+           + params["bif"].astype(x.dtype)).astype(jnp.float32)
+    log_i = gif[..., :n_heads]
+    log_f = jax.nn.log_sigmoid(gif[..., n_heads:])
+    return (q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), log_i, log_f, z)
+
+
+def _mlstm_finish(params, y, z, x_dtype):
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * params["norm_g"].astype(jnp.float32)
+    y = y.astype(x_dtype) * jax.nn.silu(z)
+    return y @ params["down"]["w"].astype(x_dtype)
+
+
+def mlstm_two_pass(params, x_clean, x_noisy, n_heads: int, cfg: XLSTMConfig):
+    """DB two-pass: clean standard; noisy token i does one stabilized mLSTM
+    step from the clean state at i-1 (queried via chunked strict-history scan).
+    Returns (y_clean, y_noisy)."""
+    B, S, _ = x_clean.shape
+    d_in = params["wq"].shape[0]
+    hd = d_in // n_heads
+    qc, kc, vc, lic, lfc, zc = _mlstm_project(params, x_clean, n_heads)
+    qn, kn, vn, lin, lfn, zn = _mlstm_project(params, x_noisy, n_heads)
+
+    yc = (_mlstm_parallel(qc, kc, vc, lic, lfc) if S <= 512
+          else _mlstm_chunked(qc, kc, vc, lic, lfc)[0])
+
+    num_h, den_h, m_h = _mlstm_hist_raw(qn, kc, vc, lic, lfc)
+    M = jnp.maximum(lfn + m_h, lin)                          # (B,S,H)
+    w_hist = jnp.exp(lfn + m_h - M)
+    w_self = jnp.exp(lin - M)
+    self_score = jnp.einsum("bshd,bshd->bsh", qn, kn) / (hd ** 0.5)
+    num = (w_hist[..., None] * num_h
+           + (w_self * self_score)[..., None] * vn)
+    den = jnp.maximum(jnp.abs(w_hist * den_h + w_self * self_score),
+                      jnp.exp(-M))
+    y_n = num / den[..., None]
+
+    out_c = _mlstm_finish(params, yc.reshape(B, S, d_in), zc, x_clean.dtype)
+    out_n = _mlstm_finish(params, y_n.reshape(B, S, d_in), zn, x_clean.dtype)
+    return out_c, out_n
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_spec(d_model: int, n_heads: int, cfg: XLSTMConfig):
+    hd = d_model // n_heads
+    return {
+        # input projections for gates i, f, z, o
+        "wx": ParamSpec((d_model, 4 * d_model), ("embed", "heads")),
+        # block-diagonal recurrent matrices per head, per gate
+        "r": ParamSpec((4, n_heads, hd, hd), (None, "heads", None, None),
+                       "normal", 1.0),
+        "b": ParamSpec((4 * d_model,), ("heads",), "zeros"),
+        "norm_g": ParamSpec((d_model,), (None,), "ones"),
+        "up": {"w": ParamSpec((d_model, 2 * d_model), ("embed", "mlp"))},
+        "down": {"w": ParamSpec((d_model, d_model), ("mlp", "embed"))},
+    }
+
+
+def slstm_init_state(batch: int, n_heads: int, d_model: int):
+    hd = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, hd), jnp.float32)
+    return (z, z, jnp.zeros((batch, n_heads), jnp.float32) + 1e-6,
+            jnp.full((batch, n_heads), -1e30, jnp.float32))  # h, c, n, m
+
+
+def _slstm_cell(params, xt, state, n_heads: int):
+    """xt: (B, 4*d) pre-projected inputs. state: (h, c, n, m)."""
+    h, c, n, m = state
+    B = xt.shape[0]
+    d = h.shape[1] * h.shape[2]
+    hd = h.shape[2]
+    rec = jnp.einsum("ghij,bhj->bghi", params["r"].astype(jnp.float32), h)
+    raw = xt.astype(jnp.float32).reshape(B, 4, n_heads, hd) \
+        + rec + params["b"].astype(jnp.float32).reshape(4, n_heads, hd)
+    i_t, f_t, z_t, o_t = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    # scalar gates per head (mean over head dim -> one gate per head)
+    i_t = jnp.mean(i_t, axis=-1)
+    f_t = jnp.mean(f_t, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + m, i_t)
+    i_p = jnp.exp(i_t - m_new)[..., None]
+    f_p = jnp.exp(log_f + m - m_new)[..., None]
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n[..., None] + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / n_new
+    return (h_new, c_new, n_new[..., 0], m_new), h_new
+
+
+def _slstm_finish(params, hs, x_dtype):
+    """hs: (B,S,H,hd) cell outputs -> block output (B,S,d)."""
+    B, S = hs.shape[:2]
+    d = hs.shape[2] * hs.shape[3]
+    y = hs.reshape(B, S, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_g"].astype(jnp.float32)).astype(x_dtype)
+    # small gated MLP after the cell (xLSTM post-up/down projection)
+    up = y @ params["up"]["w"].astype(x_dtype)
+    half = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    return y @ params["down"]["w"].astype(x_dtype)
+
+
+def slstm_fwd(params, x, n_heads: int, cfg: XLSTMConfig, state=None,
+              return_states: bool = False):
+    """x: (B,S,d): lax.scan over time."""
+    B, S, d = x.shape
+    xproj = x @ params["wx"].astype(x.dtype)                # (B,S,4d)
+    if state is None:
+        state = slstm_init_state(B, n_heads, d)
+
+    def step(carry, xt):
+        new, h = _slstm_cell(params, xt, carry, n_heads)
+        return new, (new if return_states else h)
+
+    final, out = jax.lax.scan(step, state, xproj.transpose(1, 0, 2))
+    if return_states:
+        states_seq, hs = out, out[0]
+    else:
+        states_seq, hs = None, out
+    y = _slstm_finish(params, hs.transpose(1, 0, 2, 3), x.dtype)
+    if return_states:
+        return y, final, states_seq
+    return y, final
+
+
+def slstm_two_pass(params, x_clean, x_noisy, n_heads: int, cfg: XLSTMConfig):
+    """DB two-pass: clean scan (collecting per-step states); each noisy token i
+    runs one sLSTM cell step from the clean state at i-1, all in parallel."""
+    B, S, d = x_clean.shape
+    hd = d // n_heads
+    y_clean, _, states_seq = slstm_fwd(params, x_clean, n_heads, cfg,
+                                       return_states=True)
+    # states_seq leaves: (S, B, ...) post-step; state BEFORE step i is the
+    # post-state of step i-1, with the init state at the front.
+    init = slstm_init_state(B, n_heads, d)
+
+    def shift(seq, ini):
+        return jnp.concatenate([ini[None], seq[:-1]], axis=0)
+
+    prev = tuple(shift(s, i) for s, i in zip(states_seq, init))
+    xproj_n = (x_noisy @ params["wx"].astype(x_noisy.dtype))  # (B,S,4d)
+    # vmap the cell over the time axis (NOT a reshape-fold of (S,B)->(S*B):
+    # that would break SPMD batch-dim sharding propagation — §Perf P3c)
+    x_t = xproj_n.transpose(1, 0, 2)                          # (S,B,4d)
+    _, h_n = jax.vmap(lambda xt, st: _slstm_cell(params, xt, st, n_heads))(
+        x_t, prev)
+    y_noisy = _slstm_finish(params, h_n.transpose(1, 0, 2, 3), x_clean.dtype)
+    return y_clean, y_noisy
+
+
+def slstm_decode_step(params, x, n_heads: int, cfg: XLSTMConfig,
+                      state) -> Tuple[jax.Array, tuple]:
+    """x: (B,1,d)."""
+    B, _, d = x.shape
+    xproj = (x @ params["wx"].astype(x.dtype))[:, 0]
+    new_state, h = _slstm_cell(params, xproj, state, n_heads)
+    y = h.reshape(B, 1, d)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = (y * jax.lax.rsqrt(var + 1e-6)
+         * params["norm_g"].astype(jnp.float32)).astype(x.dtype)
+    up = y @ params["up"]["w"].astype(x.dtype)
+    half = up.shape[-1] // 2
+    y = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    return y @ params["down"]["w"].astype(x.dtype), new_state

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWState, adamw, apply_updates,
+                               clip_by_global_norm, global_norm)
+from repro.optim.schedules import constant, warmup_cosine

@@ -1,0 +1,79 @@
+"""AdamW built from scratch (no optax offline). Optax-like (init, update)
+pair over arbitrary pytrees, with decoupled weight decay and global-norm
+clipping. Optimizer state is a pytree shaped like params — it shards with the
+same NamedSharding as the params (ZeRO-style for free under pjit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.0,
+          grad_clip: Optional[float] = None):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params) -> AdamWState:
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(z, params),
+                          jax.tree_util.tree_map(z, params))
+
+    def update(grads, state: AdamWState, params):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * \
+                p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), m, v
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step, mu, nu), {"grad_norm": gnorm,
+                                                   "lr": lr_t}
+
+    return init, update
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)

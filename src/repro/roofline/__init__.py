@@ -1,0 +1,3 @@
+from repro.roofline import hw
+from repro.roofline.analysis import (analyze, format_row, model_flops,
+                                     parse_collective_bytes, wire_bytes)

@@ -1,0 +1,189 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Inputs: ``compiled.cost_analysis()`` (per-device HLO FLOPs / bytes accessed)
+and the stablehlo/HLO text, from which collective operand/result sizes are
+parsed (cost_analysis does not attribute collective bytes).
+
+Terms (seconds, per chip — SPMD modules are per-device):
+    compute    = flops / PEAK_FLOPS_BF16
+    memory     = bytes_accessed / HBM_BW
+    collective = wire_bytes / ICI_BW
+
+wire_bytes heuristic per op (ring algorithms, n→∞ limit):
+    all-gather / collective-permute / all-to-all: result bytes ×1
+    reduce-scatter: input bytes ≈ result ×1 (counted from result of the op's
+        operand shape when available, else result)
+    all-reduce: result bytes ×2 (reduce-scatter + all-gather phases)
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# `  %name = bf16[8,128]{1,0} all-reduce(...)` and tuple results
+_RE_OP = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+(" +
+    "|".join(COLLECTIVES) + r")\b")
+_RE_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result bytes per collective kind from HLO text (per device)."""
+    out: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    for m in _RE_OP.finditer(hlo_text):
+        tuple_part, dtype, dims, kind = m.groups()
+        if tuple_part is not None:
+            size = sum(_shape_bytes(t, d)
+                       for t, d in _RE_SHAPE.findall(tuple_part))
+        else:
+            size = _shape_bytes(dtype, dims)
+        out[kind] += size
+        counts[kind] += 1
+    out_counts = {f"n_{k}": counts[k] for k in COLLECTIVES}
+    return {**out, **out_counts}
+
+
+def wire_bytes(coll: Dict[str, float]) -> float:
+    total = 0.0
+    for k in COLLECTIVES:
+        factor = 2.0 if k == "all-reduce" else 1.0
+        total += factor * coll.get(k, 0.0)
+    return total
+
+
+def analyze(compiled, hlo_text: Optional[str] = None,
+            model_flops_per_step: Optional[float] = None,
+            chips: int = 256) -> Dict:
+    """Returns the roofline record for one (arch × shape × mesh) dry-run."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):           # older API returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    if hlo_text is None:
+        hlo_text = compiled.as_text()
+    coll = parse_collective_bytes(hlo_text)
+    wire = wire_bytes(coll)
+
+    t_compute = flops / hw.PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / hw.HBM_BW
+    t_coll = wire / hw.ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mem = compiled.memory_analysis()
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes"):
+        if hasattr(mem, attr):
+            mem_rec[attr] = int(getattr(mem, attr))
+    peak_bytes = (mem_rec.get("argument_size_in_bytes", 0)
+                  + mem_rec.get("output_size_in_bytes", 0)
+                  + mem_rec.get("temp_size_in_bytes", 0)
+                  - mem_rec.get("alias_size_in_bytes", 0))
+
+    rec = {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_accessed,
+        "collective_bytes_per_chip": {k: coll[k] for k in COLLECTIVES},
+        "collective_counts": {k: coll[f"n_{k}"] for k in COLLECTIVES},
+        "wire_bytes_per_chip": wire,
+        **terms,
+        "dominant": dominant,
+        "memory": mem_rec,
+        "peak_bytes_per_chip": peak_bytes,
+        "fits_hbm": peak_bytes <= hw.HBM_PER_CHIP,
+        "chips": chips,
+    }
+    if model_flops_per_step:
+        useful = model_flops_per_step / chips       # per chip
+        rec["model_flops_per_chip"] = useful
+        rec["useful_flops_ratio"] = useful / max(flops, 1.0)
+    return rec
+
+
+def extrapolate(rec1: Dict, rec2: Dict, n_units: int,
+                mem_rec: Optional[Dict] = None) -> Dict:
+    """Linear unit-count extrapolation of two probe records (1 and 2 units):
+    cost(n) = cost(1) + (n-1)·(cost(2) - cost(1)). Layer stacks are
+    homogeneous, so per-unit cost is constant; the intercept captures
+    embed/readout/loss/optimizer fixed costs. Memory metrics come from the
+    rolled full-size compile (mem_rec)."""
+    out = dict(rec2)
+
+    def lin(a, b):
+        return a + (n_units - 1) * (b - a)
+
+    for k in ("hlo_flops_per_chip", "hlo_bytes_per_chip",
+              "wire_bytes_per_chip"):
+        out[k] = lin(rec1[k], rec2[k])
+    out["collective_bytes_per_chip"] = {
+        k: lin(rec1["collective_bytes_per_chip"][k],
+               rec2["collective_bytes_per_chip"][k])
+        for k in rec1["collective_bytes_per_chip"]}
+    out["collective_counts"] = {
+        k: int(lin(rec1["collective_counts"][k],
+                   rec2["collective_counts"][k]))
+        for k in rec1["collective_counts"]}
+    out["compute_s"] = out["hlo_flops_per_chip"] / hw.PEAK_FLOPS_BF16
+    out["memory_s"] = out["hlo_bytes_per_chip"] / hw.HBM_BW
+    out["collective_s"] = out["wire_bytes_per_chip"] / hw.ICI_BW
+    out["dominant"] = max(("compute_s", "memory_s", "collective_s"),
+                          key=lambda k: out[k])
+    if mem_rec is not None:
+        for k in ("memory", "peak_bytes_per_chip", "fits_hbm"):
+            out[k] = mem_rec[k]
+    out["extrapolated_from_probes"] = True
+    if out.get("model_flops_per_chip"):
+        out["useful_flops_ratio"] = (out["model_flops_per_chip"]
+                                     / max(out["hlo_flops_per_chip"], 1.0))
+    return out
+
+
+def model_flops(cfg, shape, train: bool = True,
+                db_concat: bool = False) -> float:
+    """MODEL_FLOPS = 6·N(_active)·D for training, 2·N·D for inference
+    (forward only), per step over the GLOBAL batch."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if db_concat:
+            tokens *= 2          # clean‖noisy concat doubles processed tokens
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def format_row(name: str, rec: Dict) -> str:
+    return (f"{name:48s} comp={rec['compute_s']*1e3:9.3f}ms "
+            f"mem={rec['memory_s']*1e3:9.3f}ms "
+            f"coll={rec['collective_s']*1e3:9.3f}ms "
+            f"dom={rec['dominant'][:-2]:10s} "
+            f"useful={rec.get('useful_flops_ratio', 0):6.3f} "
+            f"fits={rec['fits_hbm']}")

@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants (per chip) for the roofline terms."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link
+# 2D torus: 4 links/chip; a ring collective drives ~2 links concurrently
+# (one per direction). Documented assumption — see DESIGN.md §6.
+ICI_LINKS_EFFECTIVE = 2
+ICI_BW = ICI_BW_PER_LINK * ICI_LINKS_EFFECTIVE   # 100 GB/s per chip
+HBM_PER_CHIP = 16e9             # v5e: 16 GB

@@ -1,0 +1,85 @@
+"""Generate the EXPERIMENTS.md roofline table from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import Dict, List
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_t(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s*1e3:.1f}ms"
+    return f"{s*1e6:.0f}µs"
+
+
+def table(recs: List[Dict], multi_pod: bool = False) -> str:
+    rows = [r for r in recs if r.get("multi_pod") == multi_pod
+            and not r.get("skipped")]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    out = ["| arch | shape | compute | memory | collective | dominant | "
+           "useful FLOPs | coll. bytes/chip | peak GB/chip (CPU-lowered) | "
+           "analytic GB | fits |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        peak = r.get("peak_bytes_per_chip", 0) / 1e9
+        ana = r.get("analytic_min_bytes_per_chip", {}).get("total", 0) / 1e9
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_t(r['compute_s'])} "
+            f"| {fmt_t(r['memory_s'])} | {fmt_t(r['collective_s'])} "
+            f"| **{r['dominant'][:-2]}** "
+            f"| {r.get('useful_flops_ratio', 0):.3f} "
+            f"| {r['wire_bytes_per_chip']/1e6:.1f}MB "
+            f"| {peak:.1f} | {ana:.2f} "
+            f"| {'✓' if r.get('analytic_fits_hbm', r.get('fits_hbm')) else '✗'} |")
+    return "\n".join(out)
+
+
+def skipped(recs: List[Dict]) -> str:
+    out = []
+    for r in recs:
+        if r.get("skipped"):
+            out.append(f"- {r['arch']} × {r['shape']}: {r['reason']}")
+    return "\n".join(sorted(set(out)))
+
+
+def collective_breakdown(recs: List[Dict], top: int = 6) -> str:
+    rows = [r for r in recs if not r.get("skipped")
+            and not r.get("multi_pod")]
+    rows.sort(key=lambda r: -r["collective_s"])
+    out = ["| arch × shape | AG | AR | RS | A2A | CP |",
+           "|---|---|---|---|---|---|"]
+    for r in rows[:top]:
+        c = r["collective_bytes_per_chip"]
+        out.append(
+            f"| {r['arch']} × {r['shape']} "
+            f"| {c['all-gather']/1e6:.0f}MB | {c['all-reduce']/1e6:.0f}MB "
+            f"| {c['reduce-scatter']/1e6:.0f}MB | {c['all-to-all']/1e6:.0f}MB "
+            f"| {c['collective-permute']/1e6:.0f}MB |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(d)
+    print("## Single-pod (16×16) roofline\n")
+    print(table(recs, multi_pod=False))
+    print("\n## Multi-pod (2×16×16) compile proof\n")
+    print(table(recs, multi_pod=True))
+    print("\n## Skipped\n")
+    print(skipped(recs))
+    print("\n## Collective breakdown (most collective-bound)\n")
+    print(collective_breakdown(recs))

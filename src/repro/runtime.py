@@ -1,0 +1,20 @@
+"""Process-wide runtime knobs (env-driven; set by launch/dryrun.py).
+
+XLA's HLO cost analysis counts a while-loop body ONCE regardless of trip
+count, so the roofline dry-run sets REPRO_SCAN_UNROLL=1 to unroll layer /
+attention-tile / CE-chunk scans — the compiled module then carries the true
+FLOP/byte counts. Normal execution keeps scans rolled (small HLO, fast
+compile). REPRO_ATTN_CHUNK enlarges flash tiles in the dry-run to bound the
+unrolled tile count.
+"""
+from __future__ import annotations
+
+import os
+
+
+def scan_unroll() -> bool:
+    return os.environ.get("REPRO_SCAN_UNROLL", "0") == "1"
+
+
+def attn_chunk() -> int:
+    return int(os.environ.get("REPRO_ATTN_CHUNK", "1024"))

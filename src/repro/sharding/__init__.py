@@ -1,0 +1,3 @@
+from repro.sharding.rules import (batch_axes, cache_sharding,
+                                  param_shardings, replicated,
+                                  spec_for_axes, tokens_sharding)

@@ -1,0 +1,152 @@
+"""Logical-axis → mesh-axis sharding rules (megatron-style tensor parallel on
+the ``model`` axis; batch on ``data`` (and ``pod`` in the multi-pod
+data-parallel mode); DB block-parallel mode maps blocks to ``pod``).
+
+Parameters carry logical axis names from their ParamSpecs
+(repro.nn.init.logical_axes). A leaf is sharded on its FIRST dimension whose
+logical axis maps to ``model`` and whose size divides the mesh axis — flat
+projection dims (heads·hd, kv·hd, ff, vocab, experts) are all multiples of
+the 16-way model axis for every assigned architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axis
+LOGICAL_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "embed": None,        # d_model replicated (activations row-sharded on data)
+    "layers": None,
+    "inner": None,
+    None: None,
+}
+
+
+import os
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...], mesh: Mesh,
+                  shape: Optional[Tuple[int, ...]] = None,
+                  max_shards: int = 1) -> P:
+    """One sharded dim per param (tensor-parallel), rest replicated.
+
+    Divisibility-aware: if the preferred dim does not divide the model axis
+    (e.g. grok's 8 experts on a 16-way axis), the NEXT shardable dim is used
+    instead of silently replicating — found via the baseline roofline (§Perf
+    P4: grok's 309 B expert params were fully replicated)."""
+    model_size = mesh.shape.get("model", 1)
+    if os.environ.get("REPRO_NO_TP", "0") == "1":
+        return P(*([None] * len(axes)))
+    parts: list = [None] * len(axes)
+    used = 0
+    for i, ax in enumerate(axes):
+        if used >= max_shards:
+            break
+        if LOGICAL_RULES.get(ax, None) != "model":
+            continue
+        if shape is not None and shape[i] % model_size != 0:
+            continue                      # try the next shardable dim
+        parts[i] = "model"
+        used += 1
+    return P(*parts)
+
+
+def param_shardings(axes_tree: Any, mesh: Mesh, shapes_tree: Any = None):
+    """NamedSharding tree matching a params tree (shapes enable the
+    divisibility-aware dim selection)."""
+
+    def one(axes, shape=None):
+        return NamedSharding(mesh, spec_for_axes(axes, mesh, shape))
+
+    if shapes_tree is None:
+        return jax.tree_util.tree_map(
+            one, axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda a, s: one(a, s.shape), axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def zero1_shardings(axes_tree: Any, mesh: Mesh, shapes_tree: Any):
+    """ZeRO-1-style optimizer-state sharding (beyond-paper §Perf P1): in
+    addition to the tensor-parallel dim, shard the FIRST remaining divisible
+    dim over ``data``. Grad reduction then lowers to reduce-scatter +
+    all-gather instead of all-reduce, and optimizer memory drops by the data
+    axis size."""
+    data_size = mesh.shape.get("data", 1)
+
+    def one(axes, s):
+        base = spec_for_axes(axes, mesh, s.shape)
+        parts = list(base) + [None] * (len(s.shape) - len(base))
+        for i, dim in enumerate(s.shape):
+            if parts[i] is None and dim % data_size == 0 and dim >= data_size:
+                parts[i] = "data"
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(
+        one, axes_tree, shapes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the batch dimension (data-parallel).
+
+    With REPRO_NO_TP=1 (pure data-parallel mode for sub-1B models, §Perf P3)
+    the model axis would otherwise idle — fold it into the batch sharding."""
+    axes = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if os.environ.get("REPRO_NO_TP", "0") == "1" and "model" in mesh.shape:
+        axes = axes + ("model",)
+    return axes
+
+
+def tokens_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch % n != 0:
+        # small-batch decode: try data only, else replicate
+        if batch % mesh.shape["data"] == 0:
+            return NamedSharding(mesh, P("data"))
+        return NamedSharding(mesh, P(None))
+    return NamedSharding(mesh, P(axes))
+
+
+def cache_sharding(mesh: Mesh, cache_tree: Any, batch: int):
+    """KV caches / SSM states: stacked (units, B, seqlen-or-state...).
+    Batch → data(+pod) when divisible; otherwise the cache SEQUENCE dim is
+    sharded on data (sequence parallelism for long_500k batch=1); kv-head or
+    head dims go to model when divisible."""
+    model = mesh.shape.get("model", 1)
+    baxes = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in baxes]))
+    data = mesh.shape["data"]
+
+    def one(x):
+        shape = x.shape
+        parts: list = [None] * len(shape)
+        # dim 0 = units (replicated); dim 1 = batch
+        if len(shape) >= 2:
+            if shape[1] % nb == 0:
+                parts[1] = baxes
+            elif shape[1] % data == 0:
+                parts[1] = "data"
+            elif len(shape) >= 3 and shape[2] % data == 0:
+                parts[2] = "data"            # sequence-parallel cache
+        # shard a later dim (kv heads / head_dim / state) on model
+        for i in range(2, len(shape)):
+            if parts[i] is None and shape[i] % model == 0 and shape[i] >= model:
+                parts[i] = "model"
+                break
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(one, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

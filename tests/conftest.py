@@ -1,0 +1,24 @@
+import os
+import sys
+
+# keep tests on 1 real device (the dry-run subprocess sets its own count)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def assert_close(a, b, atol=2e-4, rtol=2e-4, msg=""):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               atol=atol, rtol=rtol, err_msg=msg)

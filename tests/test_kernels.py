@@ -1,0 +1,95 @@
+"""Pallas kernel sweeps: every kernel × shapes × dtypes vs the pure-jnp
+oracle (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.edm_loss import edm_loss
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_adaln import (fused_euler, fused_gate_residual,
+                                       fused_ln_modulate)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,KV,Sq,Sk,hd", [
+    (1, 2, 2, 64, 64, 32),
+    (2, 4, 2, 128, 128, 64),     # GQA
+    (1, 4, 1, 96, 200, 32),      # MQA, ragged (padding path)
+    (2, 2, 2, 256, 256, 128),    # MXU-aligned
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+def test_flash_attention_sweep(B, H, KV, Sq, Sk, hd, dtype, causal, window):
+    if not causal and window is not None:
+        pytest.skip("window implies causal")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (B, H, Sq, hd), dtype)
+    k = jax.random.normal(k2, (B, KV, Sk, hd), dtype)
+    v = jax.random.normal(k3, (B, KV, Sk, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    expect = ref.mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,d", [(1, 64, 128), (2, 100, 256), (3, 513, 64)])
+def test_fused_ln_modulate_sweep(B, S, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(k1, (B, S, d), dtype)
+    sc = (0.1 * jax.random.normal(k2, (B, d))).astype(dtype)
+    sh = (0.1 * jax.random.normal(k3, (B, d))).astype(dtype)
+    out = fused_ln_modulate(x, sc, sh, block_rows=64, interpret=True)
+    expect = ref.ln_modulate_reference(x, sc, sh)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,d", [(2, 64, 128), (1, 257, 64)])
+def test_fused_gate_residual_sweep(B, S, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    r = jax.random.normal(k1, (B, S, d), dtype)
+    br = jax.random.normal(k2, (B, S, d), dtype)
+    g = (0.1 * jax.random.normal(k3, (B, d))).astype(dtype)
+    out = fused_gate_residual(r, br, g, block_rows=64, interpret=True)
+    expect = ref.gate_residual_reference(r, br, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,S,d", [(2, 64, 128), (1, 130, 64)])
+def test_fused_euler_sweep(B, S, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    z = jax.random.normal(k1, (B, S, d), dtype)
+    f = jax.random.normal(k2, (B, S, d), dtype)
+    sig = jnp.linspace(0.5, 3.0, B)
+    sig2 = sig * 0.3
+    out = fused_euler(z, f, sig, sig2, 0.5, block_rows=64, interpret=True)
+    expect = ref.euler_reference(z, f, sig, sig2, 0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,S,d", [(2, 64, 128), (1, 300, 64)])
+def test_edm_loss_sweep(B, S, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(4), 3)
+    f = jax.random.normal(k1, (B, S, d), dtype)
+    z = jax.random.normal(k2, (B, S, d), dtype)
+    y = jax.random.normal(k3, (B, S, d), dtype)
+    sig = jnp.linspace(0.3, 2.0, B)
+    out = edm_loss(f, z, y, sig, 0.5, interpret=True)
+    expect = ref.edm_loss_reference(f, z, y, sig, 0.5)
+    np.testing.assert_allclose(float(out), float(expect), rtol=1e-5)

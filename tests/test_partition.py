@@ -1,0 +1,148 @@
+"""Property tests (hypothesis) for the paper's partitioning math (§3.3) and
+the EDM machinery (§2.1 / App. C)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DBConfig
+from repro.core import edm
+from repro.core import partition as P
+
+db_configs = st.builds(
+    DBConfig,
+    num_blocks=st.integers(1, 12),
+    p_mean=st.floats(-2.0, 1.0),
+    p_std=st.floats(0.5, 2.0),
+    sigma_min=st.floats(1e-3, 0.05),
+    sigma_max=st.floats(10.0, 200.0),
+    overlap_gamma=st.floats(0.0, 0.2),
+)
+
+
+@settings(deadline=None, max_examples=60)
+@given(db_configs)
+def test_equiprob_edges_monotone_and_bounded(db):
+    edges = P.sigma_edges(db)
+    assert len(edges) == db.num_blocks + 1
+    assert np.all(np.diff(edges) < 0), "edges must descend"
+    assert edges[0] == pytest.approx(db.sigma_max)
+    assert edges[-1] == pytest.approx(db.sigma_min)
+
+
+@settings(deadline=None, max_examples=60)
+@given(db_configs)
+def test_equiprob_equal_mass(db):
+    """Paper §3.3: every block carries exactly 1/B of the truncated
+    p_noise mass."""
+    for b in range(db.num_blocks):
+        assert P.block_mass(db, b) == pytest.approx(1.0 / db.num_blocks,
+                                                    rel=1e-6)
+
+
+@settings(deadline=None, max_examples=40)
+@given(db_configs)
+def test_overlap_expands_range(db):
+    for b in range(db.num_blocks):
+        lo0, hi0 = P.block_sigma_range(db, b, with_overlap=False)
+        lo1, hi1 = P.block_sigma_range(db, b, with_overlap=True)
+        assert lo1 <= lo0 * (1 + 1e-9) and hi1 >= hi0 * (1 - 1e-9)
+        assert lo1 >= db.sigma_min * (1 - 1e-9)
+        assert hi1 <= db.sigma_max * (1 + 1e-9)
+
+
+@settings(deadline=None, max_examples=40)
+@given(db_configs, st.integers(2, 100))
+def test_sampling_schedule(db, n):
+    sched = P.sampling_schedule(db, n)
+    assert len(sched) == n + 1
+    assert sched[0] == pytest.approx(db.sigma_max)
+    assert sched[-1] == 0.0
+    assert np.all(np.diff(sched) < 0)
+    # every non-final step maps to a valid block
+    for s in sched[:-1]:
+        b = P.block_of_sigma(db, float(s))
+        assert 0 <= b < db.num_blocks
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_unit_ranges_cover(n_units, B):
+    if B > n_units:
+        B = n_units
+    ranges = P.unit_ranges(n_units, B)
+    assert ranges[0][0] == 0
+    total = 0
+    for i, (s, z) in enumerate(ranges):
+        assert z >= 1
+        assert s == total
+        total += z
+    assert total == n_units
+
+
+def test_unit_ranges_custom_distribution():
+    assert P.unit_ranges(12, 3, [2, 4, 6]) == [(0, 2), (2, 4), (6, 6)]
+    with pytest.raises(AssertionError):
+        P.unit_ranges(12, 3, [2, 4, 5])
+
+
+@settings(deadline=None, max_examples=40)
+@given(st.floats(0.003, 70.0))
+def test_preconditioning_identities(sigma):
+    """EDM identities: c_skip² + (c_out/σ_data·σ... and w(σ)·c_out² ≡ 1."""
+    sd = 0.5
+    c_skip, c_out, c_in, c_noise = edm.preconditioning(jnp.float32(sigma), sd)
+    w = edm.weighting(jnp.float32(sigma), sd)
+    assert float(w * c_out ** 2) == pytest.approx(1.0, rel=1e-4)
+    # c_in normalizes input variance: (σ² + σ_d²)·c_in² == 1
+    assert float((sigma ** 2 + sd ** 2) * c_in ** 2) == pytest.approx(
+        1.0, rel=1e-4)
+    assert float(c_noise) == pytest.approx(np.log(sigma) / 4, rel=1e-3,
+                                           abs=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(db_configs)
+def test_sigma_sampling_within_block_range(db):
+    rng = jax.random.PRNGKey(0)
+    for b in range(db.num_blocks):
+        q_lo, q_hi = P.block_qrange(db, b)
+        s = edm.sample_sigma_in_qrange(rng, (512,), db, q_lo, q_hi)
+        lo, hi = P.block_sigma_range(db, b)
+        assert float(jnp.min(s)) >= lo * 0.999
+        assert float(jnp.max(s)) <= hi * 1.001
+
+
+def test_block_of_sigma_consistent_with_edges():
+    db = DBConfig(num_blocks=4)
+    edges = P.sigma_edges(db)
+    for b in range(4):
+        mid = np.sqrt(edges[b] * edges[b + 1])   # geometric midpoint
+        assert P.block_of_sigma(db, mid) == b
+
+
+def test_euler_step_reaches_denoiser_at_zero():
+    z = jnp.ones((2, 3))
+    d = jnp.full((2, 3), 5.0)
+    out = edm.euler_step(z, d, 1.0, 0.0)
+    np.testing.assert_allclose(np.asarray(out), 5.0)
+
+
+def test_euler_chain_gaussian_analytic():
+    """For y ~ N(0, σ_d² I) the optimal denoiser is D(z,σ) = c_skip·z·...
+    = σ_d²/(σ_d²+σ²) z. Integrating the PF-ODE from σ_max with that D must
+    map N(0, σ_max²+σ_d²) samples to N(0, σ_d²)."""
+    sd = 0.5
+    db = DBConfig(num_blocks=3, sigma_data=sd)
+    sched = P.sampling_schedule(db, 200)
+    rng = jax.random.PRNGKey(1)
+    n = 20000
+    z = jnp.sqrt(db.sigma_max ** 2 + sd ** 2) * jax.random.normal(rng, (n,))
+    for i in range(len(sched) - 1):
+        s_from, s_to = float(sched[i]), float(sched[i + 1])
+        d_hat = (sd ** 2 / (sd ** 2 + s_from ** 2)) * z
+        z = edm.euler_step(z, d_hat, s_from, s_to) if s_to > 0 else d_hat
+    std = float(jnp.std(z))
+    assert abs(std - sd) / sd < 0.05, std

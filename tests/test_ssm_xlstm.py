@@ -1,0 +1,119 @@
+"""Recurrent substrates: Mamba2 chunked-SSD and xLSTM equivalences +
+DB two-pass causal-consistency properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SSMConfig, XLSTMConfig
+from repro.nn import init as I
+from repro.nn import ssm as S
+from repro.nn import xlstm as X
+
+
+@pytest.fixture
+def mamba():
+    d = 64
+    cfg = SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=16, chunk_size=8)
+    params = I.init_params(jax.random.PRNGKey(0), S.mamba2_spec(d, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, d))
+    return d, cfg, params, x
+
+
+def test_mamba_chunked_matches_stepwise(mamba):
+    d, cfg, p, x = mamba
+    y_full, st_f = S.mamba2_fwd(p, x, cfg, d)
+    st = S.mamba2_init_state(2, cfg, d)
+    ys = []
+    for t in range(x.shape[1]):
+        y, st = S.mamba2_decode_step(p, x[:, t:t + 1], cfg, d, st)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st["h"]), np.asarray(st_f["h"]),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 64])
+def test_mamba_chunk_size_invariance(mamba, chunk):
+    import dataclasses
+    d, cfg, p, x = mamba
+    y1, _ = S.mamba2_fwd(p, x, cfg, d)
+    y2, _ = S.mamba2_fwd(p, x, dataclasses.replace(cfg, chunk_size=chunk), d)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+
+def test_mamba_two_pass_identity_and_causality(mamba):
+    d, cfg, p, x = mamba
+    y_full, _ = S.mamba2_fwd(p, x, cfg, d)
+    yc, yn = S.mamba2_two_pass(p, x, x, cfg, d)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(y_full), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(yn), np.asarray(y_full), atol=1e-4)
+    # causality: noisy output at t depends only on clean tokens < t
+    xn = x + 0.3
+    _, yn1 = S.mamba2_two_pass(p, x, xn, cfg, d)
+    x2 = x.at[:, 20:].set(0.0)
+    _, yn2 = S.mamba2_two_pass(p, x2, xn, cfg, d)
+    np.testing.assert_allclose(np.asarray(yn1[:, :20]),
+                               np.asarray(yn2[:, :20]), atol=1e-5)
+    assert float(jnp.max(jnp.abs(yn1[:, 21:] - yn2[:, 21:]))) > 1e-3
+
+
+@pytest.fixture
+def mlstm():
+    d, H = 64, 4
+    cfg = XLSTMConfig()
+    params = I.init_params(jax.random.PRNGKey(0), X.mlstm_spec(d, H, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 37, d))
+    return d, H, cfg, params, x
+
+
+def test_mlstm_parallel_chunked_recurrent_agree(mlstm):
+    d, H, cfg, p, x = mlstm
+    q, k, v, li, lf, z = X._mlstm_project(p, x, H)
+    y_par = X._mlstm_parallel(q, k, v, li, lf)
+    y_chk, _ = X._mlstm_chunked(q, k, v, li, lf, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_chk),
+                               atol=5e-5)
+    st = X.mlstm_init_state(2, H, q.shape[2] * q.shape[3])
+    ys = []
+    for t in range(x.shape[1]):
+        st, y = X._mlstm_recurrent_step(st, q[:, t], k[:, t], v[:, t],
+                                        li[:, t], lf[:, t])
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)),
+                               np.asarray(y_par), atol=5e-5)
+
+
+def test_mlstm_two_pass_identity(mlstm):
+    d, H, cfg, p, x = mlstm
+    y, _ = X.mlstm_fwd(p, x, H, cfg)
+    oc, on = X.mlstm_two_pass(p, x, x, H, cfg)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(y), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(y), atol=1e-4)
+
+
+def test_slstm_fwd_matches_decode():
+    d, H = 64, 4
+    cfg = XLSTMConfig()
+    p = I.init_params(jax.random.PRNGKey(0), X.slstm_spec(d, H, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d))
+    y, _ = X.slstm_fwd(p, x, H, cfg)
+    st = X.slstm_init_state(2, H, d)
+    ys = []
+    for t in range(24):
+        yt, st = X.slstm_decode_step(p, x[:, t:t + 1], H, cfg, st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y), atol=2e-5)
+
+
+def test_slstm_two_pass_identity():
+    d, H = 64, 4
+    cfg = XLSTMConfig()
+    p = I.init_params(jax.random.PRNGKey(0), X.slstm_spec(d, H, cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, d))
+    y, _ = X.slstm_fwd(p, x, H, cfg)
+    oc, on = X.slstm_two_pass(p, x, x, H, cfg)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(y), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(y), atol=1e-5)
