@@ -1,0 +1,68 @@
+"""Block-parallel training demo: every DiffusionBlocks block advances
+concurrently on its own ``pod`` mesh group — the paper's gradient isolation
+(§3) turned into wall-clock speedup instead of just memory savings.
+
+    PYTHONPATH=src python examples/block_parallel_train.py
+
+The script forces 8 virtual CPU devices so the shard_map path (pod=4 ×
+data=2) runs anywhere; on real hardware drop the XLA_FLAGS line and give
+each block a TPU/GPU pod group. With fewer devices than blocks the trainer
+degrades to the round-robin schedule — same losses, no parallelism.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax                                                         # noqa: E402
+import jax.numpy as jnp                                            # noqa: E402
+import numpy as np                                                 # noqa: E402
+
+from repro.configs import DBConfig                                 # noqa: E402
+from repro.configs.base import ModelConfig, TrainConfig            # noqa: E402
+from repro.core import DiffusionBlocksModel                        # noqa: E402
+from repro.data import MarkovLM                                    # noqa: E402
+from repro.parallel import BlockParallelTrainer                    # noqa: E402
+
+
+def main():
+    # paper §5.4-style AR setup, B=4 blocks, reduced dims for CPU
+    cfg = ModelConfig(name="bp-demo", family="dense", n_layers=8,
+                      d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                      vocab_size=32)
+    db = DBConfig(num_blocks=4, overlap_gamma=0.1)
+    dbm = DiffusionBlocksModel(cfg, db)
+    print(f"devices={jax.device_count()} blocks={db.num_blocks} "
+          f"unit ranges={dbm.ranges}")
+
+    lm = MarkovLM(vocab_size=32, branching=2, seed=5)
+
+    def data():
+        rng = np.random.RandomState(1)
+        while True:
+            yield jnp.asarray(lm.sample(rng, 16, 64))
+
+    # tcfg.steps = TOTAL per-block updates; the trainer runs steps/B batches,
+    # each advancing all four blocks in one jitted shard_map call.
+    tcfg = TrainConfig(steps=160, lr=2e-3, warmup_steps=4, log_every=10)
+    trainer = BlockParallelTrainer(dbm, tcfg,
+                                   periphery="replicate+psum-mean")
+    print(f"mode={trainer.mode}"
+          + (f" mesh={dict(trainer.mesh.shape)}" if trainer.mesh else ""))
+
+    params, hist = trainer.train(data(), jax.random.PRNGKey(0),
+                                 ckpt_dir="/tmp/repro_blockpar_ckpt")
+    for b in range(db.num_blocks):
+        ls = [l for _, blk, l in hist if blk == b]
+        print(f"block {b}: first-loss={ls[0]:.3f} last-loss={ls[-1]:.3f}")
+    print("per-block checkpoints written to /tmp/repro_blockpar_ckpt "
+          "(block_XX.npz + block_XX.opt.npz + periphery.opt.npz)")
+
+    # the assembled full model generates exactly like the sequential one
+    from repro.launch.serve import generate
+    prompts = jnp.asarray(lm.sample(np.random.RandomState(2), 2, 8))
+    out = generate(dbm, params, prompts, max_new=16)
+    print("legal-transition rate:", lm.transition_accuracy(np.array(out)))
+
+
+if __name__ == "__main__":
+    main()

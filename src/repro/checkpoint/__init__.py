@@ -1,2 +1,3 @@
-from repro.checkpoint.ckpt import (load_blocks, load_metadata, load_pytree,
-                                   save_block, save_pytree)
+from repro.checkpoint.ckpt import (load_block_opt, load_blocks, load_metadata,
+                                   load_pytree, save_block, save_block_opt,
+                                   save_pytree)

@@ -76,6 +76,22 @@ def save_block(ckpt_dir: str, params, block: int, start: int, size: int,
     return path
 
 
+def save_block_opt(ckpt_dir: str, block: int, opt_state, step: int = 0) -> str:
+    """Save one block's optimizer state (AdamW moments + step) — written by
+    the block-parallel trainer so each pod's block resumes independently."""
+    path = os.path.join(ckpt_dir, f"block_{block:02d}.opt.npz")
+    save_pytree(path, opt_state, {"block": block, "step": step})
+    return path
+
+
+def load_block_opt(ckpt_dir: str, block: int, template) -> Optional[Any]:
+    """Restore one block's optimizer state; None when absent (fresh init)."""
+    path = os.path.join(ckpt_dir, f"block_{block:02d}.opt.npz")
+    if not os.path.exists(path):
+        return None
+    return load_pytree(path, template)
+
+
 def load_blocks(ckpt_dir: str, params_template, ranges) -> Any:
     """Assemble a full model from per-block checkpoints (shared periphery is
     taken from the highest-numbered block present)."""

@@ -122,16 +122,26 @@ class DiffusionBlocksModel:
     # ------------------------------------------------------------------
     def block_loss(self, params, b: int, tokens: jax.Array, rng,
                    aux_inputs=None, impl: str = "auto",
-                   unit_range: Optional[Tuple[int, int]] = None
+                   unit_range: Optional[Tuple[int, int]] = None,
+                   sigma_qrange: Optional[Tuple] = None
                    ) -> Tuple[jax.Array, Dict]:
         """Paper Eq. (6) for the AR adapter: noisy slot i carries
         z_i = emb(x_i) + σ ε, conditioned on clean x_{<i}; the block denoises
         it and CE is taken through the readout. σ ~ p_noise restricted to
-        block b's (overlap-expanded) range, one σ per example."""
+        block b's (overlap-expanded) range, one σ per example.
+
+        ``sigma_qrange`` overrides the block-derived (q_lo, q_hi) noise range
+        with (possibly traced) values — the block-parallel engine trains all
+        blocks in one program, so the range must be data, not a constant."""
         Bsz, S = tokens.shape
         start, size = unit_range if unit_range is not None else self.ranges[b]
         r_sig, r_eps = jax.random.split(rng)
-        sigma = self.sample_block_sigma(r_sig, (Bsz, 1, 1), b)
+        if sigma_qrange is not None:
+            q_lo, q_hi = sigma_qrange
+            sigma = edm.sample_sigma_in_qrange(r_sig, (Bsz, 1, 1), self.db,
+                                               q_lo, q_hi)
+        else:
+            sigma = self.sample_block_sigma(r_sig, (Bsz, 1, 1), b)
 
         table = self.model.embedding_table(params)
         emb_clean = table[tokens]

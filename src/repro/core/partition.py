@@ -65,6 +65,14 @@ def block_qrange(db: DBConfig, b: int,
     return float(q_of_sigma(lo, db)), float(q_of_sigma(hi, db))
 
 
+def block_qranges(db: DBConfig, with_overlap: bool = True) -> np.ndarray:
+    """(B, 2) float32 rows of (q_lo, q_hi) per block — the array form of
+    ``block_qrange`` consumed by the block-parallel engine, where the block
+    index is data (a scanned/sharded axis) rather than a Python constant."""
+    return np.asarray([block_qrange(db, b, with_overlap)
+                       for b in range(db.num_blocks)], np.float32)
+
+
 def block_mass(db: DBConfig, b: int) -> float:
     """Probability mass of p_noise in block b's (non-overlapped) range,
     normalized to the truncated support."""

@@ -118,9 +118,26 @@ def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,
 
 
 def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
-             rng, params=None, log=print, aux_fn=None):
+             rng, params=None, log=print, aux_fn=None, parallel=None,
+             periphery: str = "replicate+psum-mean"):
     """Block-cycling single-host training driver (paper Fig. 3 right):
-    each iteration samples a block uniformly and trains only it."""
+    each iteration samples a block uniformly and trains only it.
+
+    ``parallel="blocks"`` routes to ``repro.parallel``: ALL blocks advance
+    concurrently (one pod group per block when the host has the devices,
+    round-robin otherwise), with the shared periphery reconciled by the
+    ``periphery`` sync policy. ``tcfg.steps`` stays the total budget of
+    per-block updates in both modes, so histories are comparable."""
+    if parallel == "blocks":
+        if aux_fn is not None:
+            raise NotImplementedError(
+                "aux_fn (modality conditioning) is not supported by the "
+                "block-parallel engine yet; use the sequential path")
+        from repro.parallel import train_db_parallel
+        return train_db_parallel(dbm, tcfg, data_iter, rng, params=params,
+                                 log=log, periphery=periphery)
+    if parallel not in (None, "none"):
+        raise ValueError(f"unknown parallel mode {parallel!r}")
     rng, r0 = jax.random.split(rng)
     if params is None:
         params = dbm.init(r0)

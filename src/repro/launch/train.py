@@ -6,11 +6,11 @@ Wires the mesh + sharding rules into the DiffusionBlocks training loop:
     step trains one uniformly-sampled block; gradients/optimizer exist for
     L/B units only.
   * --mode e2e: end-to-end backprop baseline.
-  * --block-parallel (multi-pod concept): every pod trains a DIFFERENT block
-    concurrently. Blocks share zero gradients, so the pod axis carries no
-    optimizer collectives; per-block checkpoints (repro.checkpoint) are the
-    merge points. On this single-process container the flag partitions the
-    step sequence round-robin to emulate the schedule.
+  * --block-parallel: every pod trains a DIFFERENT block concurrently via
+    repro.parallel — blocks share zero gradients, so the pod axis carries no
+    optimizer collectives; the shared periphery is reconciled by --periphery
+    and per-block checkpoints (repro.checkpoint) are the merge points. With
+    fewer devices than blocks the engine degrades to the round-robin scan.
 
 Runs on real local devices (CPU dev: 1 device; tests use
 --xla_force_host_platform_device_count to exercise sharding).
@@ -50,6 +50,10 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--block-parallel", action="store_true")
+    ap.add_argument("--periphery", default="replicate+psum-mean",
+                    help="periphery sync policy for --block-parallel "
+                         "(replicate+psum-mean | owner-broadcast | "
+                         "freeze-after-warmup)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -91,6 +95,19 @@ def main():
             if it % 10 == 0:
                 print(f"[e2e] it={it} loss={float(loss):.4f} "
                       f"dt={time.time()-t0:.3f}s")
+    elif args.block_parallel:
+        # the real thing (repro.parallel): all blocks advance concurrently on
+        # a pod-per-block mesh when the devices exist, round-robin otherwise
+        if args.model_parallel > 1:
+            raise SystemExit(
+                "--block-parallel builds its own (pod, data) mesh and does "
+                "not compose with --model-parallel yet; drop one of the two")
+        from repro.parallel import BlockParallelTrainer
+        trainer = BlockParallelTrainer(dbm, tcfg, periphery=args.periphery)
+        print(f"block-parallel mode={trainer.mode}"
+              + (f" mesh={dict(trainer.mesh.shape)}" if trainer.mesh else ""))
+        params, _ = trainer.train(data, rng, params=params,
+                                  ckpt_dir=args.ckpt_dir or None)
     else:
         steppers, opts = [], []
         for b in range(db.num_blocks):
@@ -99,10 +116,7 @@ def main():
             opts.append(io(params))
         for it in range(args.steps):
             rng, rb, rs = jax.random.split(rng, 3)
-            if args.block_parallel:
-                b = it % db.num_blocks          # round-robin pod schedule
-            else:
-                b = int(jax.random.randint(rb, (), 0, db.num_blocks))
+            b = int(jax.random.randint(rb, (), 0, db.num_blocks))
             t0 = time.time()
             params, opts[b], loss, m = steppers[b](params, opts[b],
                                                    next(data), rs, None)

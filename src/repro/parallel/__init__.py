@@ -1,0 +1,8 @@
+# Block-parallel training: the paper's B× memory story turned into a B×
+# throughput story — every gradient-isolated block advances concurrently on
+# its own ``pod`` mesh group (see engine.py for the periphery sync policies).
+from repro.parallel.engine import (PERIPHERY_POLICIES, BlockParallelTrainer,
+                                   train_db_parallel)
+from repro.parallel.state import (BlockParallelState, block_view,
+                                  merge_params, split_periphery,
+                                  stack_block_views, uniform_block_size)

@@ -1,0 +1,82 @@
+"""Block-parallel training state: every block's unit slice, stacked.
+
+Layout (``BlockParallelState``):
+
+  stacks      {stack_key: tree}; each leaf is (B, u, ...) — block b's unit
+              slice at index b along the leading axis (u = units per block).
+              Built from the full params with ``extract_block_view`` (the
+              same machinery the sequential trainer slices with), so block b
+              of the stack IS the view ``make_db_train_step(dbm, b)`` trains.
+  periph      the shared periphery (embeddings / readout / final norm /
+              σ-conditioning): ONE copy, kept replicated across pods by the
+              engine's sync policy.
+  stack_opt   AdamW state for the stacked views; leaves carry the same
+              leading (B, ...) block axis (independent moments per block).
+  periph_opt  AdamW state for the single periphery copy.
+
+The stacked form requires equal block sizes (``unit_ranges`` default when
+B | n_units — true for every paper config); ``stack_block_views`` raises
+``ValueError`` otherwise — catch it and use the sequential ``train_db`` path
+for non-uniform partitions.
+"""
+from __future__ import annotations
+
+from typing import Any, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.training import (STACK_KEYS, extract_block_view,
+                                 write_back_block_view)
+
+
+class BlockParallelState(NamedTuple):
+    stacks: Any
+    periph: Any
+    stack_opt: Any
+    periph_opt: Any
+
+
+def split_periphery(params: dict) -> Tuple[dict, dict]:
+    """(stacks, periphery) partition of a full params tree."""
+    stacks = {k: v for k, v in params.items() if k in STACK_KEYS}
+    periph = {k: v for k, v in params.items() if k not in STACK_KEYS}
+    return stacks, periph
+
+
+def uniform_block_size(ranges: List[Tuple[int, int]]) -> int:
+    sizes = {s for _, s in ranges}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"block-parallel training needs equal-sized blocks, got unit "
+            f"ranges {ranges}; use sequential train_db or pass a uniform "
+            f"``distribution``")
+    return sizes.pop()
+
+
+def stack_block_views(params: dict, ranges: List[Tuple[int, int]]) -> dict:
+    """Stack every block's unit slice into (B, u, ...) leaves."""
+    uniform_block_size(ranges)
+    per_block = []
+    for start, size in ranges:
+        view = extract_block_view(params, start, size)
+        per_block.append({k: view[k] for k in view if k in STACK_KEYS})
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_block)
+
+
+def block_view(stacks: dict, periph: dict, b) -> dict:
+    """Reassemble block b's training view (what ``block_loss`` applies)."""
+    one = jax.tree_util.tree_map(lambda x: x[b], stacks)
+    return {**periph, **one}
+
+
+def merge_params(params_template: dict, stacks: dict, periph: dict,
+                 ranges: List[Tuple[int, int]]) -> dict:
+    """Write every block's stacked slice + the shared periphery back into a
+    full params tree (inverse of ``stack_block_views``, via the sequential
+    trainer's ``write_back_block_view``)."""
+    params = params_template
+    for b, (start, size) in enumerate(ranges):
+        params = write_back_block_view(params, block_view(stacks, periph, b),
+                                       start)
+    return params

@@ -1,3 +1,4 @@
-from repro.sharding.rules import (batch_axes, cache_sharding,
-                                  param_shardings, replicated,
-                                  spec_for_axes, tokens_sharding)
+from repro.sharding.rules import (BLOCK_AXIS, batch_axes, block_parallel_mesh,
+                                  block_state_specs, cache_sharding,
+                                  param_shardings, replicated, spec_for_axes,
+                                  tokens_sharding)

@@ -150,3 +150,37 @@ def cache_sharding(mesh: Mesh, cache_tree: Any, batch: int):
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# DiffusionBlocks block-parallel mode (repro.parallel)
+# ---------------------------------------------------------------------------
+# Blocks are gradient-isolated (paper §3), so the ``pod`` axis carries one
+# block per pod group with ZERO optimizer collectives across it — the only
+# cross-pod traffic is the periphery sync chosen by the trainer's policy.
+BLOCK_AXIS = "pod"
+
+
+def block_parallel_mesh(num_blocks: int, devices=None) -> Optional[Mesh]:
+    """(pod=num_blocks, data=n//num_blocks) mesh over the first pod·data
+    devices, or ``None`` when the host cannot give every block its own pod
+    group — the trainer then degrades to the round-robin schedule."""
+    devices = list(jax.devices() if devices is None else devices)
+    if num_blocks < 1 or len(devices) < num_blocks:
+        return None
+    data = len(devices) // num_blocks
+    grid = np.asarray(devices[:num_blocks * data],
+                      dtype=object).reshape(num_blocks, data)
+    return Mesh(grid, (BLOCK_AXIS, "data"))
+
+
+def block_state_specs() -> dict:
+    """PartitionSpecs for the block-parallel training state: leaves stacked
+    over the leading block axis shard on ``pod``; the shared periphery (and
+    its optimizer state) is replicated; tokens are batch-sharded on ``data``
+    and replicated across pods (every block trains on the full batch)."""
+    return {
+        "stacked": P(BLOCK_AXIS),
+        "replicated": P(),
+        "tokens": P("data"),
+    }

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import adamw, apply_updates, global_norm, warmup_cosine

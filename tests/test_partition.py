@@ -2,6 +2,8 @@
 the EDM machinery (§2.1 / App. C)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 import jax
