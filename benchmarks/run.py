@@ -25,7 +25,8 @@ def main() -> None:
     from benchmarks import (table1_vit, table2_dit, table3_mdm, table4_ar,
                             table5_recurrent, table6_noprop,
                             table7_partitioning, table8_blockcount,
-                            table12_walltime, table13_blockparallel)
+                            table12_walltime, table13_blockparallel,
+                            table14_kernel_grads)
     from benchmarks.common import emit
 
     tables = {
@@ -39,6 +40,7 @@ def main() -> None:
         "table8_blockcount": table8_blockcount.run,
         "table12_walltime_memory": table12_walltime.run,
         "table13_blockparallel_walltime": table13_blockparallel.run,
+        "table14_kernel_grads": table14_kernel_grads.run,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

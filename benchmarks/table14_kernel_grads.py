@@ -1,0 +1,197 @@
+"""Table 14 (beyond-paper): fwd+bwd micro-benchmark of the custom-VJP Pallas
+kernels vs the reference autodiff path (``jax.grad`` of ``kernels/ref.py``).
+
+Two measurements per kernel, both on the current backend:
+
+  walltime   mean fwd+bwd step time. On TPU the Pallas path is the compiled
+             Mosaic kernel; on the CPU dev container it runs in INTERPRET
+             mode (per-tile emulation), whose dispatch overhead dominates —
+             walltime there characterizes the oracle, not the hardware path.
+  bytes      ``compile().memory_analysis()`` temp bytes of the jitted
+             fwd+bwd program — a MEASURED property of the compiled program
+             on every backend. This is where the fused backward pays off:
+             the custom VJP stores only (q, k, v, o, lse) and recomputes
+             score tiles, while reference autodiff saves the (Sq, Sk)
+             softmax (attention) / the broadcast intermediates (elementwise)
+             as residuals. On bandwidth-bound accelerators bytes ≈ time.
+
+Before this PR the comparison could not be run at all: differentiating
+through ``pallas_call`` raises (no autodiff rule) — the kernels were
+forward-only demos.
+
+Writes ``BENCH_kernels.json`` at the repo root. ``--quick`` shrinks shapes
+and reps for the CI smoke lane.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.edm_loss import edm_loss
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.fused_adaln import (fused_euler, fused_gate_residual,
+                                       fused_ln_modulate)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def timeit(fn, reps: int) -> float:
+    jax.block_until_ready(fn())           # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.time() - t0) / reps
+
+
+def measure_pair(name, f_kernel, f_ref, args, reps):
+    """Both callables: args -> scalar loss. Measures jitted value_and_grad."""
+    argnums = tuple(range(len(args)))
+    jk = jax.jit(jax.value_and_grad(f_kernel, argnums=argnums))
+    jr = jax.jit(jax.value_and_grad(f_ref, argnums=argnums))
+    row = {"name": name}
+    row["fwdbwd_ms_kernel"] = timeit(lambda: jk(*args), reps) * 1e3
+    row["fwdbwd_ms_ref"] = timeit(lambda: jr(*args), reps) * 1e3
+    row["walltime_speedup"] = row["fwdbwd_ms_ref"] / row["fwdbwd_ms_kernel"]
+    mk = jk.lower(*args).compile().memory_analysis()
+    mr = jr.lower(*args).compile().memory_analysis()
+    row["temp_bytes_kernel"] = int(mk.temp_size_in_bytes)
+    row["temp_bytes_ref"] = int(mr.temp_size_in_bytes)
+    row["bytes_speedup"] = (row["temp_bytes_ref"]
+                            / max(row["temp_bytes_kernel"], 1))
+    print(f"  {name:24s} kernel {row['fwdbwd_ms_kernel']:9.1f}ms "
+          f"ref {row['fwdbwd_ms_ref']:9.1f}ms | temp "
+          f"{row['temp_bytes_kernel']/1e6:8.1f}MB vs "
+          f"{row['temp_bytes_ref']/1e6:8.1f}MB "
+          f"({row['bytes_speedup']:.2f}x less)")
+    return row
+
+
+def run(quick: bool = True, out: str = None):
+    interp = _interpret()
+    if quick:
+        reps, (B, H, S, hd), (Be, Se, de) = 1, (1, 2, 128, 32), (2, 256, 128)
+    else:
+        reps, (B, H, S, hd), (Be, Se, de) = 3, (2, 8, 512, 64), (8, 1024, 512)
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    rows = []
+    print(f"backend={jax.default_backend()} interpret={interp} "
+          f"attn=(B{B},H{H},S{S},hd{hd}) elt=(B{Be},S{Se},d{de})")
+
+    # ---- flash attention (causal + the DB concat training mask) ----------
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    rows.append(measure_pair(
+        "flash_attention/causal",
+        lambda q, k, v: jnp.sum(flash_attention(
+            q, k, v, causal=True, interpret=interp)),
+        lambda q, k, v: jnp.sum(ref.mha_reference(q, k, v, causal=True)),
+        (q, k, v), reps))
+
+    from repro.nn.attention import db_concat_mask
+    Sh = S // 2
+    mask = db_concat_mask(Sh)(jnp.arange(S), jnp.arange(S))
+    rows.append(measure_pair(
+        "flash_attention/db_concat",
+        lambda q, k, v: jnp.sum(flash_attention(
+            q, k, v, mask_kind="db_concat", mask_seq=Sh, interpret=interp)),
+        lambda q, k, v: jnp.sum(ref.mha_reference_masked(q, k, v, mask)),
+        (q, k, v), reps))
+
+    # ---- fused elementwise trio ------------------------------------------
+    x = jax.random.normal(ks[3], (Be, Se, de))
+    sc = 0.1 * jax.random.normal(ks[4], (Be, de))
+    sh = 0.1 * jax.random.normal(ks[5], (Be, de))
+    rows.append(measure_pair(
+        "fused_ln_modulate",
+        lambda x, sc, sh: jnp.sum(fused_ln_modulate(
+            x, sc, sh, interpret=interp)),
+        lambda x, sc, sh: jnp.sum(ref.ln_modulate_reference(x, sc, sh)),
+        (x, sc, sh), reps))
+
+    br = jax.random.normal(ks[6], (Be, Se, de))
+    rows.append(measure_pair(
+        "fused_gate_residual",
+        lambda r, b2, g: jnp.sum(fused_gate_residual(
+            r, b2, g, interpret=interp)),
+        lambda r, b2, g: jnp.sum(ref.gate_residual_reference(r, b2, g)),
+        (x, br, sc), reps))
+
+    sig = jnp.linspace(0.5, 3.0, Be)
+    rows.append(measure_pair(
+        "fused_euler",
+        lambda z, f: jnp.sum(fused_euler(
+            z, f, sig, sig * 0.3, 0.5, interpret=interp)),
+        lambda z, f: jnp.sum(ref.euler_reference(z, f, sig, sig * 0.3, 0.5)),
+        (x, br), reps))
+
+    rows.append(measure_pair(
+        "edm_loss",
+        lambda f, z, y: edm_loss(f, z, y, sig, 0.5, interpret=interp),
+        lambda f, z, y: ref.edm_loss_reference(f, z, y, sig, 0.5),
+        (br, x, jax.random.normal(ks[7], (Be, Se, de))), reps))
+
+    geomean = lambda xs: math.exp(sum(math.log(max(x, 1e-9)) for x in xs)
+                                  / len(xs))
+    # The headline is the ATTENTION rows' measured residual-memory speedup:
+    # reference autodiff must store the (Sq, Sk) softmax for the backward —
+    # a residual XLA cannot fuse away — while the custom VJP keeps only
+    # (q, k, v, o, lse) and recomputes score tiles. The elementwise rows'
+    # temp bytes are reported too, but XLA already fuses those references on
+    # CPU (their payoff is HBM round-trips on TPU, see kernel docstrings),
+    # and at --quick shapes everything fits in cache.
+    attn = [r["bytes_speedup"] for r in rows
+            if r["name"].startswith("flash_attention")]
+    wall_speedups = [r["walltime_speedup"] for r in rows]
+    report = {
+        "table": "table14_kernel_grads",
+        "backend": jax.default_backend(),
+        "pallas_mode": "interpret" if interp else "mosaic",
+        "quick": bool(quick),
+        "shapes": {"attention": [B, H, S, hd],
+                   "elementwise": [Be, Se, de]},
+        "fwdbwd_speedup_vs_ref_autodiff": geomean(attn),
+        "speedup_metric": ("attention fwd+bwd temp bytes of the compiled "
+                           "program (measured via memory_analysis; the S² "
+                           "softmax residual autodiff stores and the custom "
+                           "VJP does not)"),
+        "walltime_speedup_geomean": geomean(wall_speedups),
+        "walltime_note": (
+            "CPU walltime runs the Pallas kernels in interpret mode "
+            "(per-tile emulation; dispatch overhead dominates) — the "
+            "compiled walltime comparison is TPU-only."
+            if interp else "compiled Mosaic kernels"),
+        "kernels": rows,
+    }
+    out = out or os.path.join(ROOT, "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"fwd+bwd speedup vs reference autodiff "
+          f"(measured temp bytes, geomean): "
+          f"{report['fwdbwd_speedup_vs_ref_autodiff']:.2f}x")
+    print("wrote", out)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes / 1 rep (CI smoke)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_kernels.json"))
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

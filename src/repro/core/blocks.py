@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import precision as precision_mod
 from repro.configs.base import AUDIO, HYBRID, SSM, VLM, DBConfig, ModelConfig
 from repro.core import edm
 from repro.core import partition as P
@@ -102,8 +103,9 @@ class DiffusionBlocksModel:
     # ------------------------------------------------------------------
     def make_ctx(self, params, S: int, mode: str, sigma=None,
                  aux_inputs: Optional[Dict[str, jax.Array]] = None,
-                 **kw) -> LayerCtx:
-        ctx = LayerCtx(cfg=self.cfg, mode=mode, positions=jnp.arange(S), **kw)
+                 precision=None, **kw) -> LayerCtx:
+        ctx = LayerCtx(cfg=self.cfg, mode=mode, positions=jnp.arange(S),
+                       precision=precision_mod.get_policy(precision), **kw)
         if sigma is not None:
             ctx.cond = self.model.cond(params, jnp.log(sigma.reshape(-1)))
         aux_inputs = aux_inputs or {}
@@ -123,8 +125,8 @@ class DiffusionBlocksModel:
     def block_loss(self, params, b: int, tokens: jax.Array, rng,
                    aux_inputs=None, impl: str = "auto",
                    unit_range: Optional[Tuple[int, int]] = None,
-                   sigma_qrange: Optional[Tuple] = None
-                   ) -> Tuple[jax.Array, Dict]:
+                   sigma_qrange: Optional[Tuple] = None,
+                   precision=None) -> Tuple[jax.Array, Dict]:
         """Paper Eq. (6) for the AR adapter: noisy slot i carries
         z_i = emb(x_i) + σ ε, conditioned on clean x_{<i}; the block denoises
         it and CE is taken through the readout. σ ~ p_noise restricted to
@@ -132,7 +134,13 @@ class DiffusionBlocksModel:
 
         ``sigma_qrange`` overrides the block-derived (q_lo, q_hi) noise range
         with (possibly traced) values — the block-parallel engine trains all
-        blocks in one program, so the range must be data, not a constant."""
+        blocks in one program, so the range must be data, not a constant.
+
+        ``precision`` (repro.precision policy) sets the compute dtype of the
+        hidden stream; the σ-preconditioning, denoiser combine, and loss
+        reductions stay fp32 regardless (reduce_dtype)."""
+        pol = precision_mod.get_policy(precision)
+        cd = pol.compute_for(self.cfg.family)
         Bsz, S = tokens.shape
         start, size = unit_range if unit_range is not None else self.ranges[b]
         r_sig, r_eps = jax.random.split(rng)
@@ -145,14 +153,14 @@ class DiffusionBlocksModel:
 
         table = self.model.embedding_table(params)
         emb_clean = table[tokens]
-        z, _ = edm.add_noise(r_eps, emb_clean, sigma)
+        z, _ = edm.add_noise(r_eps, emb_clean.astype(jnp.float32), sigma)
         c_skip, c_out, c_in, _ = edm.preconditioning(sigma, self.db.sigma_data)
-        z_in = (c_in * z).astype(emb_clean.dtype)
+        z_in = (c_in * z).astype(cd)
 
         if self.causal_mode == "concat":
-            stream = jnp.concatenate([emb_clean, z_in], axis=1)
-            ctx = self.make_ctx(
-                params, 2 * S, "train", sigma, aux_inputs, impl=impl)
+            stream = jnp.concatenate([emb_clean.astype(cd), z_in], axis=1)
+            ctx = self.make_ctx(params, 2 * S, "train", sigma, aux_inputs,
+                                impl=impl, precision=pol)
             ctx.mask_mod = A.db_concat_mask(S)
             ctx.rope_positions = jnp.concatenate(
                 [jnp.arange(S), jnp.arange(S)])
@@ -161,28 +169,47 @@ class DiffusionBlocksModel:
             f_out = h[:, S:]
         else:
             ctx = self.make_ctx(params, S, "train", sigma, aux_inputs,
-                                impl=impl)
+                                impl=impl, precision=pol)
             _, f_out, aux = self.model.apply_units_two_pass(
-                params, emb_clean, z_in, start, size, ctx)
+                params, emb_clean.astype(cd), z_in, start, size, ctx)
 
-        d_hat = edm.denoise_combine(z, f_out.astype(jnp.float32), sigma,
-                                    self.db.sigma_data)
-        loss = chunked_ce(self.model, params, d_hat.astype(emb_clean.dtype),
-                          tokens)
-        metrics = {"ce": loss, "aux": aux,
-                   "sigma_mean": jnp.mean(sigma)}
+        if self.db.loss == "l2":
+            # Eq. (6) score matching in F-space (continuous targets): the
+            # fused kernel never materializes the (y − c_skip z)/c_out target
+            # in HBM; fwd AND bwd run through the custom-VJP Pallas path.
+            sig_b = sigma.reshape(Bsz)
+            f32 = f_out.astype(jnp.float32)
+            y32 = emb_clean.astype(jnp.float32)
+            if impl == "kernels":
+                from repro.kernels import ops as kops
+                loss = kops.edm_loss(f32, z, y32, sig_b,
+                                     sigma_data=self.db.sigma_data)
+            else:
+                loss = edm.edm_l2_loss(f32, z, y32, sigma, self.db.sigma_data)
+            metrics = {"l2": loss}
+        else:
+            d_hat = edm.denoise_combine(z, f_out.astype(jnp.float32), sigma,
+                                        self.db.sigma_data)
+            loss = chunked_ce(self.model, params,
+                              d_hat.astype(emb_clean.dtype), tokens)
+            metrics = {"ce": loss}
+        metrics.update({"loss": loss, "aux": aux,
+                        "sigma_mean": jnp.mean(sigma)})
         if self.cfg.moe is not None:
             loss = loss + self.cfg.moe.router_aux_weight * aux
         return loss, metrics
 
     def e2e_loss(self, params, tokens, rng=None, aux_inputs=None,
-                 impl: str = "auto"):
+                 impl: str = "auto", precision=None):
         """Standard end-to-end next-token CE over the FULL stack — the
         backprop baseline the paper compares against (model built with the
         same AdaLN params; cond=None keeps them inert)."""
+        pol = precision_mod.get_policy(precision)
         Bsz, S = tokens.shape
-        ctx = self.make_ctx(params, S, "train", None, aux_inputs, impl=impl)
-        h = self.model.embed(params, tokens)
+        ctx = self.make_ctx(params, S, "train", None, aux_inputs, impl=impl,
+                            precision=pol)
+        h = self.model.embed(params, tokens,
+                             dtype=pol.compute_for(self.cfg.family))
         h, _, aux = self.model.apply_units(params, h, 0, self.model.n_units,
                                            ctx)
         loss = chunked_ce(self.model, params, h[:, :-1], tokens[:, 1:])

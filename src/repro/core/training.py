@@ -17,6 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import precision as precision_mod
 from repro.configs.base import TrainConfig
 from repro.core.blocks import DiffusionBlocksModel
 from repro.optim import adamw, apply_updates, warmup_cosine
@@ -60,15 +61,24 @@ def make_optimizer(tcfg: TrainConfig):
 
 def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
                        impl: str = "auto", jit: bool = True,
-                       donate: bool = False, unit_range=None):
+                       donate: bool = False, unit_range=None,
+                       precision=None):
     """Returns (init_opt_state_fn, step_fn).
 
     step_fn(params, opt_state_b, tokens, rng, aux_inputs=None)
         -> (params, opt_state_b, loss, metrics)
 
     ``unit_range`` overrides the block's unit slice (dry-run probes).
+
+    ``impl="kernels"`` runs the block loss fwd+bwd entirely through the
+    custom-VJP Pallas kernels; ``precision`` (repro.precision) keeps fp32
+    master params and AdamW moments while the loss sees compute-dtype weight
+    copies (the cast's transpose accumulates grads back to fp32). ``donate``
+    donates the (params, opt_state) buffers to the jitted step so the update
+    happens in place — no second copy of the model in HBM.
     """
     start, size = unit_range if unit_range is not None else dbm.ranges[b]
+    pol = precision_mod.get_policy(precision)
     opt_init, opt_update = make_optimizer(tcfg)
 
     def init_opt(params):
@@ -78,8 +88,11 @@ def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
         view = extract_block_view(params, start, size)
 
         def loss_fn(v):
-            return dbm.block_loss(v, b, tokens, rng, aux_inputs=aux_inputs,
-                                  impl=impl, unit_range=(0, size))
+            vc = precision_mod.cast_params_for_compute(pol, v,
+                                                       dbm.cfg.family)
+            return dbm.block_loss(vc, b, tokens, rng, aux_inputs=aux_inputs,
+                                  impl=impl, unit_range=(0, size),
+                                  precision=pol)
 
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(view)
@@ -96,13 +109,17 @@ def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
 
 def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,
                         impl: str = "auto", jit: bool = True,
-                        remat: bool = False):
+                        remat: bool = False, donate: bool = False,
+                        precision=None):
+    pol = precision_mod.get_policy(precision)
     opt_init, opt_update = make_optimizer(tcfg)
 
     def step(params, opt_state, tokens, rng, aux_inputs=None):
         def loss_fn(p):
-            return dbm.e2e_loss(p, tokens, rng, aux_inputs=aux_inputs,
-                                impl=impl)
+            pc = precision_mod.cast_params_for_compute(pol, p,
+                                                       dbm.cfg.family)
+            return dbm.e2e_loss(pc, tokens, rng, aux_inputs=aux_inputs,
+                                impl=impl, precision=pol)
 
         if remat:
             loss_fn = jax.checkpoint(loss_fn)
@@ -113,13 +130,14 @@ def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,
         return params, opt_state, loss, {**metrics, **om}
 
     if jit:
-        step = jax.jit(step)
+        step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
     return opt_init, step
 
 
 def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
              rng, params=None, log=print, aux_fn=None, parallel=None,
-             periphery: str = "replicate+psum-mean"):
+             periphery: str = "replicate+psum-mean", impl: str = "auto",
+             precision=None):
     """Block-cycling single-host training driver (paper Fig. 3 right):
     each iteration samples a block uniformly and trains only it.
 
@@ -135,7 +153,8 @@ def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
                 "block-parallel engine yet; use the sequential path")
         from repro.parallel import train_db_parallel
         return train_db_parallel(dbm, tcfg, data_iter, rng, params=params,
-                                 log=log, periphery=periphery)
+                                 log=log, periphery=periphery, impl=impl,
+                                 precision=precision)
     if parallel not in (None, "none"):
         raise ValueError(f"unknown parallel mode {parallel!r}")
     rng, r0 = jax.random.split(rng)
@@ -143,7 +162,8 @@ def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
         params = dbm.init(r0)
     steppers, opt_states = [], []
     for b in range(dbm.num_blocks):
-        init_opt, step = make_db_train_step(dbm, b, tcfg)
+        init_opt, step = make_db_train_step(dbm, b, tcfg, impl=impl,
+                                            precision=precision)
         steppers.append(step)
         opt_states.append(init_opt(params))
     history = []
@@ -162,11 +182,13 @@ def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
 
 
 def train_e2e(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
-              rng, params=None, log=print, aux_fn=None):
+              rng, params=None, log=print, aux_fn=None, impl: str = "auto",
+              precision=None):
     rng, r0 = jax.random.split(rng)
     if params is None:
         params = dbm.init(r0)
-    init_opt, step = make_e2e_train_step(dbm, tcfg)
+    init_opt, step = make_e2e_train_step(dbm, tcfg, impl=impl,
+                                         precision=precision)
     opt_state = init_opt(params)
     history = []
     for it in range(tcfg.steps):

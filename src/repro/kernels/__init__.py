@@ -1,3 +1,4 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Fused Pallas kernel layer — the hardware-target train/infer hot path.
+# Every kernel is differentiable via jax.custom_vjp with hand-written
+# Pallas backward kernels (see each module); repro.nn and repro.core route
+# through repro.kernels.ops when impl="kernels". Oracles live in ref.py.

@@ -1,34 +1,106 @@
-"""Flash attention Pallas TPU kernel: tiled online-softmax with causal /
-sliding-window masking computed from block indices (no (S,S) mask in HBM),
-GQA via kv-head index mapping.
+"""Flash attention Pallas TPU kernels: tiled online-softmax forward (emitting
+the per-row logsumexp) plus recomputation-based backward kernels (dq and
+dk/dv), wired together with ``jax.custom_vjp`` so training differentiates
+through hand-written Pallas code instead of autodiff-ing the ``pallas_call``
+(which XLA cannot transpose and Mosaic cannot compile).
+
+Masking is computed from block indices (no (S, S) mask in HBM). Supported
+mask kinds — all the masks the DiffusionBlocks training path uses:
+
+  full       no masking (bidirectional)
+  causal     kpos <= qpos
+  window     causal sliding window of ``window`` keys
+  db_concat  paper App. E.4 [clean || noisy] mask (mask_seq = S, streams 2S)
+  two_pass   DB two-pass noisy-stream mask (keys = [clean || noisy_diag])
 
 Layout: q (B, H, Sq, hd), k/v (B, KV, Sk, hd) — head-major so a (block_q, hd)
 q tile and (block_k, hd) kv tiles stream through VMEM while the MXU runs
 (block_q × hd) @ (hd × block_k). Tiles default to 128×128 (MXU-aligned);
-accumulators live in VMEM scratch across the innermost kv grid dimension.
+accumulators live in VMEM scratch across the innermost grid dimension.
 
-Validated against ``ref.mha_reference`` in interpret mode (CPU container);
-compiled path targets TPU.
+Validated (values and grads) against ``ref.mha_reference`` in interpret mode
+(CPU container); compiled path targets TPU.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.tiles import pad_seq as _pad_seq
+
 DEFAULT_BLOCK_Q = 128
 DEFAULT_BLOCK_K = 128
 NEG_INF = -1e30
 
+MASK_KINDS = ("full", "causal", "window", "db_concat", "two_pass")
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: Optional[int],
-                  block_q: int, block_k: int, n_kv_blocks: int,
-                  seq_q: int, seq_k: int):
+
+@dataclasses.dataclass(frozen=True)
+class FlashConfig:
+    """Static kernel configuration (hashable — jit/custom_vjp nondiff arg)."""
+    mask_kind: str = "causal"
+    window: Optional[int] = None        # only for mask_kind == "window"
+    mask_seq: Optional[int] = None      # S for db_concat / two_pass
+    block_q: int = DEFAULT_BLOCK_Q
+    block_k: int = DEFAULT_BLOCK_K
+    interpret: bool = False
+
+    def __post_init__(self):
+        # hard raises (not asserts): an unchecked kind would fall through
+        # _tile_mask to bounds-only masking — silent full attention
+        if self.mask_kind not in MASK_KINDS:
+            raise ValueError(f"unknown mask_kind {self.mask_kind!r}; "
+                             f"one of {MASK_KINDS}")
+        if self.mask_kind == "window" and self.window is None:
+            raise ValueError("mask_kind='window' requires window")
+        if self.mask_kind in ("db_concat", "two_pass") \
+                and self.mask_seq is None:
+            raise ValueError(f"mask_kind={self.mask_kind!r} requires "
+                             "mask_seq")
+
+
+def _tile_mask(qpos, kpos, cfg: FlashConfig, seq_q: int, seq_k: int):
+    """Boolean keep-mask for a (block_q, block_k) tile of global positions."""
+    mask = (qpos < seq_q) & (kpos < seq_k)
+    if cfg.mask_kind == "causal":
+        mask &= kpos <= qpos
+    elif cfg.mask_kind == "window":
+        mask &= (kpos <= qpos) & (kpos > qpos - cfg.window)
+    elif cfg.mask_kind == "db_concat":
+        S = cfg.mask_seq
+        q_clean = qpos < S
+        k_clean = kpos < S
+        clean_clean = q_clean & k_clean & (kpos <= qpos)
+        noisy_clean = (~q_clean) & k_clean & (kpos < qpos - S)
+        noisy_self = (~q_clean) & (kpos == qpos)
+        mask &= clean_clean | noisy_clean | noisy_self
+    elif cfg.mask_kind == "two_pass":
+        S = cfg.mask_seq
+        mask &= ((kpos < S) & (kpos < qpos)) | (kpos == qpos + S)
+    return mask
+
+
+def _tile_positions(iq, ik, block_q: int, block_k: int):
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    return qpos, kpos
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                scale: float, cfg: FlashConfig, n_kv_blocks: int,
+                seq_q: int, seq_k: int):
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -44,21 +116,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-
-    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_k), 0)
-    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
-                                                   (block_q, block_k), 1)
-    mask = (qpos < seq_q) & (kpos < seq_k)
-    if causal:
-        mask &= kpos <= qpos
-    if window is not None:
-        mask &= kpos > qpos - window
+    qpos, kpos = _tile_positions(iq, ik, cfg.block_q, cfg.block_k)
+    mask = _tile_mask(qpos, kpos, cfg, seq_q, seq_k)
     s = jnp.where(mask, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
     acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
@@ -67,38 +131,31 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(ik == n_kv_blocks - 1)
     def _finalize():
+        l = l_ref[...]
         o_ref[0, 0] = (acc_ref[...] /
-                       jnp.maximum(l_ref[...], 1e-30)[:, None]
-                       ).astype(o_ref.dtype)
+                       jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+        # logsumexp per q row; fully-masked (padded) rows stay at ~NEG_INF
+        lse_ref[0, 0] = m_ref[...] + jnp.log(jnp.maximum(l, 1e-30))
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: Optional[int] = None,
-                    block_q: int = DEFAULT_BLOCK_Q,
-                    block_k: int = DEFAULT_BLOCK_K,
-                    interpret: bool = False) -> jax.Array:
-    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd); H = KV * G. Returns like q."""
+def _fwd_impl(q, k, v, cfg: FlashConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (out (B,H,Sq,hd), lse (B,H,Sq_pad) float32)."""
     B, H, Sq, hd = q.shape
     KV, Sk = k.shape[1], k.shape[2]
     G = H // KV
     scale = 1.0 / (hd ** 0.5)
-    block_q = min(block_q, Sq)
-    block_k = min(block_k, Sk)
-    pad_q = (-Sq) % block_q
-    pad_k = (-Sk) % block_k
-    if pad_q:
-        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
-    if pad_k:
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    block_q = min(cfg.block_q, Sq)
+    block_k = min(cfg.block_k, Sk)
+    cfg = dataclasses.replace(cfg, block_q=block_q, block_k=block_k)
+    q = _pad_seq(q, Sq + (-Sq) % block_q)
+    k = _pad_seq(k, Sk + (-Sk) % block_k)
+    v = _pad_seq(v, Sk + (-Sk) % block_k)
     nq = q.shape[2] // block_q
     nk = k.shape[2] // block_k
 
-    kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, n_kv_blocks=nk, seq_q=Sq, seq_k=Sk)
-
-    out = pl.pallas_call(
+    kernel = functools.partial(_fwd_kernel, scale=scale, cfg=cfg,
+                               n_kv_blocks=nk, seq_q=Sq, seq_k=Sk)
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
         in_specs=[
@@ -109,14 +166,204 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, 1, block_k, hd),
                          lambda b, h, iq, ik: (b, h // G, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd),
-                               lambda b, h, iq, ik: (b, h, iq, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct(q.shape[:3], jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),    # m (running max)
             pltpu.VMEM((block_q,), jnp.float32),    # l (running sum)
             pltpu.VMEM((block_q, hd), jnp.float32),  # acc (weighted values)
         ],
-        interpret=interpret,
+        interpret=cfg.interpret,
     )(q, k, v)
-    return out[:, :, :Sq]
+    return out[:, :, :Sq], lse
+
+
+# ---------------------------------------------------------------------------
+# Backward: dq kernel (grid inner dim = kv blocks), dk/dv kernel (inner = q)
+# Both recompute the score tiles from (q, k) and the stored logsumexp — the
+# (Sq, Sk) probability matrix never exists in HBM (FlashAttention-style).
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, scale: float, cfg: FlashConfig,
+                   n_kv_blocks: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]                            # (bq,)
+    delta = delta_ref[0, 0]                        # (bq,)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos, kpos = _tile_positions(iq, ik, cfg.block_q, cfg.block_k)
+    mask = _tile_mask(qpos, kpos, cfg, seq_q, seq_k)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale
+    acc_ref[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, scale: float,
+                    cfg: FlashConfig, n_q_blocks: int, seq_q: int,
+                    seq_k: int):
+    ik = pl.program_id(2)
+    iq = pl.program_id(3)
+
+    @pl.when(iq == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0]
+    delta = delta_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    qpos, kpos = _tile_positions(iq, ik, cfg.block_q, cfg.block_k)
+    mask = _tile_mask(qpos, kpos, cfg, seq_q, seq_k)
+    p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)     # (bq, bk)
+    dv_acc[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale                  # (bq, bk)
+    dk_acc[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(iq == n_q_blocks - 1)
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_impl(q, k, v, o, lse, do, cfg: FlashConfig):
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    block_q = min(cfg.block_q, Sq)
+    block_k = min(cfg.block_k, Sk)
+    cfg = dataclasses.replace(cfg, block_q=block_q, block_k=block_k)
+    Sq_pad = Sq + (-Sq) % block_q
+    Sk_pad = Sk + (-Sk) % block_k
+    qp, dop, op = _pad_seq(q, Sq_pad), _pad_seq(do, Sq_pad), _pad_seq(o, Sq_pad)
+    kp, vp = _pad_seq(k, Sk_pad), _pad_seq(v, Sk_pad)
+    nq, nk = Sq_pad // block_q, Sk_pad // block_k
+    # delta_i = sum_d dO_i · O_i — the softmax-normalization correction term
+    # (one elementwise reduce; padded rows carry dO = 0 so contribute nothing)
+    delta = jnp.sum(dop.astype(jnp.float32) * op.astype(jnp.float32), axis=-1)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, hd),
+                          lambda b, h, iq, ik: (b, h, iq, 0))
+    kv_spec = pl.BlockSpec((1, 1, block_k, hd),
+                           lambda b, h, iq, ik: (b, h // G, ik, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, scale=scale, cfg=cfg,
+                          n_kv_blocks=nk, seq_q=Sq, seq_k=Sk),
+        grid=(B, H, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(qp.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        interpret=cfg.interpret,
+    )(qp, kp, vp, dop, lse, delta)
+
+    # dk/dv computed per q-head into (B, H, Sk, hd); GQA group-sum follows.
+    q_spec2 = pl.BlockSpec((1, 1, block_q, hd),
+                           lambda b, h, ik, iq: (b, h, iq, 0))
+    kv_spec2 = pl.BlockSpec((1, 1, block_k, hd),
+                            lambda b, h, ik, iq: (b, h // G, ik, 0))
+    kvh_spec2 = pl.BlockSpec((1, 1, block_k, hd),
+                             lambda b, h, ik, iq: (b, h, ik, 0))
+    row_spec2 = pl.BlockSpec((1, 1, block_q), lambda b, h, ik, iq: (b, h, iq))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, scale=scale, cfg=cfg,
+                          n_q_blocks=nq, seq_q=Sq, seq_k=Sk),
+        grid=(B, H, nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=[kvh_spec2, kvh_spec2],
+        out_shape=[jax.ShapeDtypeStruct((B, H, Sk_pad, hd), k.dtype),
+                   jax.ShapeDtypeStruct((B, H, Sk_pad, hd), v.dtype)],
+        scratch_shapes=[pltpu.VMEM((block_k, hd), jnp.float32),
+                        pltpu.VMEM((block_k, hd), jnp.float32)],
+        interpret=cfg.interpret,
+    )(qp, kp, vp, dop, lse, delta)
+
+    dq = dq[:, :, :Sq]
+    dk, dv = dk[:, :, :Sk], dv[:, :, :Sk]
+    if G > 1:   # GQA: sum the per-q-head contributions within each kv group
+        dk = dk.reshape(B, KV, G, Sk, hd).sum(axis=2).astype(k.dtype)
+        dv = dv.reshape(B, KV, G, Sk, hd).sum(axis=2).astype(v.dtype)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp wiring
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, cfg: FlashConfig):
+    out, _ = _fwd_impl(q, k, v, cfg)
+    return out
+
+
+def _flash_fwd(q, k, v, cfg: FlashConfig):
+    out, lse = _fwd_impl(q, k, v, cfg)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(cfg: FlashConfig, res, do):
+    q, k, v, o, lse = res
+    return _bwd_impl(q, k, v, o, lse, do, cfg)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    mask_kind: Optional[str] = None,
+                    mask_seq: Optional[int] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k/v: (B, KV, Sk, hd); H = KV * G. Returns like q.
+
+    Fully differentiable: gradients run through the Pallas backward kernels
+    (``jax.custom_vjp``), never through autodiff of ``pallas_call``.
+    """
+    if mask_kind is None:
+        mask_kind = ("window" if window is not None
+                     else "causal" if causal else "full")
+    cfg = FlashConfig(mask_kind=mask_kind, window=window, mask_seq=mask_seq,
+                      block_q=block_q, block_k=block_k, interpret=interpret)
+    return _flash(q, k, v, cfg)

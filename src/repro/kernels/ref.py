@@ -29,6 +29,20 @@ def mha_reference(q, k, v, *, causal: bool = True,
     return o.reshape(B, H, Sq, hd).astype(q.dtype)
 
 
+def mha_reference_masked(q, k, v, mask: jax.Array) -> jax.Array:
+    """q: (B,H,Sq,hd); k/v: (B,KV,Sk,hd); mask: (Sq, Sk) bool keep-mask.
+    Oracle for the kernel's db_concat / two_pass mask kinds."""
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) / (hd ** 0.5)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
 def ln_modulate_reference(x, scale, shift, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     mean = jnp.mean(xf, axis=-1, keepdims=True)

@@ -1,0 +1,45 @@
+"""Shared tile helpers for the Pallas kernels: sequence-axis zero-padding to
+a block multiple and the recurring BlockSpec shapes ((B, rows, d) row tiles,
+(B, d) per-example vectors, (B, 1) scalars, (B, ns, d) per-tile partials).
+One definition so padding semantics cannot drift between kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pad_rows(x, block_rows: int):
+    """Zero-pad axis 1 of (B, S, ...) up to a multiple of ``block_rows``."""
+    pad = (-x.shape[1]) % block_rows
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_seq(x, target: int):
+    """Zero-pad axis 2 of (B, H, S, hd) up to exactly ``target``."""
+    S = x.shape[2]
+    return x if S == target else jnp.pad(
+        x, ((0, 0), (0, 0), (0, target - S), (0, 0)))
+
+
+def row_spec(block_rows: int, d: int):
+    return pl.BlockSpec((1, block_rows, d), lambda b, i: (b, i, 0))
+
+
+def vec_spec(d: int):
+    return pl.BlockSpec((1, d), lambda b, i: (b, 0))
+
+
+def scalar_spec():
+    return pl.BlockSpec((1, 1), lambda b, i: (b, 0))
+
+
+def tile_spec():
+    return pl.BlockSpec((1, 1), lambda b, i: (b, i))
+
+
+def partial_spec(d: int):
+    return pl.BlockSpec((1, 1, d), lambda b, i: (b, i, 0))

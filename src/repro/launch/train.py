@@ -50,6 +50,16 @@ def main():
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--block-parallel", action="store_true")
+    ap.add_argument("--precision", default="fp32", choices=["fp32", "bf16"],
+                    help="mixed-precision policy (repro.precision): fp32 "
+                         "masters + bf16 compute + fp32 reductions, or pure "
+                         "fp32")
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "naive", "chunked", "triangle",
+                             "kernels"],
+                    help="attention/elementwise implementation; 'kernels' "
+                         "routes fwd+bwd through the custom-VJP Pallas "
+                         "kernels")
     ap.add_argument("--periphery", default="replicate+psum-mean",
                     help="periphery sync policy for --block-parallel "
                          "(replicate+psum-mean | owner-broadcast | "
@@ -86,7 +96,9 @@ def main():
                           sharding=t_shard)
 
     if args.mode == "e2e":
-        init_opt, step = make_e2e_train_step(dbm, tcfg)
+        init_opt, step = make_e2e_train_step(dbm, tcfg, impl=args.impl,
+                                             precision=args.precision,
+                                             donate=True)
         opt = init_opt(params)
         for it in range(args.steps):
             rng, rs = jax.random.split(rng)
@@ -103,7 +115,9 @@ def main():
                 "--block-parallel builds its own (pod, data) mesh and does "
                 "not compose with --model-parallel yet; drop one of the two")
         from repro.parallel import BlockParallelTrainer
-        trainer = BlockParallelTrainer(dbm, tcfg, periphery=args.periphery)
+        trainer = BlockParallelTrainer(dbm, tcfg, periphery=args.periphery,
+                                       impl=args.impl,
+                                       precision=args.precision)
         print(f"block-parallel mode={trainer.mode}"
               + (f" mesh={dict(trainer.mesh.shape)}" if trainer.mesh else ""))
         params, _ = trainer.train(data, rng, params=params,
@@ -111,7 +125,8 @@ def main():
     else:
         steppers, opts = [], []
         for b in range(db.num_blocks):
-            io, st = make_db_train_step(dbm, b, tcfg)
+            io, st = make_db_train_step(dbm, b, tcfg, impl=args.impl,
+                                        precision=args.precision, donate=True)
             steppers.append(st)
             opts.append(io(params))
         for it in range(args.steps):

@@ -42,6 +42,7 @@ class LayerCtx:
     kv_x: Optional[jax.Array] = None            # cross-attn memory (B, Sk, d)
     kv_positions: Optional[jax.Array] = None
     impl: str = "auto"                          # attention impl
+    precision: Any = None                       # repro.precision.Policy | None
     q_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
     kv_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
 
@@ -90,6 +91,20 @@ def _mods(params, ctx: LayerCtx):
     return adaln.adaln_mods(params["adaln"], ctx.cond, ctx.cfg.d_model, 6)
 
 
+def _norm_modulate(p_ln, h, ctx: LayerCtx, shift, scale, cond_mask):
+    """norm → AdaLN modulate; under ``impl="kernels"`` the non-parametric-LN
+    case fuses both into one Pallas pass (custom-VJP backward). Parametric
+    norms (rmsnorm/layernorm carry a weight the kernel does not apply) and the
+    cond-masked concat path keep the jnp composition."""
+    if (ctx.impl == "kernels" and shift is not None and cond_mask is None
+            and ctx.cfg.norm == "nonparam_ln" and shift.ndim == 3
+            and shift.shape[1] == 1):   # (B, 1, d) per-example mods only
+        from repro.kernels import ops as kops
+        return kops.ln_modulate(h, scale[:, 0], shift[:, 0])
+    return adaln.modulate(L.apply_norm(p_ln, h, ctx.cfg.norm), shift, scale,
+                          cond_mask)
+
+
 def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
                  moe_layer: bool = False, bidirectional: bool = False,
                  cache=None):
@@ -100,7 +115,7 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
     aux = jnp.zeros((), jnp.float32)
     cm = ctx.cond_mask
 
-    x = adaln.modulate(L.apply_norm(params["ln1"], h, cfg.norm), s1, c1, cm)
+    x = _norm_modulate(params["ln1"], h, ctx, s1, c1, cm)
     if ctx.mode == "decode" and not cross:
         attn_out, new_cache = A.decode_attention(
             params["attn"], x, dims, cache, ctx.pos,
@@ -133,14 +148,14 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
             mask_mod=mask_mod, rope_positions=ctx.rope_positions,
             impl=ctx.impl, q_chunk=ctx.q_chunk, kv_chunk=ctx.kv_chunk)
         new_cache = {"k": k, "v": v} if ctx.mode == "prefill" else None
-    h = adaln.gate(h, attn_out, g1, cm)
+    h = adaln.gate(h, attn_out, g1, cm, impl=ctx.impl)
 
-    x = adaln.modulate(L.apply_norm(params["ln2"], h, cfg.norm), s2, c2, cm)
+    x = _norm_modulate(params["ln2"], h, ctx, s2, c2, cm)
     if moe_layer:
         mlp_out, aux = moe_fwd(params["moe"], x, cfg.moe, cfg.mlp)
     else:
         mlp_out = L.apply_mlp(params["mlp"], x, cfg.mlp)
-    h = adaln.gate(h, mlp_out, g2, cm)
+    h = adaln.gate(h, mlp_out, g2, cm, impl=ctx.impl)
     return h, new_cache, aux
 
 
@@ -156,6 +171,7 @@ def two_pass_mask(seq_len: int):
         clean = (k < S) & (k < q)
         self_k = k == q + S
         return clean | self_k
+    mask.kernel_mask = ("two_pass", None, S)
     return mask
 
 
@@ -171,7 +187,7 @@ def tlayer_two_pass(params, h_clean, h_noisy, ctx: LayerCtx, *,
 
     # --- attention ---
     xc = L.apply_norm(params["ln1"], h_clean, cfg.norm)          # clean: no mods
-    xn = adaln.modulate(L.apply_norm(params["ln1"], h_noisy, cfg.norm), s1, c1)
+    xn = _norm_modulate(params["ln1"], h_noisy, ctx, s1, c1, None)
     qc, kc, vc = A.project_qkv(params["attn"], xc, dims)
     qn, kn, vn = A.project_qkv(params["attn"], xn, dims)
     pos = ctx.positions if ctx.positions is not None else jnp.arange(S)
@@ -191,11 +207,11 @@ def tlayer_two_pass(params, h_clean, h_noisy, ctx: LayerCtx, *,
     proj = lambda o: o.reshape(*o.shape[:2], dims.n_heads * dims.head_dim) \
         @ params["attn"]["wo"].astype(o.dtype)
     h_clean = h_clean + proj(oc)
-    h_noisy = adaln.gate(h_noisy, proj(on), g1)
+    h_noisy = adaln.gate(h_noisy, proj(on), g1, impl=ctx.impl)
 
     # --- mlp ---
     xc = L.apply_norm(params["ln2"], h_clean, cfg.norm)
-    xn = adaln.modulate(L.apply_norm(params["ln2"], h_noisy, cfg.norm), s2, c2)
+    xn = _norm_modulate(params["ln2"], h_noisy, ctx, s2, c2, None)
     if moe_layer:
         mc, aux1 = moe_fwd(params["moe"], xc, cfg.moe, cfg.mlp)
         mn, aux2 = moe_fwd(params["moe"], xn, cfg.moe, cfg.mlp)
@@ -204,5 +220,5 @@ def tlayer_two_pass(params, h_clean, h_noisy, ctx: LayerCtx, *,
         mc = L.apply_mlp(params["mlp"], xc, cfg.mlp)
         mn = L.apply_mlp(params["mlp"], xn, cfg.mlp)
     h_clean = h_clean + mc
-    h_noisy = adaln.gate(h_noisy, mn, g2)
+    h_noisy = adaln.gate(h_noisy, mn, g2, impl=ctx.impl)
     return h_clean, h_noisy, aux

@@ -108,9 +108,14 @@ class BaseModel:
             return h @ self.embedding_table(params).T.astype(h.dtype)
         return L.readout(params["head"], h)
 
-    # full forward (all units) — convenience for e2e baseline / smoke tests
+    # full forward (all units) — convenience for e2e baseline / smoke tests.
+    # The stream runs in the ctx policy's compute dtype (repro.precision);
+    # logits/readout reductions stay fp32 inside ``logits``.
     def forward(self, params, tokens, ctx, cache=None):
-        h = self.embed(params, tokens)
+        pol = getattr(ctx, "precision", None)
+        h = self.embed(params, tokens,
+                       dtype=None if pol is None
+                       else pol.compute_for(self.cfg.family))
         h, cache, aux = self.apply_units(params, h, 0, self.n_units, ctx, cache)
         return self.logits(params, h), cache, aux
 

@@ -78,9 +78,18 @@ def modulate(x: jax.Array, shift: Optional[jax.Array],
 
 def gate(residual: jax.Array, branch: jax.Array,
          g: Optional[jax.Array],
-         cond_mask: Optional[jax.Array] = None) -> jax.Array:
+         cond_mask: Optional[jax.Array] = None,
+         impl: str = "auto") -> jax.Array:
+    """``impl="kernels"`` routes the unmasked σ-conditioned case through the
+    fused Pallas gate+residual kernel (one VMEM pass, custom-VJP backward);
+    the cond-masked concat path and the unconditioned case stay in jnp —
+    the (B, d) gate vector cannot express a per-position mask."""
     if g is None:
         return residual + branch
+    if impl == "kernels" and cond_mask is None and g.ndim == 3 \
+            and g.shape[1] == 1:    # (B, 1, d) only — kernel gate is per-example
+        from repro.kernels import ops as kops
+        return kops.gate_residual(residual, branch, g[:, 0])
     gated = branch * (1.0 + g.astype(branch.dtype))
     if cond_mask is not None:
         gated = jnp.where(cond_mask[None, :, None], gated, branch)

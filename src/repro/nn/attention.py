@@ -44,6 +44,8 @@ def causal_mask(qpos, kpos):
 
 
 causal_mask.lower_tri = True   # every attended key satisfies kp <= qp
+# (kind, window, mask_seq) routing tag for the Pallas kernel (kernels/ops.py)
+causal_mask.kernel_mask = ("causal", None, None)
 
 
 def sliding_window_mask(window: int):
@@ -51,11 +53,15 @@ def sliding_window_mask(window: int):
         k, q = kpos[None, :], qpos[:, None]
         return (k <= q) & (k > q - window)
     mask.lower_tri = True
+    mask.kernel_mask = ("window", window, None)
     return mask
 
 
 def bidirectional_mask(qpos, kpos):
     return jnp.ones((qpos.shape[0], kpos.shape[0]), dtype=bool)
+
+
+bidirectional_mask.kernel_mask = ("full", None, None)
 
 
 def db_concat_mask(seq_len: int) -> MaskMod:
@@ -79,6 +85,7 @@ def db_concat_mask(seq_len: int) -> MaskMod:
         noisy_self = (~q_clean) & (k == q)
         return clean_clean | noisy_clean | noisy_self
     mask.lower_tri = True   # all attended keys satisfy kp <= qp
+    mask.kernel_mask = ("db_concat", None, S)
     return mask
 
 
@@ -272,10 +279,11 @@ def attend(q, k, v, *, mask_mod: Optional[MaskMod], qpos, kpos,
             return chunked_attention_triangle(q, k, v, mask_mod, qpos, kpos,
                                               q_chunk, kv_chunk)
         return chunked_attention(q, k, v, mask_mod, qpos, kpos, q_chunk, kv_chunk)
-    if impl == "pallas":
+    if impl in ("pallas", "kernels"):
         from repro.kernels import ops as kops
+        # mask_mod=None means UNMASKED here (cross-attention) — route "full"
         return kops.flash_attention(q, k, v, mask_mod=mask_mod, qpos=qpos,
-                                    kpos=kpos)
+                                    kpos=kpos, causal=False)
     raise ValueError(impl)
 
 

@@ -46,6 +46,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding
 
+from repro import precision as precision_mod
 from repro.configs.base import TrainConfig
 from repro.core import partition as P
 from repro.core.blocks import DiffusionBlocksModel
@@ -84,8 +85,9 @@ class BlockParallelTrainer:
     def __init__(self, dbm: DiffusionBlocksModel, tcfg: TrainConfig,
                  periphery: str = "replicate+psum-mean",
                  freeze_steps: Optional[int] = None, impl: str = "auto",
-                 devices=None, jit: bool = True):
+                 devices=None, jit: bool = True, precision=None):
         self.dbm, self.tcfg, self.impl = dbm, tcfg, impl
+        self.precision = precision_mod.get_policy(precision)
         self.policy = _POLICY_ALIASES.get(periphery, periphery)
         if self.policy not in PERIPHERY_POLICIES:
             raise ValueError(f"unknown periphery policy {periphery!r}; "
@@ -109,6 +111,7 @@ class BlockParallelTrainer:
     def _build_step(self, jit: bool):
         dbm, tcfg, u, B = self.dbm, self.tcfg, self.u, self.B
         policy, impl, freeze_steps = self.policy, self.impl, self.freeze_steps
+        pol = self.precision
         opt_update = self._opt_update
         pod_ax = rules.BLOCK_AXIS if self.mode == "shard_map" else None
         data_size = self.mesh.shape["data"] if self.mesh is not None else 1
@@ -121,9 +124,12 @@ class BlockParallelTrainer:
                 rng = jax.random.fold_in(rng, jax.lax.axis_index(data_ax))
 
             def loss_fn(v):
-                return dbm.block_loss(v, 0, tokens, rng, impl=impl,
+                vc = precision_mod.cast_params_for_compute(pol, v,
+                                                           dbm.cfg.family)
+                return dbm.block_loss(vc, 0, tokens, rng, impl=impl,
                                       unit_range=(0, u),
-                                      sigma_qrange=(q_lo, q_hi))
+                                      sigma_qrange=(q_lo, q_hi),
+                                      precision=pol)
 
             (loss, _), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(view)
@@ -305,9 +311,11 @@ class BlockParallelTrainer:
 def train_db_parallel(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
                       rng, params=None, log=print,
                       periphery: str = "replicate+psum-mean",
-                      devices=None, ckpt_dir: Optional[str] = None):
+                      devices=None, ckpt_dir: Optional[str] = None,
+                      impl: str = "auto", precision=None):
     """Functional wrapper mirroring ``train_db``'s signature."""
     trainer = BlockParallelTrainer(dbm, tcfg, periphery=periphery,
-                                   devices=devices)
+                                   devices=devices, impl=impl,
+                                   precision=precision)
     return trainer.train(data_iter, rng, params=params, log=log,
                          ckpt_dir=ckpt_dir)

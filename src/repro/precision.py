@@ -1,0 +1,101 @@
+"""Mixed-precision policy (``repro.precision``).
+
+One frozen, hashable ``Policy`` object describes the three dtype roles of the
+training hot path:
+
+  param_dtype    master copies the optimizer updates (always fp32 by default —
+                 AdamW moments and weight decay stay full precision)
+  compute_dtype  the streamed activations and the weight copies the matmuls
+                 see (bf16 under the ``bf16`` policy — half the HBM traffic,
+                 2× the MXU throughput on TPU)
+  reduce_dtype   softmax / layernorm statistics / loss accumulation (fp32 in
+                 every shipped policy; the kernels and ``chunked_ce`` already
+                 promote internally, this field documents + enforces it)
+
+Per-family overrides: recurrent scans (xLSTM sLSTM state, Mamba SSD) compound
+rounding error multiplicatively over the sequence, so the ``ssm`` / ``hybrid``
+families keep fp32 compute even under the ``bf16`` policy unless the override
+set is emptied explicitly.
+
+The policy threads through ``LayerCtx.precision`` (``make_ctx``), the
+train-step builders (params are cast once per step — masters stay fp32, the
+loss sees compute-dtype copies, and the cast's transpose accumulates the
+gradients back to fp32), and the block-parallel engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HYBRID, SSM
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    name: str
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    reduce_dtype: Any = jnp.float32
+    # families whose recurrences stay in fp32 even under low-precision compute
+    fp32_families: Tuple[str, ...] = (SSM, HYBRID)
+
+    def compute_for(self, family: Optional[str] = None):
+        """Effective compute dtype for an architecture family."""
+        if family is not None and family in self.fp32_families:
+            return jnp.float32
+        return self.compute_dtype
+
+    @property
+    def is_mixed(self) -> bool:
+        return self.compute_dtype != self.param_dtype
+
+
+FP32 = Policy("fp32")
+BF16 = Policy("bf16", compute_dtype=jnp.bfloat16)
+
+_POLICIES = {"fp32": FP32, "float32": FP32, "bf16": BF16, "bfloat16": BF16,
+             "mixed": BF16, None: FP32, "none": FP32}
+
+PolicyLike = Union[None, str, Policy]
+
+
+def get_policy(policy: PolicyLike) -> Policy:
+    if isinstance(policy, Policy):
+        return policy
+    try:
+        return _POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision policy {policy!r}; one of "
+            f"{sorted(k for k in _POLICIES if isinstance(k, str))}") from None
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+def cast_floating(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (ints/bools pass)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if _is_float(x) else x, tree)
+
+
+def cast_params_for_compute(policy: PolicyLike, params,
+                            family: Optional[str] = None):
+    """Compute-dtype weight copies for one loss evaluation. A no-op tree map
+    under fp32; under bf16 the cast's transpose is what accumulates gradients
+    back into fp32 (grads come out in ``param_dtype`` automatically)."""
+    pol = get_policy(policy)
+    cd = pol.compute_for(family)
+    if cd == pol.param_dtype:
+        return params
+    return cast_floating(params, cd)
+
+
+def cast_stream(policy: PolicyLike, x, family: Optional[str] = None):
+    """Cast an activation stream to the policy's compute dtype."""
+    pol = get_policy(policy)
+    return x.astype(pol.compute_for(family))
