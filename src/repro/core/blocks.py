@@ -236,12 +236,14 @@ class DiffusionBlocksModel:
 
     def _probe_block(self, params, b: int, z: jax.Array, sigma: float,
                      cache, pos, ctx_base: LayerCtx) -> jax.Array:
-        """Run block b's units over one noisy token (decode probe: cache is
-        read, its update discarded). Returns F (B,1,d)."""
+        """Run block b's units over one noisy token (decode probe:
+        ``commit=False`` — caches are read, never appended). Returns F
+        (B,1,d)."""
         start, size = self.ranges[b]
         sig = jnp.full((z.shape[0], 1, 1), sigma, jnp.float32)
         _, _, c_in, _ = edm.preconditioning(sig, self.db.sigma_data)
-        ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos)
+        ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos,
+                                  commit=False)
         ctx.cond = self.model.cond(params, jnp.log(sig.reshape(-1)))
         sub_cache = jax.tree_util.tree_map(
             lambda c: c[start:start + size], cache)
@@ -252,9 +254,19 @@ class DiffusionBlocksModel:
 
     def denoise_next_token(self, params, cache, pos, rng, ctx_base,
                            steps_per_block: int = 1) -> jax.Array:
-        """Full Euler chain (σ_max → 0) for the token at ``pos``.
-        Returns the denoised embedding D (B,1,d)."""
-        batch = self.model.cache_batch(cache)
+        """Full Euler chain (σ_max → 0) for the token at ``pos`` (dense
+        caches) or at each slot's ``ctx_base.lengths`` (paged serving cache).
+        Returns the denoised embedding D (B,1,d).
+
+        ``steps_per_block`` is a PYTHON int: the schedule is unrolled at
+        trace time, so under ``jax.jit`` it MUST be a static argument — each
+        distinct value compiles its own program, and passing it as a traced
+        value fails. ``launch.serve`` bakes it into the jitted engine
+        closures once; ad-hoc callers should use
+        ``static_argnames=("steps_per_block",)`` rather than thrashing the
+        jit cache with wrapper lambdas."""
+        batch = (ctx_base.lengths.shape[0] if ctx_base.lengths is not None
+                 else self.model.cache_batch(cache))
         d = self.cfg.d_model
         z = self.db.sigma_max * jax.random.normal(rng, (batch, 1, d))
         for b, s_from, s_to in self.denoise_schedule(steps_per_block):
@@ -268,40 +280,110 @@ class DiffusionBlocksModel:
         return z
 
     def commit_token(self, params, cache, pos, token, ctx_base):
-        """Append the chosen clean token to every unit's cache.
+        """Append the chosen clean token to every unit's cache in ONE scan.
 
         Training-consistent: each block's clean stream starts from RAW token
         embeddings (blocks are independent denoisers — block b never sees
-        block b-1's output), so the commit pass restarts the hidden stream at
-        every block boundary. Total cost is still L layer evaluations."""
+        block b-1's output). The scan body resets the hidden stream to the
+        embedding at every block boundary (``reset_mask``), so the commit
+        traces a single ``lax.scan`` over ALL units — tracing cost no longer
+        scales with ``num_blocks`` (the seed looped blocks in Python and
+        re-concatenated the cache pytree per token). Total cost is still L
+        layer evaluations."""
         ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos, cond=None)
-        emb = self.model.embed(params, token)
-        new_parts = []
+        pol = precision_mod.get_policy(ctx.precision)
+        emb = self.model.embed(params, token,
+                               dtype=pol.compute_for(self.cfg.family))
+        starts = np.zeros(self.model.n_units, dtype=bool)
         for b in range(self.num_blocks):
-            start, size = self.ranges[b]
-            sub = jax.tree_util.tree_map(lambda c: c[start:start + size],
-                                         cache)
-            _, new_sub, _ = self.model.apply_units(params, emb, start, size,
-                                                   ctx, sub)
-            new_parts.append(new_sub)
-        return jax.tree_util.tree_map(
-            lambda *xs: jnp.concatenate(xs, axis=0), *new_parts)
+            starts[self.ranges[b][0]] = True
+        _, new_cache, _ = self.model.apply_units(
+            params, emb, 0, self.model.n_units, ctx, cache,
+            reset_mask=jnp.asarray(starts))
+        return new_cache
+
+    def sample_token(self, logits, rng, temperature: float = 0.0,
+                     top_k: int = 0):
+        """Greedy (``temperature == 0``) or temperature / top-k sampling.
+        Both are fully traced — temperature/top_k are static Python values
+        selecting the trace, rng is data — so sampling lives INSIDE the
+        scan-fused generation loop (no per-token host round-trip)."""
+        logits = logits.astype(jnp.float32)
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1)
+        logits = logits / temperature
+        if top_k and top_k < logits.shape[-1]:
+            kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+            logits = jnp.where(logits < kth, -jnp.inf, logits)
+        return jax.random.categorical(rng, logits)
 
     def serve_step(self, params, cache, pos, rng, aux_inputs=None,
-                   steps_per_block: int = 1):
-        """One generation step: denoise token at ``pos`` through the blocks,
-        greedy-pick, commit to caches. This is what decode dry-run shapes
-        lower. Returns (token (B,), new_cache)."""
-        S1 = 1
-        ctx_base = self.make_ctx(params, S1, "decode", None, aux_inputs)
+                   steps_per_block: int = 1, temperature: float = 0.0,
+                   top_k: int = 0):
+        """One generation step over DENSE caches: denoise token at ``pos``
+        through the blocks, sample, commit. This is what decode dry-run
+        shapes lower; the paged serving engine uses ``serve_step_paged``.
+        ``steps_per_block``/``temperature``/``top_k`` are static under jit
+        (see denoise_next_token). Returns (token (B,), new_cache)."""
+        ctx_base = self.make_ctx(params, 1, "decode", None, aux_inputs)
         ctx_base.positions = None
-        d_final = self.denoise_next_token(params, cache, pos, rng, ctx_base,
-                                          steps_per_block)
+        r_noise, r_samp = jax.random.split(rng)
+        d_final = self.denoise_next_token(params, cache, pos, r_noise,
+                                          ctx_base, steps_per_block)
         logits = self.model.logits(params, d_final)
-        token = jnp.argmax(logits[:, 0], axis=-1)
+        token = self.sample_token(logits[:, 0], r_samp, temperature, top_k)
         new_cache = self.commit_token(params, cache, pos, token[:, None],
                                       ctx_base)
         return token, new_cache
+
+    # ------------------------------------------------------------------
+    # Paged serving steps (repro.nn.cache pools; used by launch.serve)
+    # ------------------------------------------------------------------
+    def _paged_ctx(self, params, lengths, page_table, active, precision,
+                   impl, aux_inputs=None) -> LayerCtx:
+        ctx = self.make_ctx(params, 1, "decode", None, aux_inputs,
+                            precision=precision, impl=impl)
+        ctx.positions = None
+        ctx.lengths = lengths
+        ctx.page_table = page_table
+        ctx.active = active
+        return ctx
+
+    def serve_step_paged(self, params, kv, page_table, lengths, rng, *,
+                         active=None, steps_per_block: int = 1,
+                         temperature: float = 0.0, top_k: int = 0,
+                         precision=None, impl: str = "auto",
+                         aux_inputs=None):
+        """One generation step over the PAGED serving cache: each slot
+        denoises + commits at its OWN position ``lengths[b]`` (ragged batches
+        share this one trace). ``active`` masks slots that commit this step —
+        inactive slots compute but write nothing (KV appends are redirected
+        to the trash page, recurrent states held). Keyword config is static
+        under jit. Returns (token (B,), new_kv, new_lengths)."""
+        ctx = self._paged_ctx(params, lengths, page_table, active, precision,
+                              impl, aux_inputs)
+        r_noise, r_samp = jax.random.split(rng)
+        d_final = self.denoise_next_token(params, kv, None, r_noise, ctx,
+                                          steps_per_block)
+        logits = self.model.logits(params, d_final)
+        token = self.sample_token(logits[:, 0], r_samp, temperature, top_k)
+        new_kv = self.commit_token(params, kv, None, token[:, None], ctx)
+        new_lengths = lengths + (active.astype(lengths.dtype)
+                                 if active is not None else 1)
+        return token, new_kv, new_lengths
+
+    def commit_prompt_token(self, params, kv, page_table, lengths, token, *,
+                            active=None, precision=None, impl: str = "auto",
+                            aux_inputs=None):
+        """Prefill building block: commit a known (prompt) token at each
+        slot's ``lengths[b]`` without the denoising probe. Returns
+        (new_kv, new_lengths)."""
+        ctx = self._paged_ctx(params, lengths, page_table, active, precision,
+                              impl, aux_inputs)
+        new_kv = self.commit_token(params, kv, None, token, ctx)
+        new_lengths = lengths + (active.astype(lengths.dtype)
+                                 if active is not None else 1)
+        return new_kv, new_lengths
 
     def prefill_probe(self, params, tokens, k: int, aux_inputs=None,
                       impl: str = "auto"):

@@ -15,6 +15,7 @@ import jax
 
 from repro.kernels import edm_loss as _edm
 from repro.kernels import flash_attention as _fa
+from repro.kernels import flash_decode as _fd
 from repro.kernels import fused_adaln as _ad
 
 
@@ -52,7 +53,9 @@ def _route_mask(mask_mod, causal: bool, window: Optional[int]):
         raise NotImplementedError(
             f"mask_mod {getattr(mask_mod, '__name__', mask_mod)!r} has no "
             "Pallas kernel equivalent; use impl='chunked' (or tag the mask "
-            "constructor with .kernel_mask = (kind, window, mask_seq))")
+            "constructor with .kernel_mask = (kind, window, mask_seq)). "
+            "One-token decode does not route here at all — it has a "
+            "dedicated split-KV kernel, ops.flash_decode")
     return tag
 
 
@@ -117,3 +120,15 @@ def euler_update(z, f, sigma, sigma_to, sigma_data: float = 0.5):
 @functools.partial(jax.jit, static_argnames=("sigma_data",))
 def edm_loss(f, z, y, sigma, sigma_data: float = 0.5):
     return _edm.edm_loss(f, z, y, sigma, sigma_data, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def flash_decode(q, k_pages, v_pages, page_table, lengths,
+                 window: Optional[int] = None):
+    """Split-KV paged decode attention (flash-decoding). q: (B, KV, G, hd);
+    k/v pages: (P, page_size, KV, hd). Returns (out, lse) fp32 partials over
+    the committed tokens; fold in the current token's own k/v with
+    ``flash_decode.combine_self``. This is the decode route — the prefill /
+    train masks above never see 1-token queries."""
+    return _fd.flash_decode(q, k_pages, v_pages, page_table, lengths,
+                            window=window, interpret=_interpret())

@@ -1,62 +1,395 @@
-"""Batched block-wise serving driver: prefill a batch of prompts, then
-generate with the DiffusionBlocks sampler (one Euler step per block per token
-by default — compute-equivalent to a standard forward pass, paper App. H).
+"""High-throughput block-wise serving: scan-fused generation over a paged
+bf16 KV cache, with static and continuous-batching schedulers.
+
+The seed served one jitted dispatch PLUS a host sync per generated token and
+kept a dense fp32 worst-case cache slab. This engine:
+
+  * folds the whole denoise → sample → commit loop into ONE jitted
+    ``lax.scan`` over new-token positions (greedy and temperature/top-k both
+    traced — no per-token host round-trip);
+  * prefills ragged prompts inside one scan with per-slot activity masks —
+    different prompt lengths share ONE compiled program (masking is
+    length-aware, never shape-aware);
+  * stores KV in the paged pool of ``repro.nn.cache`` (bf16 under the
+    default ``precision="bf16"`` policy, fp32 logsumexp in the attend);
+  * optionally routes decode attention through the split-KV Pallas
+    flash-decode kernel (``--impl kernels``).
+
+Schedulers (``--scheduler``):
+
+  static      admit the whole batch, prefill, then one decode scan —
+              O(1) dispatches for the entire batch of generations.
+  continuous  slot-based continuous batching: a fixed number of request
+              slots over a shared page pool. Between scan SEGMENTS the host
+              admits queued requests into freed slots/pages and retires
+              finished sequences; inside a segment, slots still consuming
+              their prompt commit prompt tokens while neighbors generate.
+
+Compile-cache notes: ``steps_per_block`` / ``temperature`` / ``top_k`` /
+``precision`` / ``impl`` are STATIC — they select the trace. ``DecodeEngine``
+instances are memoized per (dbm, static config) by ``get_engine``, so
+repeated ``generate`` calls reuse compiled programs; only a new padded
+prompt width or segment length triggers a retrace.
 """
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import time
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+
+def _ragged_transition_accuracy(lm, seqs) -> float:
+    """Mean legal-transition rate over variable-length sequences — scored
+    per row so zero-padding never fabricates (or breaks) transitions."""
+    return float(np.mean([lm.transition_accuracy(np.asarray(s)[None])
+                          for s in seqs]))
+
+from repro import precision as precision_mod
 from repro.configs import DBConfig, get_config, reduced
 from repro.core import DiffusionBlocksModel
 from repro.checkpoint import load_blocks
 from repro.data import MarkovLM
+from repro.nn import cache as KVC
+
+
+class DecodeEngine:
+    """Owns the jitted scan-fused programs for one (model, static config).
+
+    Three programs, all length-aware over the paged cache:
+      _prefill  scan over prompt positions, committing where t < plens[b]
+      _decode   scan over new-token positions: denoise → sample → commit
+      _serve    continuous-batching segment: each slot either commits its
+                next PROMPT token (still prefilling) or a GENERATED token
+    """
+
+    def __init__(self, dbm: DiffusionBlocksModel, *, steps_per_block: int = 1,
+                 temperature: float = 0.0, top_k: int = 0,
+                 precision="bf16", impl: str = "auto"):
+        self.dbm = dbm
+        self.pol = precision_mod.get_policy(precision)
+        self.impl = impl
+        self.dispatches = 0          # jitted-call count (throughput reporting)
+        pol, spb = self.pol, steps_per_block
+        temp, tk = temperature, top_k
+
+        def prefill_scan(params, kv, page_table, lengths, prompts, plens):
+            def body(carry, t):
+                kv, lengths = carry
+                act = t < plens
+                tok = jnp.take(prompts, t, axis=1)
+                kv, lengths = dbm.commit_prompt_token(
+                    params, kv, page_table, lengths, tok[:, None],
+                    active=act, precision=pol, impl=impl)
+                return (kv, lengths), None
+            return jax.lax.scan(body, (kv, lengths),
+                                jnp.arange(prompts.shape[1]))[0]
+
+        def decode_scan(params, kv, page_table, lengths, stop_at, rng, n):
+            def body(carry, _):
+                kv, lengths, rng = carry
+                rng, rs = jax.random.split(rng)
+                act = lengths < stop_at
+                tok, kv, lengths = dbm.serve_step_paged(
+                    params, kv, page_table, lengths, rs, active=act,
+                    steps_per_block=spb, temperature=temp, top_k=tk,
+                    precision=pol, impl=impl)
+                return (kv, lengths, rng), tok
+            (kv, lengths, rng), toks = jax.lax.scan(
+                body, (kv, lengths, rng), None, length=n)
+            return kv, lengths, rng, toks.T          # (B, n)
+
+        def serve_scan(params, kv, page_table, lengths, prompt_buf, plens,
+                       stop_at, active, rng, n):
+            def body(carry, _):
+                kv, lengths, rng = carry
+                rng, rs = jax.random.split(rng)
+                in_prompt = lengths < plens
+                idx = jnp.clip(lengths, 0, prompt_buf.shape[1] - 1)
+                ptok = jnp.take_along_axis(prompt_buf, idx[:, None], 1)[:, 0]
+                act = active & (lengths < stop_at)
+                ctx = dbm._paged_ctx(params, lengths, page_table, act, pol,
+                                     impl)
+                rn, rsamp = jax.random.split(rs)
+                d = dbm.denoise_next_token(params, kv, None, rn, ctx, spb)
+                logits = dbm.model.logits(params, d)
+                gtok = dbm.sample_token(logits[:, 0], rsamp, temp, tk)
+                tok = jnp.where(in_prompt, ptok, gtok)
+                kv = dbm.commit_token(params, kv, None, tok[:, None], ctx)
+                emitted = jnp.where(act & ~in_prompt, tok, -1)
+                lengths = lengths + act.astype(lengths.dtype)
+                return (kv, lengths, rng), emitted
+            (kv, lengths, rng), toks = jax.lax.scan(
+                body, (kv, lengths, rng), None, length=n)
+            return kv, lengths, rng, toks.T          # (B, n); -1 = no emit
+
+        self._prefill = jax.jit(prefill_scan)
+        self._decode = jax.jit(decode_scan, static_argnames=("n",))
+        self._serve = jax.jit(serve_scan, static_argnames=("n",))
+
+    # ------------------------------------------------------------------
+    def generate(self, params, prompts, max_new: int, rng=None, *,
+                 prompt_lengths=None, page_size: int = KVC.DEFAULT_PAGE_SIZE,
+                 reference: bool = False):
+        """Static-batch generation. prompts: (B, S0) (right-padded when
+        ``prompt_lengths`` is ragged) -> (B, S0 + max_new); row b holds its
+        prompt then its ``max_new`` generated tokens starting at
+        ``prompt_lengths[b]``.
+
+        ``reference=True`` replays the seed serving loop faithfully — one
+        jitted dispatch + host sync per generated token — through the SAME
+        step function, so greedy outputs are bit-identical to the fused scan
+        (the decode-parity tests and ``benchmarks/table15_decode`` rely on
+        this).
+        """
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        prompts = jnp.asarray(prompts)
+        B, S0 = prompts.shape
+        plens = (jnp.full((B,), S0, jnp.int32) if prompt_lengths is None
+                 else jnp.asarray(prompt_lengths, jnp.int32))
+        pps = KVC.pages_for(int(jnp.max(plens)) + max_new, page_size)
+        kv = self.dbm.model.init_paged_cache(B, 1 + B * pps, page_size,
+                                             self.pol)
+        table = KVC.identity_page_table(B, pps)
+        lengths = jnp.zeros((B,), jnp.int32)
+        kv, lengths = self._prefill(params, kv, table, lengths,
+                                    prompts.astype(jnp.int32), plens)
+        self.dispatches += 1
+        stop_at = plens + max_new
+        if reference:
+            cols = []
+            for _ in range(max_new):
+                kv, lengths, rng, t = self._decode(params, kv, table, lengths,
+                                                   stop_at, rng, n=1)
+                self.dispatches += 1
+                cols.append(np.asarray(t))       # host sync per token (seed)
+            gen = np.concatenate(cols, axis=1)
+        else:
+            kv, lengths, rng, t = self._decode(params, kv, table, lengths,
+                                               stop_at, rng, n=max_new)
+            self.dispatches += 1
+            gen = np.asarray(t)
+        out = np.zeros((B, S0 + max_new), dtype=np.asarray(prompts).dtype)
+        pl = np.asarray(plens)
+        pr = np.asarray(prompts)
+        for b in range(B):
+            out[b, :pl[b]] = pr[b, :pl[b]]
+            out[b, pl[b]:pl[b] + max_new] = gen[b]
+        return jnp.asarray(out)
+
+
+_ENGINE_DEFAULTS = dict(steps_per_block=1, temperature=0.0, top_k=0,
+                        precision="bf16", impl="auto")
+
+
+def get_engine(dbm: DiffusionBlocksModel, **config) -> DecodeEngine:
+    """Memoized engine per (dbm, static config): repeated ``generate`` calls
+    reuse the compiled scan programs instead of thrashing the jit cache.
+    The key is normalized against the engine defaults, so ``get_engine(dbm)``
+    and an explicit-defaults call share one engine."""
+    cfg = {**_ENGINE_DEFAULTS, **config}
+    cfg["precision"] = precision_mod.get_policy(cfg["precision"]).name
+    key = tuple(sorted(cfg.items()))
+    cache = dbm.__dict__.setdefault("_serve_engines", {})
+    if key not in cache:
+        cache[key] = DecodeEngine(dbm, **cfg)
+    return cache[key]
 
 
 def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
-             steps_per_block: int = 1, rng=None):
-    """prompts: (B, S0) -> (B, S0+max_new).
+             steps_per_block: int = 1, rng=None, *, prompt_lengths=None,
+             temperature: float = 0.0, top_k: int = 0, precision="bf16",
+             impl: str = "auto", page_size: int = KVC.DEFAULT_PAGE_SIZE,
+             reference: bool = False):
+    """prompts: (B, S0) -> (B, S0 + max_new), scan-fused over the paged
+    bf16 KV cache (see DecodeEngine). The cache dtype follows the
+    ``repro.precision`` policy (bf16 KV by default; recurrent states keep
+    their family override). ``reference=True`` = seed-style per-token loop
+    (same math, one dispatch + host sync per token)."""
+    eng = get_engine(dbm, steps_per_block=steps_per_block,
+                     temperature=temperature, top_k=top_k,
+                     precision=precision, impl=impl)
+    return eng.generate(params, prompts, max_new, rng,
+                        prompt_lengths=prompt_lengths, page_size=page_size,
+                        reference=reference)
 
-    Prefill commits the whole prompt inside ONE jitted ``lax.scan`` over
-    positions — O(1) dispatches instead of one jitted call per prompt token
-    (the per-token Python loop paid ~1 dispatch + host sync per token)."""
-    rng = rng if rng is not None else jax.random.PRNGKey(0)
-    B, S0 = prompts.shape
-    cache = dbm.model.init_cache(B, S0 + max_new, jnp.float32)
-    ctx0 = dbm.make_ctx(params, 1, "decode")
-    ctx0.positions = None
-    serve = jax.jit(lambda p, c, pos, r: dbm.serve_step(
-        p, c, pos, r, steps_per_block=steps_per_block))
 
-    @jax.jit
-    def prefill_commits(p, c, toks):
-        def body(c, xs):
-            pos, tok = xs
-            return dbm.commit_token(p, c, pos, tok[:, None], ctx0), None
-        c, _ = jax.lax.scan(body, c, (jnp.arange(S0), toks.T))
-        return c
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
 
-    cache = prefill_commits(params, cache, prompts)
-    out = [prompts]
-    for t in range(S0, S0 + max_new):
-        rng, rs = jax.random.split(rng)
-        tok, cache = serve(params, cache, t, rs)
-        out.append(tok[:, None])
-    return jnp.concatenate(out, axis=1)
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    pages: List[int] = dataclasses.field(default_factory=list)
 
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over a shared page pool.
+
+    ``num_slots`` request slots share ``total_pages`` physical pages
+    (physical page 0 reserved as the trash page). Between scan segments of
+    ``seg_len`` steps the host admits queued requests into free slots —
+    allocating ``ceil((prompt + max_new) / page_size)`` pages each — and
+    retires finished sequences, returning their pages to the free list.
+    Inside a segment everything is one compiled program: slots still
+    consuming their prompt commit prompt tokens, the rest generate.
+    """
+
+    def __init__(self, dbm, params, *, num_slots: int = 8,
+                 page_size: int = KVC.DEFAULT_PAGE_SIZE,
+                 max_prompt: int = 64, max_len: int = 128,
+                 total_pages: Optional[int] = None, seg_len: int = 16,
+                 steps_per_block: int = 1, temperature: float = 0.0,
+                 top_k: int = 0, precision="bf16", impl: str = "auto"):
+        self.dbm, self.params = dbm, params
+        self.eng = get_engine(dbm, steps_per_block=steps_per_block,
+                              temperature=temperature, top_k=top_k,
+                              precision=precision, impl=impl)
+        self.page_size, self.seg_len = page_size, seg_len
+        self.max_prompt, self.max_len = max_prompt, max_len
+        pps = KVC.pages_for(max_len, page_size)
+        self.total_pages = (1 + num_slots * pps if total_pages is None
+                            else total_pages)
+        self.kv = dbm.model.init_paged_cache(num_slots, self.total_pages,
+                                             page_size, self.eng.pol)
+        self.free_pages = list(range(1, self.total_pages))
+        self.num_slots = num_slots
+        self.table = np.zeros((num_slots, pps), np.int32)   # 0 = trash page
+        self.lengths = np.zeros(num_slots, np.int32)
+        self.plens = np.zeros(num_slots, np.int32)
+        self.stop_at = np.zeros(num_slots, np.int32)
+        self.active = np.zeros(num_slots, bool)
+        self.prompt_buf = np.zeros((num_slots, max_prompt), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.queue: collections.deque = collections.deque()
+        self._next_rid = 0
+        self.steps = 0               # scan steps executed (all slots)
+
+    def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size <= self.max_prompt, "prompt exceeds max_prompt"
+        assert prompt.size + max_new <= self.max_len, "request exceeds max_len"
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new))
+        return rid
+
+    # ---- host-side scheduling between segments -----------------------
+    def _admit(self) -> int:
+        new_slots = np.zeros(self.num_slots, bool)
+        for s in range(self.num_slots):
+            if self.active[s] or not self.queue:
+                continue
+            req = self.queue[0]
+            need = KVC.pages_for(len(req.prompt) + req.max_new,
+                                 self.page_size)
+            if need > len(self.free_pages):
+                break                      # wait for retirements
+            self.queue.popleft()
+            req.pages = [self.free_pages.pop() for _ in range(need)]
+            self.table[s, :] = KVC.TRASH_PAGE
+            self.table[s, :need] = req.pages
+            self.lengths[s] = 0
+            self.plens[s] = len(req.prompt)
+            self.stop_at[s] = len(req.prompt) + req.max_new
+            self.prompt_buf[s, :] = 0
+            self.prompt_buf[s, :len(req.prompt)] = req.prompt
+            self.slot_req[s] = req
+            self.active[s] = True
+            new_slots[s] = True
+        if new_slots.any():
+            # recycled slots must not inherit the previous occupant's
+            # per-slot state (recurrent mamba/xLSTM, cross blocks); paged KV
+            # needs no reset — length masking hides stale pages.
+            self.kv = self.dbm.model.reset_paged_slots(
+                self.kv, jnp.asarray(new_slots))
+        return int(new_slots.sum())
+
+    def _retire(self) -> List[Request]:
+        out = []
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None or not self.active[s]:
+                continue
+            if self.lengths[s] >= self.stop_at[s]:
+                self.free_pages.extend(req.pages)
+                req.pages = []
+                self.table[s, :] = KVC.TRASH_PAGE
+                self.active[s] = False
+                self.slot_req[s] = None
+                out.append(req)
+        return out
+
+    def run(self, rng=None) -> List[Request]:
+        """Drain the queue; returns finished requests (ordered by rid)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        finished = []
+        while self.queue or self.active.any():
+            if not self._admit() and not self.active.any():
+                raise RuntimeError(
+                    "page pool too small for the next queued request "
+                    f"(free={len(self.free_pages)} pages)")
+            self.kv, lengths, rng, emitted = self.eng._serve(
+                self.params, self.kv, jnp.asarray(self.table),
+                jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
+                jnp.asarray(self.plens), jnp.asarray(self.stop_at),
+                jnp.asarray(self.active), rng, n=self.seg_len)
+            self.eng.dispatches += 1
+            self.steps += self.seg_len
+            self.lengths = np.array(lengths)               # host copy (mutable)
+            emitted = np.asarray(emitted)                  # (slots, seg)
+            for s in range(self.num_slots):
+                req = self.slot_req[s]
+                if req is None:
+                    continue
+                req.out.extend(int(t) for t in emitted[s] if t >= 0)
+            finished.extend(self._retire())
+        return sorted(finished, key=lambda r: r.rid)
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--blocks", type=int, default=4)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--scheduler", choices=("static", "continuous"),
+                    default="static")
+    ap.add_argument("--steps-per-block", type=int, default=1)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--impl", default="auto",
+                    help="decode attention impl: auto | kernels (Pallas "
+                         "flash-decode; interpret-mode on CPU)")
+    ap.add_argument("--page-size", type=int, default=KVC.DEFAULT_PAGE_SIZE)
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="continuous: concurrent request slots")
+    ap.add_argument("--seg-len", type=int, default=16,
+                    help="continuous: scan steps between host scheduling")
+    ap.add_argument("--requests", type=int, default=12,
+                    help="continuous: queued requests (ragged prompts)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the batch/queue")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -68,15 +401,64 @@ def main():
         params = load_blocks(args.ckpt_dir, params, dbm.ranges)
 
     lm = MarkovLM(vocab_size=cfg.vocab_size, seed=7)
-    prompts = jnp.asarray(lm.sample(np.random.RandomState(1), args.batch,
-                                    args.prompt_len))
-    t0 = time.time()
-    out = generate(dbm, params, prompts, args.max_new)
-    dt = time.time() - t0
-    gen = np.array(out[:, args.prompt_len:])
-    print(f"generated {gen.shape} in {dt:.2f}s "
-          f"({args.batch*args.max_new/dt:.1f} tok/s)")
-    print("legal-transition rate:", lm.transition_accuracy(np.array(out)))
+    rs = np.random.RandomState(1)
+    kw = dict(steps_per_block=args.steps_per_block,
+              temperature=args.temperature, top_k=args.top_k,
+              precision=args.precision, impl=args.impl)
+
+    if args.scheduler == "static":
+        prompts = jnp.asarray(lm.sample(rs, args.batch, args.prompt_len))
+        plens = None
+        if args.ragged:
+            plens = rs.randint(max(2, args.prompt_len // 2),
+                               args.prompt_len + 1, size=args.batch)
+        eng = get_engine(dbm, **kw)
+        t0 = time.time()
+        out = eng.generate(params, prompts, args.max_new,
+                           prompt_lengths=plens, page_size=args.page_size)
+        jax.block_until_ready(out)
+        dt = time.time() - t0
+        n_tok = args.batch * args.max_new
+        pps = KVC.pages_for(args.prompt_len + args.max_new, args.page_size)
+        pool_abstract = jax.eval_shape(          # report size; allocate nothing
+            lambda: dbm.model.init_paged_cache(
+                args.batch, 1 + args.batch * pps, args.page_size,
+                args.precision))
+        print(f"[static] generated {args.batch}x{args.max_new} tokens in "
+              f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile) | "
+              f"dispatches={eng.dispatches} "
+              f"({eng.dispatches/n_tok:.3f}/token) | "
+              f"cache={KVC.cache_bytes(pool_abstract)/1e6:.1f}MB paged")
+        rows = np.array(out)
+        lens = (np.asarray(plens) if plens is not None
+                else np.full(args.batch, args.prompt_len)) + args.max_new
+        print("legal-transition rate:", _ragged_transition_accuracy(
+            lm, [rows[b, :lens[b]] for b in range(args.batch)]))
+    else:
+        cb = ContinuousBatcher(dbm, params, num_slots=args.num_slots,
+                               page_size=args.page_size,
+                               max_prompt=args.prompt_len,
+                               max_len=args.prompt_len + args.max_new,
+                               seg_len=args.seg_len, **kw)
+        for _ in range(args.requests):
+            plen = (rs.randint(max(2, args.prompt_len // 2),
+                               args.prompt_len + 1)
+                    if args.ragged else args.prompt_len)
+            cb.submit(lm.sample(rs, 1, plen)[0], args.max_new)
+        t0 = time.time()
+        done = cb.run(jax.random.PRNGKey(0))
+        dt = time.time() - t0
+        n_tok = sum(len(r.out) for r in done)
+        print(f"[continuous] served {len(done)} requests / {n_tok} tokens "
+              f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile) | "
+              f"slots={args.num_slots} pool={cb.total_pages} pages x "
+              f"{args.page_size} | dispatches={cb.eng.dispatches} "
+              f"({cb.eng.dispatches/max(n_tok,1):.3f}/token) | "
+              f"cache={KVC.cache_bytes(cb.kv)/1e6:.1f}MB paged")
+        seqs = [np.concatenate([r.prompt, np.asarray(r.out, np.int64)])
+                for r in done]
+        print("legal-transition rate:",
+              _ragged_transition_accuracy(lm, seqs))
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ from repro.configs.base import ModelConfig
 from repro.nn import layers as L
 from repro.nn import attention as A
 from repro.nn import adaln
+from repro.nn import cache as KVC
 from repro.nn.init import ParamSpec
 from repro.nn.moe import moe_fwd, moe_spec
 
@@ -43,12 +44,29 @@ class LayerCtx:
     kv_positions: Optional[jax.Array] = None
     impl: str = "auto"                          # attention impl
     precision: Any = None                       # repro.precision.Policy | None
+    # ---- paged serving decode (repro.nn.cache) ----
+    lengths: Optional[jax.Array] = None         # (B,) committed tokens / slot
+    page_table: Optional[jax.Array] = None      # (B, n_logical_pages) int32
+    active: Optional[jax.Array] = None          # (B,) bool: slots that commit
+    commit: bool = True                         # False = denoise probe (no append)
     q_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
     kv_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
 
     def dims(self) -> A.AttnDims:
         c = self.cfg
         return A.AttnDims(c.n_heads, c.n_kv_heads, c.head_dim, c.rope_theta)
+
+
+def masked_state_update(new_state, old_state, active: Optional[jax.Array]):
+    """Per-slot recurrent-state commit mask for ragged / continuous batching:
+    inactive slots keep their old state. Leaves are (B, ...)-leading at the
+    point of update (inside the unit scan). Attention KV needs no such mask —
+    the paged append already redirects inactive writes to the trash page."""
+    if active is None or old_state is None:
+        return new_state
+    return jax.tree_util.tree_map(
+        lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o), new_state, old_state)
 
 
 def default_mask(cfg: ModelConfig, bidirectional: bool = False):
@@ -117,9 +135,16 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
 
     x = _norm_modulate(params["ln1"], h, ctx, s1, c1, cm)
     if ctx.mode == "decode" and not cross:
-        attn_out, new_cache = A.decode_attention(
-            params["attn"], x, dims, cache, ctx.pos,
-            window=cfg.sliding_window, kv_chunk=ctx.kv_chunk)
+        if isinstance(cache, KVC.PagedKV):
+            attn_out, new_cache = KVC.paged_decode_attention(
+                params["attn"], x, dims, cache, lengths=ctx.lengths,
+                page_table=ctx.page_table, active=ctx.active,
+                commit=ctx.commit, window=cfg.sliding_window, impl=ctx.impl)
+        else:
+            attn_out, new_cache = A.decode_attention(
+                params["attn"], x, dims, cache, ctx.pos,
+                window=cfg.sliding_window, kv_chunk=ctx.kv_chunk,
+                impl=ctx.impl)
     elif cross:
         # cross-attention to ctx.kv_x (image/audio memory); cache holds
         # precomputed (k, v) in decode/prefill reuse.

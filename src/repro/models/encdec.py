@@ -15,11 +15,13 @@ import jax
 from repro.nn.scan_util import uscan
 import jax.numpy as jnp
 
+from repro import precision as precision_mod
 from repro.configs.base import AUDIO
 from repro.models import common as C
 from repro.models.model_api import BaseModel, register
 from repro.nn import adaln
 from repro.nn import attention as A
+from repro.nn import cache as KVC
 from repro.nn import layers as L
 from repro.nn.init import stack_specs
 
@@ -47,8 +49,13 @@ def dlayer_spec(cfg, db: bool):
 def _self_attn(p, x, ctx, cache):
     dims = ctx.dims()
     if ctx.mode == "decode":
+        if isinstance(cache, KVC.PagedKV):
+            return KVC.paged_decode_attention(
+                p, x, dims, cache, lengths=ctx.lengths,
+                page_table=ctx.page_table, active=ctx.active,
+                commit=ctx.commit, impl=ctx.impl)
         return A.decode_attention(p, x, dims, cache, ctx.pos,
-                                  kv_chunk=ctx.kv_chunk)
+                                  kv_chunk=ctx.kv_chunk, impl=ctx.impl)
     mask_mod = ctx.mask_mod or A.causal_mask
     out, (k, v) = A.attention_fwd(
         p, x, dims, positions=ctx.positions, mask_mod=mask_mod,
@@ -188,23 +195,33 @@ class EncDecModel(BaseModel):
         pos = L.sinusoidal_positions(h.shape[1], self.cfg.d_model)
         return h + pos.astype(h.dtype)
 
-    def apply_units(self, params, h, start, size, ctx, cache=None):
+    def apply_units(self, params, h, start, size, ctx, cache=None,
+                    reset_mask=None):
         lp = _scan_slice(params["layers"], start, size)
         zero = jnp.zeros((), jnp.float32)
 
         if cache is None:
+            assert reset_mask is None
             def step_nc(carry, p):
                 h, nc = dlayer_apply(p, carry, ctx, None)
                 return h, nc
             h, caches = uscan(step_nc, h, lp)
             return h, caches if ctx.mode == "prefill" else None, zero
 
+        h0 = h
+
         def step(carry, xs):
-            p, c = xs
-            h, nc = dlayer_apply(p, carry, ctx, c)
+            if reset_mask is None:
+                p, c = xs
+                h = carry
+            else:
+                p, c, rflag = xs
+                h = jnp.where(rflag, h0, carry)
+            h, nc = dlayer_apply(p, h, ctx, c)
             return h, nc
 
-        h, new_cache = uscan(step, h, (lp, cache))
+        xs = (lp, cache) if reset_mask is None else (lp, cache, reset_mask)
+        h, new_cache = uscan(step, h, xs)
         return h, new_cache, zero
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
@@ -229,3 +246,30 @@ class EncDecModel(BaseModel):
         bc = lambda x: jnp.broadcast_to(x[None], (size,) + x.shape)
         return {"self": jax.tree_util.tree_map(bc, self_one),
                 "cross": jax.tree_util.tree_map(bc, cross_one)}
+
+    def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
+        """Decoder self-attention KV is paged; the cross (encoder) cache is a
+        fixed per-slot block whose length never grows during decode."""
+        pol = precision_mod.get_policy(policy)
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        self_one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
+        cross_one = A.init_kv_cache(num_slots, cfg.n_audio_frames, dims,
+                                    pol.kv)
+        bc = lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape)
+        return {"self": jax.tree_util.tree_map(bc, self_one),
+                "cross": jax.tree_util.tree_map(bc, cross_one)}
+
+    def reset_paged_slots(self, cache, slot_mask):
+        # cross (encoder) blocks are (units, B, frames, ...): batch axis 1
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = A.init_kv_cache(int(slot_mask.shape[0]), cfg.n_audio_frames,
+                              dims, jnp.float32)
+        init = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape),
+            one)
+        return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
+                                                 slot_mask, 1))

@@ -14,11 +14,13 @@ import jax
 from repro.nn.scan_util import uscan
 import jax.numpy as jnp
 
+from repro import precision as precision_mod
 from repro.configs.base import HYBRID
 from repro.models import common as C
 from repro.models.model_api import BaseModel, register
 from repro.nn import adaln
 from repro.nn import attention as A
+from repro.nn import cache as KVC
 from repro.nn import layers as L
 from repro.nn import ssm as SSM
 from repro.nn.init import stack_specs
@@ -48,6 +50,10 @@ def mamba_layer_apply(p, h, ctx, state=None):
     if ctx.mode == "decode":
         y, new_state = SSM.mamba2_decode_step(p["mixer"], x, cfg.ssm,
                                               cfg.d_model, state)
+        if not ctx.commit:          # denoise probe: never advance the state
+            new_state = state
+        else:                       # ragged batches: inactive slots hold
+            new_state = C.masked_state_update(new_state, state, ctx.active)
     else:
         y, new_state = SSM.mamba2_fwd(p["mixer"], x, cfg.ssm, cfg.d_model,
                                       state if ctx.mode == "decode" else None)
@@ -86,13 +92,18 @@ class HybridModel(BaseModel):
         spec["shared"] = C.tlayer_spec(self.cfg, db)   # shared attention block
         return spec
 
-    def apply_units(self, params, h, start, size, ctx, cache=None):
+    def apply_units(self, params, h, start, size, ctx, cache=None,
+                    reset_mask=None):
         up = _scan_slice(params["units"], start, size)
         shared = params["shared"]
         zero = jnp.zeros((), jnp.float32)
+        h0 = h
 
         def unit(carry, xs):
             h, aux = carry
+            if reset_mask is not None:
+                xs, rflag = xs
+                h = jnp.where(rflag, h0, h)
             if cache is None:
                 p, c = xs, None
             else:
@@ -115,6 +126,8 @@ class HybridModel(BaseModel):
             return (h, aux + a), new_c
 
         xs = up if cache is None else (up, cache)
+        if reset_mask is not None:
+            xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(unit, (h, zero), xs)
         keep = ctx.mode in ("prefill", "decode")
         return h, new_cache if keep else None, aux
@@ -158,4 +171,34 @@ class HybridModel(BaseModel):
             "mamba": jax.tree_util.tree_map(
                 lambda x: bc(bc(x, self.inner), size), m_one),
             "shared_kv": jax.tree_util.tree_map(lambda x: bc(x, size), kv_one),
+        }
+
+    def reset_paged_slots(self, cache, slot_mask):
+        # mamba state leaves are (units, inner, B, ...): batch axis 2
+        cfg = self.cfg
+        m_one = SSM.mamba2_init_state(int(slot_mask.shape[0]), cfg.ssm,
+                                      cfg.d_model, jnp.float32)
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        init = jax.tree_util.tree_map(
+            lambda x: bc(bc(x, self.inner), self.n_units), m_one)
+        return dict(cache, mamba=KVC.reset_slots(cache["mamba"], init,
+                                                 slot_mask, 2))
+
+    def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
+        """Shared-attention KV is paged (bf16 under the serving policy); the
+        mamba states are O(1) per slot and follow the family's fp32-state
+        precision override (compounded rounding over the recurrence)."""
+        pol = precision_mod.get_policy(policy)
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        kv_one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
+        m_one = SSM.mamba2_init_state(num_slots, cfg.ssm, cfg.d_model,
+                                      pol.state_for(HYBRID))
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        return {
+            "mamba": jax.tree_util.tree_map(
+                lambda x: bc(bc(x, self.inner), self.n_units), m_one),
+            "shared_kv": jax.tree_util.tree_map(
+                lambda x: bc(x, self.n_units), kv_one),
         }

@@ -50,7 +50,13 @@ class BaseModel:
     def build_spec(self):
         raise NotImplementedError
 
-    def apply_units(self, params, h, start: int, size: int, ctx, cache=None):
+    def apply_units(self, params, h, start: int, size: int, ctx, cache=None,
+                    reset_mask=None):
+        """``reset_mask`` (n_units bool, requires ``cache``): before applying
+        unit u with reset_mask[u] set, the hidden stream is reset to the
+        input ``h`` — the serving commit pass restarts every DB block's clean
+        stream from raw token embeddings in ONE scan (see blocks.commit_token)
+        instead of a per-block Python loop."""
         raise NotImplementedError
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
@@ -59,6 +65,24 @@ class BaseModel:
     def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16,
                    start: int = 0, size: Optional[int] = None):
         raise NotImplementedError
+
+    def init_paged_cache(self, num_slots: int, n_pages: int, page_size: int,
+                         policy=None):
+        """Paged serving cache (repro.nn.cache): attention KV lives in a
+        pool of ``n_pages`` pages shared by ``num_slots`` request slots
+        (physical page 0 reserved as the trash page); per-slot recurrent
+        states stay dense. Storage dtype follows the precision policy
+        (``Policy.kv`` — bf16 under the serving default — for KV;
+        ``Policy.state_for`` for recurrent states)."""
+        raise NotImplementedError
+
+    def reset_paged_slots(self, cache, slot_mask):
+        """Zero the PER-SLOT state of slots being recycled for a new request
+        (``slot_mask``: (num_slots,) bool). Paged KV needs no reset — length
+        masking hides stale pages — so the purely-paged families return the
+        cache unchanged; families with recurrent state or fixed per-slot
+        cross blocks override."""
+        return cache
 
     def cache_batch(self, cache) -> int:
         """Batch size of a cache pytree (leaf layout is family-specific)."""

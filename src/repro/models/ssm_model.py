@@ -6,6 +6,7 @@ from repro.nn.scan_util import uscan
 import jax.numpy as jnp
 
 from repro.configs.base import SSM
+from repro.models import common as C
 from repro.models.model_api import BaseModel, register
 from repro.nn import adaln
 from repro.nn import layers as L
@@ -51,6 +52,11 @@ def _block_apply(p, h, ctx, kind: str, state=None):
         else:
             y, new_state = X.mlstm_fwd(p["cell"], x, cfg.n_heads, cfg.xlstm,
                                        return_state=ctx.mode == "prefill")
+    if ctx.mode == "decode":
+        if not ctx.commit:          # denoise probe: never advance the state
+            new_state = state
+        else:                       # ragged batches: inactive slots hold
+            new_state = C.masked_state_update(new_state, state, ctx.active)
     keep = ctx.mode in ("prefill", "decode")
     return adaln.gate(h, y, g), (new_state if keep else None)
 
@@ -84,12 +90,17 @@ class XLSTMModel(BaseModel):
         }
         return spec
 
-    def apply_units(self, params, h, start, size, ctx, cache=None):
+    def apply_units(self, params, h, start, size, ctx, cache=None,
+                    reset_mask=None):
         up = _scan_slice(params["units"], start, size)
         zero = jnp.zeros((), jnp.float32)
+        h0 = h
 
         def unit(carry, xs):
             h, aux = carry
+            if reset_mask is not None:
+                xs, rflag = xs
+                h = jnp.where(rflag, h0, h)
             if cache is None:
                 p, c = xs, {"slstm": None, "mlstm": None}
             else:
@@ -99,6 +110,8 @@ class XLSTMModel(BaseModel):
             return (h, aux), {"slstm": s_new, "mlstm": m_new}
 
         xs = up if cache is None else (up, cache)
+        if reset_mask is not None:
+            xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(unit, (h, zero), xs)
         keep = ctx.mode in ("prefill", "decode")
         return h, new_cache if keep else None, aux
@@ -129,3 +142,18 @@ class XLSTMModel(BaseModel):
             "slstm": jax.tree_util.tree_map(lambda x: bc(x, size), s_one),
             "mlstm": jax.tree_util.tree_map(lambda x: bc(x, size), m_one),
         }
+
+    def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
+        """xLSTM decode state is O(1) per slot — there is nothing to page.
+        The engine's per-slot lengths / active masks still apply (ragged
+        batches and continuous batching work); pages are simply unused.
+        The precision policy is deliberately NOT threaded here: the state
+        constructors pin fp32 (max-stabilizer recurrences), matching the
+        policy's fp32-family override for SSM."""
+        return self.init_cache(num_slots, page_size)
+
+    def reset_paged_slots(self, cache, slot_mask):
+        # state leaves are (units, B, ...): batch axis 1
+        from repro.nn import cache as KVC
+        init = self.init_cache(int(slot_mask.shape[0]), 1)
+        return KVC.reset_slots(cache, init, slot_mask, 1)

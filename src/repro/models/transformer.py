@@ -7,10 +7,12 @@ import jax
 from repro.nn.scan_util import uscan
 import jax.numpy as jnp
 
+from repro import precision as precision_mod
 from repro.configs.base import DENSE, MOE, VLM
 from repro.models import common as C
 from repro.models.model_api import BaseModel, register
 from repro.nn import attention as A
+from repro.nn import cache as KVC
 from repro.nn.init import init_params, stack_specs
 
 
@@ -38,11 +40,13 @@ class DecoderModel(BaseModel):
         spec["layers"] = stack_specs(layer, self.cfg.n_layers)
         return spec
 
-    def apply_units(self, params, h, start, size, ctx, cache=None):
+    def apply_units(self, params, h, start, size, ctx, cache=None,
+                    reset_mask=None):
         lp = _scan_slice(params["layers"], start, size)
         zero = jnp.zeros((), jnp.float32)
 
         if cache is None:
+            assert reset_mask is None
             def step_nc(carry, p):
                 h, aux = carry
                 h, new_c, a = C.tlayer_apply(p, h, ctx,
@@ -52,14 +56,21 @@ class DecoderModel(BaseModel):
             (h, aux), caches = uscan(step_nc, (h, zero), lp)
             return h, caches if ctx.mode == "prefill" else None, aux
 
+        h0 = h   # block-boundary reset value (commit scan: raw embeddings)
+
         def step(carry, xs):
             h, aux = carry
-            p, c = xs
+            if reset_mask is None:
+                p, c = xs
+            else:
+                p, c, rflag = xs
+                h = jnp.where(rflag, h0, h)
             h, new_c, a = C.tlayer_apply(p, h, ctx, moe_layer=self.is_moe,
                                          cache=c)
             return (h, aux + a), new_c
 
-        (h, aux), new_cache = uscan(step, (h, zero), (lp, cache))
+        xs = (lp, cache) if reset_mask is None else (lp, cache, reset_mask)
+        (h, aux), new_cache = uscan(step, (h, zero), xs)
         return h, new_cache, aux
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):
@@ -87,6 +98,16 @@ class DecoderModel(BaseModel):
         return jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (size,) + x.shape), one)
 
+    def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
+        pol = precision_mod.get_policy(policy)
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape),
+            one)
+
 
 @register(VLM)
 class VLMModel(BaseModel):
@@ -113,11 +134,16 @@ class VLMModel(BaseModel):
         }
         return spec
 
-    def apply_units(self, params, h, start, size, ctx, cache=None):
+    def apply_units(self, params, h, start, size, ctx, cache=None,
+                    reset_mask=None):
         up = _scan_slice(params["units"], start, size)
+        h0 = h
 
         def unit(carry, xs):
             h, aux = carry
+            if reset_mask is not None:
+                xs, rflag = xs
+                h = jnp.where(rflag, h0, h)
             if cache is None:
                 p, c = xs, None
             else:
@@ -141,6 +167,8 @@ class VLMModel(BaseModel):
             return (h, aux + a), new_c
 
         xs = up if cache is None else (up, cache)
+        if reset_mask is not None:
+            xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(
             unit, (h, jnp.zeros((), jnp.float32)), xs)
         keep = ctx.mode in ("prefill", "decode")
@@ -184,3 +212,33 @@ class VLMModel(BaseModel):
                 lambda x: bc(bc(x, self.k_self), size), one),
             "cross": jax.tree_util.tree_map(lambda x: bc(x, size), x_one),
         }
+
+    def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
+        """Self-attention KV is paged; the cross-attention (image) cache is a
+        fixed per-slot block — its length never grows during decode."""
+        pol = precision_mod.get_policy(policy)
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
+        x_one = A.init_kv_cache(num_slots, cfg.n_image_tokens, dims, pol.kv)
+        bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
+        return {
+            "self": jax.tree_util.tree_map(
+                lambda x: bc(bc(x, self.k_self), self.n_units), one),
+            "cross": jax.tree_util.tree_map(
+                lambda x: bc(x, self.n_units), x_one),
+        }
+
+    def reset_paged_slots(self, cache, slot_mask):
+        # cross (image) blocks are (units, B, n_image_tokens, ...): axis 1
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        one = A.init_kv_cache(int(slot_mask.shape[0]), cfg.n_image_tokens,
+                              dims, jnp.float32)
+        init = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape),
+            one)
+        return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
+                                                 slot_mask, 1))

@@ -320,9 +320,16 @@ def init_kv_cache(batch: int, cache_len: int, dims: AttnDims, dtype=jnp.bfloat16
 
 
 def decode_attention(params, x, dims: AttnDims, cache, pos, *,
-                     window: Optional[int] = None, kv_chunk: int = 2048):
+                     window: Optional[int] = None, kv_chunk: int = 2048,
+                     impl: str = "auto"):
     """One-token decode. x: (B, 1, d); cache k/v: (B, C, KV, hd); pos: scalar
     current absolute position. SWA uses a ring buffer of size C == window.
+
+    ``impl="kernels"`` routes the attend through the split-KV Pallas
+    flash-decode kernel (``repro.kernels.flash_decode``) by viewing the dense
+    cache as pages with an identity table; the SWA ring buffer's slot→abs
+    mapping has no kernel mask equivalent, so that combination raises
+    (serve with the paged cache instead — its window masking is length-aware).
 
     Returns (out, new_cache).
     """
@@ -337,22 +344,39 @@ def decode_attention(params, x, dims: AttnDims, cache, pos, *,
         cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
     new_v = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    # validity: slot index corresponds to absolute position
-    idx = jnp.arange(C)
-    if window is not None:
-        # ring: entry i holds abs position p with p % C == i, p <= pos, pos-p < C
-        abs_pos = pos - ((pos - idx) % C)
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+    if impl in ("pallas", "kernels"):
+        if window is not None:
+            raise NotImplementedError(
+                "flash-decode over the dense SWA ring buffer is unsupported "
+                "(ring slot positions have no kernel mask); use the paged "
+                "cache (repro.nn.cache) or impl='auto'")
+        from repro.nn import cache as KVC
+        # attend committed tokens (< pos) from the OLD cache viewed as pages,
+        # then fold in the fresh token's own (k, v) from the fp32 partials —
+        # identical math to masked attention over the updated cache.
+        pages, table = KVC.dense_to_paged(cache["k"], cache["v"],
+                                          KVC.DEFAULT_PAGE_SIZE * 8)
+        lengths = jnp.full((B,), pos, jnp.int32)
+        qg = q[:, 0].reshape(B, dims.n_kv_heads, dims.q_per_kv, dims.head_dim)
+        out = KVC.attend_paged(qg, pages, table, lengths, k[:, 0], v[:, 0],
+                               impl=impl).astype(q.dtype)
     else:
-        valid = idx <= pos
-    kpos_arr = jnp.where(valid, idx if window is None else 0, -10**9)
+        # validity: slot index corresponds to absolute position
+        idx = jnp.arange(C)
+        if window is not None:
+            # ring: entry i holds abs pos p with p % C == i, p <= pos, pos-p < C
+            abs_pos = pos - ((pos - idx) % C)
+            valid = (abs_pos >= 0) & (abs_pos <= pos) & (abs_pos > pos - window)
+        else:
+            valid = idx <= pos
+        kpos_arr = jnp.where(valid, idx if window is None else 0, -10**9)
 
-    def mask(qp, kp):
-        return (kp > -10**9)[None, :].repeat(qp.shape[0], 0)
+        def mask(qp, kp):
+            return (kp > -10**9)[None, :].repeat(qp.shape[0], 0)
 
-    out = attend(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
-                 mask_mod=mask, qpos=posv, kpos=kpos_arr,
-                 impl="chunked" if C > 4096 else "naive",
-                 q_chunk=1, kv_chunk=kv_chunk)
+        out = attend(q, new_k.astype(q.dtype), new_v.astype(q.dtype),
+                     mask_mod=mask, qpos=posv, kpos=kpos_arr,
+                     impl="chunked" if C > 4096 else "naive",
+                     q_chunk=1, kv_chunk=kv_chunk)
     out = out.reshape(B, 1, dims.n_heads * dims.head_dim)
     return out @ params["wo"].astype(x.dtype), {"k": new_k, "v": new_v}

@@ -1,0 +1,223 @@
+"""Paged KV cache for serving (vLLM-style) + the paged decode attention op.
+
+Instead of one dense worst-case ``(B, C_max, KV, hd)`` slab per layer, keys
+and values live in a pool of fixed-size PAGES shared by every sequence slot:
+
+  pages      (P, page_size, KV, hd)   physical storage (bf16 under the
+                                      serving precision policy)
+  page_table (B, n_logical_pages)     int32 — physical page id backing
+                                      logical page p of slot b
+  lengths    (B,) int32               committed tokens per slot
+
+Memory is allocated in page granularity proportional to what sequences
+*actually* use (the scheduler in ``launch/serve`` hands pages back when a
+sequence retires), ragged prompt lengths share ONE compiled program (masking
+is length-aware, never shape-aware), and the same pool layout feeds both the
+gather-based reference attend and the Pallas flash-decode kernel
+(``repro.kernels.flash_decode``).
+
+Physical page 0 is RESERVED as the trash page whenever per-slot ``active``
+masks are in play: writes for inactive slots are redirected there instead of
+branching, so the append stays one dense scatter. ``init_paged_kv`` always
+allocates it; allocators must hand out pages starting at 1 and point unused
+page-table entries at 0 (they are DMA'd by the kernel, never read back
+unmasked).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as A
+from repro.nn.layers import apply_rope
+
+NEG_INF = -1e30
+TRASH_PAGE = 0
+DEFAULT_PAGE_SIZE = 16
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKV:
+    """One layer's paged key/value pool. Registered as a pytree so it can be
+    stacked over units, carried through ``lax.scan``, and sliced with
+    ``tree_map`` exactly like the dense cache dicts it replaces."""
+    k: jax.Array    # (P, page_size, KV, hd) — leading unit axes when stacked
+    v: jax.Array
+
+    def tree_flatten(self):
+        return (self.k, self.v), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[-3]
+
+
+def init_paged_kv(n_pages: int, page_size: int, dims: A.AttnDims,
+                  dtype=jnp.bfloat16) -> PagedKV:
+    shape = (n_pages, page_size, dims.n_kv_heads, dims.head_dim)
+    return PagedKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def identity_page_table(batch: int, pages_per_slot: int) -> jax.Array:
+    """Static allocation: slot b owns pages [1 + b*pps, 1 + (b+1)*pps) —
+    page 0 stays reserved as the trash page."""
+    return (1 + jnp.arange(batch * pages_per_slot, dtype=jnp.int32)
+            ).reshape(batch, pages_per_slot)
+
+
+def cache_bytes(tree) -> int:
+    """Total bytes of a cache pytree (paged or dense; also accepts the
+    ``jax.eval_shape`` abstract tree, so sizes can be reported without
+    allocating)."""
+    return sum(int(x.size) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def reset_slots(tree, init_tree, slot_mask: jax.Array, batch_axis: int):
+    """Restore masked slots' entries (along ``batch_axis``) to their INIT
+    values from ``init_tree`` — NOT to zero: e.g. the xLSTM max-stabilizer
+    states initialize to -1e30.
+
+    Used when a continuous-batching slot is recycled for a NEW request:
+    paged KV needs no reset (length masking hides stale pages), but per-slot
+    RECURRENT state (mamba/xLSTM) and fixed cross-attention blocks would
+    otherwise leak the previous occupant's state into the new sequence.
+    """
+    def one(cur, init):
+        shape = [1] * cur.ndim
+        shape[batch_axis] = slot_mask.shape[0]
+        return jnp.where(slot_mask.reshape(shape), init.astype(cur.dtype),
+                         cur)
+    return jax.tree_util.tree_map(one, tree, init_tree)
+
+
+def append_paged(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
+                 page_table: jax.Array, lengths: jax.Array,
+                 active: Optional[jax.Array] = None) -> PagedKV:
+    """Write one token's (k, v) per slot at logical position ``lengths[b]``.
+
+    k_new/v_new: (B, KV, hd). Inactive slots write to the trash page —
+    a dense scatter with redirected indices, no per-slot branching.
+    """
+    psz = pkv.page_size
+    logical = lengths // psz
+    slot = lengths % psz
+    phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, TRASH_PAGE)
+    return PagedKV(
+        pkv.k.at[phys, slot].set(k_new.astype(pkv.k.dtype)),
+        pkv.v.at[phys, slot].set(v_new.astype(pkv.v.dtype)),
+    )
+
+
+def dense_to_paged(k: jax.Array, v: jax.Array, page_size: int
+                   ) -> Tuple[PagedKV, jax.Array]:
+    """View a dense (B, C, KV, hd) cache as pages + identity table, so the
+    flash-decode kernel can also serve the legacy dense decode path. No
+    trash page (this view is never appended to)."""
+    B, C, KV, hd = k.shape
+    psz = min(page_size, C)
+    pad = (-C) % psz
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    npg = (C + pad) // psz
+    pages = PagedKV(k.reshape(B * npg, psz, KV, hd),
+                    v.reshape(B * npg, psz, KV, hd))
+    table = jnp.arange(B * npg, dtype=jnp.int32).reshape(B, npg)
+    return pages, table
+
+
+# ---------------------------------------------------------------------------
+# Attend over the pool (committed tokens < lengths[b]) + the token's own k/v
+# ---------------------------------------------------------------------------
+
+def _attend_pages_ref(qg, pkv: PagedKV, page_table, lengths, k_self, v_self,
+                      window: Optional[int]):
+    """Gather-based reference: logical KV materialized per slot, fp32
+    softmax over [cached (idx < lengths[b]) || self]. qg: (B, KV, G, hd);
+    k_self/v_self: (B, KV, hd). Returns (B, KV, G, hd) fp32."""
+    B, KV, G, hd = qg.shape
+    npg, psz = page_table.shape[1], pkv.page_size
+    L = npg * psz
+    kk = pkv.k[page_table].astype(jnp.float32)        # (B, npg, psz, KV, hd)
+    vv = pkv.v[page_table].astype(jnp.float32)
+    kk = kk.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)   # (B, KV, L, hd)
+    vv = vv.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
+    scale = 1.0 / (hd ** 0.5)
+    qf = qg.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, kk) * scale
+    idx = jnp.arange(L)
+    valid = idx[None, :] < lengths[:, None]
+    if window is not None:
+        valid &= idx[None, :] > lengths[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s_self = jnp.einsum("bkgd,bkd->bkg", qf,
+                        k_self.astype(jnp.float32)) * scale
+    s_all = jnp.concatenate([s, s_self[..., None]], axis=-1)
+    w = jax.nn.softmax(s_all, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", w[..., :-1], vv)
+    return out + w[..., -1:] * v_self.astype(jnp.float32)[:, :, None, :]
+
+
+def attend_paged(qg, pkv: PagedKV, page_table, lengths, k_self, v_self, *,
+                 window: Optional[int] = None, impl: str = "auto"):
+    """Dispatch between the gather reference and the Pallas flash-decode
+    kernel (split-KV over pages, logsumexp-combined, then the self term is
+    folded in from the fp32 partials)."""
+    if impl in ("pallas", "kernels"):
+        from repro.kernels import ops as kops
+        from repro.kernels import flash_decode as FD
+        out_p, lse = kops.flash_decode(qg, pkv.k, pkv.v, page_table,
+                                       lengths, window=window)
+        scale = 1.0 / (qg.shape[-1] ** 0.5)
+        s_self = jnp.einsum("bkgd,bkd->bkg", qg.astype(jnp.float32),
+                            k_self.astype(jnp.float32)) * scale
+        return FD.combine_self(out_p, lse, s_self,
+                               v_self.astype(jnp.float32))
+    return _attend_pages_ref(qg, pkv, page_table, lengths, k_self, v_self,
+                             window)
+
+
+def paged_decode_attention(params, x, dims: A.AttnDims, pkv: PagedKV, *,
+                           lengths, page_table, active=None,
+                           commit: bool = True,
+                           window: Optional[int] = None, impl: str = "auto"):
+    """One-token decode over the paged cache — the serving counterpart of
+    ``attention.decode_attention``.
+
+    x: (B, 1, d); each slot's token sits at its OWN absolute position
+    ``lengths[b]`` (rope + mask are per-slot, so ragged batches trace once).
+    ``commit=False`` is the DB denoising probe: attend but never append —
+    the pool is returned untouched instead of copy-discarded.
+
+    Returns (out (B, 1, d), new_pkv).
+    """
+    B = x.shape[0]
+    q, k, v = A.project_qkv(params, x, dims)
+    posv = lengths[:, None]                       # (B, 1) per-slot positions
+    q = apply_rope(q, posv, dims.rope_theta)
+    k = apply_rope(k, posv, dims.rope_theta)
+    KV, G, hd = dims.n_kv_heads, dims.q_per_kv, dims.head_dim
+    qg = q[:, 0].reshape(B, KV, G, hd)
+    k_self, v_self = k[:, 0], v[:, 0]             # (B, KV, hd)
+    out = attend_paged(qg, pkv, page_table, lengths, k_self, v_self,
+                       window=window, impl=impl)
+    out = out.reshape(B, 1, dims.n_heads * hd).astype(x.dtype)
+    out = out @ params["wo"].astype(x.dtype)
+    new_pkv = append_paged(pkv, k_self, v_self, page_table, lengths,
+                           active) if commit else pkv
+    return out, new_pkv

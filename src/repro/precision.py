@@ -41,12 +41,28 @@ class Policy:
     reduce_dtype: Any = jnp.float32
     # families whose recurrences stay in fp32 even under low-precision compute
     fp32_families: Tuple[str, ...] = (SSM, HYBRID)
+    # serving KV-cache storage; None = follow compute_dtype. Deliberately NOT
+    # family-overridden: attention K/V tolerate bf16 storage even for the
+    # hybrid family (scores/logsumexp are always fp32 — the flash-decode
+    # kernel accumulates in fp32 scratch); only the recurrent STATES follow
+    # compute_for (see state_for).
+    kv_dtype: Any = None
 
     def compute_for(self, family: Optional[str] = None):
         """Effective compute dtype for an architecture family."""
         if family is not None and family in self.fp32_families:
             return jnp.float32
         return self.compute_dtype
+
+    @property
+    def kv(self):
+        """KV-cache storage dtype (bf16 under the serving default)."""
+        return self.compute_dtype if self.kv_dtype is None else self.kv_dtype
+
+    def state_for(self, family: Optional[str] = None):
+        """Recurrent-state storage dtype (mamba/xLSTM): compounded rounding
+        over the sequence keeps these fp32 under the bf16 policy."""
+        return self.compute_for(family)
 
     @property
     def is_mixed(self) -> bool:

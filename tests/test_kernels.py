@@ -8,8 +8,10 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.edm_loss import edm_loss
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import combine_self, flash_decode
 from repro.kernels.fused_adaln import (fused_euler, fused_gate_residual,
                                        fused_ln_modulate)
+from repro.nn import cache as KVC
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -80,6 +82,64 @@ def test_fused_euler_sweep(B, S, d, dtype):
     expect = ref.euler_reference(z, f, sig, sig2, 0.5)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(expect, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("B,KV,G,hd,psz,npg", [
+    (2, 2, 2, 32, 8, 4),      # GQA
+    (1, 4, 1, 64, 16, 2),     # MQA-ish (G=1: group-pad path)
+    (3, 1, 8, 32, 4, 8),      # wide group, many small pages
+])
+def test_flash_decode_sweep(B, KV, G, hd, psz, npg, window, dtype):
+    """Split-KV paged decode kernel vs the gather reference: ragged lengths
+    (incl. an EMPTY slot and a full slot), GQA grouping, window masking,
+    bf16 pages with fp32 logsumexp. fp32 must match <=1e-4 (ISSUE gate)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    P = 1 + B * npg
+    pool = KVC.PagedKV(
+        jax.random.normal(ks[0], (P, psz, KV, hd), dtype),
+        jax.random.normal(ks[1], (P, psz, KV, hd), dtype))
+    table = KVC.identity_page_table(B, npg)
+    # ragged: slot 0 empty, last slot full, middle arbitrary
+    lens = np.linspace(0, npg * psz, B).astype(np.int32)
+    lengths = jnp.asarray(lens)
+    q = jax.random.normal(ks[2], (B, KV, G, hd), dtype)
+    k_self = jax.random.normal(ks[3], (B, KV, hd), dtype)
+    v_self = jax.random.normal(ks[4], (B, KV, hd), dtype)
+    out_p, lse = flash_decode(q, pool.k, pool.v, table, lengths,
+                              window=window, interpret=True)
+    scale = 1.0 / (hd ** 0.5)
+    s_self = jnp.einsum("bkgd,bkd->bkg", q.astype(jnp.float32),
+                        k_self.astype(jnp.float32)) * scale
+    got = combine_self(out_p, lse, s_self, v_self.astype(jnp.float32))
+    expect = KVC._attend_pages_ref(q, pool, table, lengths, k_self, v_self,
+                                   window)
+    tol_ = dict(atol=1e-4, rtol=1e-4) if dtype == jnp.float32 else tol(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32), **tol_)
+
+
+def test_flash_decode_trash_page_entries_inert():
+    """Page-table entries past a slot's allocation point at the trash page;
+    whatever garbage lives there must never leak into the output."""
+    dims_kv, G, hd, psz, npg = 2, 2, 32, 4, 3
+    P = 1 + npg
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    pool = KVC.PagedKV(jax.random.normal(k1, (P, psz, dims_kv, hd)),
+                       jax.random.normal(k2, (P, psz, dims_kv, hd)))
+    # slot uses only its first page (length 3 < psz); rest point at trash
+    table = jnp.asarray([[1, KVC.TRASH_PAGE, KVC.TRASH_PAGE]], jnp.int32)
+    lengths = jnp.asarray([3], jnp.int32)
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, dims_kv, G, hd))
+    out1, lse1 = flash_decode(q, pool.k, pool.v, table, lengths,
+                              interpret=True)
+    poisoned = KVC.PagedKV(pool.k.at[KVC.TRASH_PAGE].set(1e3),
+                           pool.v.at[KVC.TRASH_PAGE].set(1e3))
+    out2, lse2 = flash_decode(q, poisoned.k, poisoned.v, table, lengths,
+                              interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_allclose(np.asarray(lse1), np.asarray(lse2))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32])
