@@ -18,7 +18,7 @@ Metric stand-ins (documented in EXPERIMENTS.md):
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Iterable, List
+from typing import Callable, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +78,6 @@ def generation_metrics(dbm, params, lm: MarkovLM, n_prompts: int = 4,
 def e2e_generation_metrics(dbm, params, lm: MarkovLM, n_prompts: int = 4,
                            prompt_len: int = 8, max_new: int = 24) -> Dict:
     """Standard AR sampling for the e2e baseline (greedy via full forward)."""
-    from repro.models import LayerCtx
     prompts = jnp.asarray(lm.sample(np.random.RandomState(123), n_prompts,
                                     prompt_len))
     toks = prompts

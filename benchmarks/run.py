@@ -26,7 +26,8 @@ def main() -> None:
                             table5_recurrent, table6_noprop,
                             table7_partitioning, table8_blockcount,
                             table12_walltime, table13_blockparallel,
-                            table14_kernel_grads, table15_decode)
+                            table14_kernel_grads, table15_decode,
+                            table16_prefill)
     from benchmarks.common import emit
 
     tables = {
@@ -42,6 +43,7 @@ def main() -> None:
         "table13_blockparallel_walltime": table13_blockparallel.run,
         "table14_kernel_grads": table14_kernel_grads.run,
         "table15_decode": table15_decode.run_rows,
+        "table16_prefill": table16_prefill.run_rows,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

@@ -7,7 +7,6 @@ e2e vs one block — the B× memory reduction, measured rather than asserted."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks import common as CM
 from repro.configs import DBConfig

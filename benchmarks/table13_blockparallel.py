@@ -28,7 +28,6 @@ if __name__ == "__main__":      # script entry: force pods before jax init
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as CM

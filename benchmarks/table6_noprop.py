@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import DBConfig
-from repro.configs.base import ModelConfig
 from repro.core.vit import ViTDiffusionBlocks
 from repro.data import GaussianMixtureImages
 from repro.optim import adamw, apply_updates

@@ -5,7 +5,6 @@ fidelity vs layers-per-step. LM variant (Table 11): AR synthetic, same Bs —
 generation quality. Relative speed = B (exact: L/B layers get gradients)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common as CM
 from benchmarks import table2_dit as T2

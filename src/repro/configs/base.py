@@ -93,7 +93,8 @@ class ModelConfig:
         if self.head_dim is None:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
         assert self.n_heads % max(self.n_kv_heads, 1) == 0, (
-            f"{self.name}: n_heads {self.n_heads} not divisible by kv {self.n_kv_heads}")
+            f"{self.name}: n_heads {self.n_heads} not divisible by "
+            f"kv {self.n_kv_heads}")
 
     # ---- derived quantities -------------------------------------------------
     @property

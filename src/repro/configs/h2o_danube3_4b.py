@@ -1,4 +1,5 @@
-"""h2o-danube-3-4b [dense] — llama+mistral mix, sliding-window attention. [arXiv:2401.16818]"""
+"""h2o-danube-3-4b [dense] — llama+mistral mix, sliding-window
+attention. [arXiv:2401.16818]"""
 from repro.configs.base import ModelConfig, DENSE
 
 CONFIG = ModelConfig(

@@ -1,4 +1,5 @@
-"""qwen1.5-32b [dense] — QKV bias. [hf:Qwen/Qwen1.5-0.5B family scaled per assignment]"""
+"""qwen1.5-32b [dense] — QKV bias. [hf:Qwen/Qwen1.5-0.5B family scaled
+per assignment]"""
 from repro.configs.base import ModelConfig, DENSE
 
 CONFIG = ModelConfig(

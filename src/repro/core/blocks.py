@@ -18,8 +18,7 @@ gradients for other blocks are never materialized.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -292,15 +291,28 @@ class DiffusionBlocksModel:
         layer evaluations."""
         ctx = dataclasses.replace(ctx_base, mode="decode", pos=pos, cond=None)
         pol = precision_mod.get_policy(ctx.precision)
+        # absolute-position-embedding families (whisper) embed the token at
+        # its true offset: per-slot lengths on the paged path, pos on dense
+        if ctx.lengths is not None:
+            epos = ctx.lengths[:, None]
+        elif pos is not None:
+            epos = jnp.asarray(pos).reshape(1, 1)
+        else:
+            epos = None
         emb = self.model.embed(params, token,
-                               dtype=pol.compute_for(self.cfg.family))
+                               dtype=pol.compute_for(self.cfg.family),
+                               positions=epos)
+        starts = self._block_starts()
+        _, new_cache, _ = self.model.apply_units(
+            params, emb, 0, self.model.n_units, ctx, cache,
+            reset_mask=starts)
+        return new_cache
+
+    def _block_starts(self) -> jax.Array:
         starts = np.zeros(self.model.n_units, dtype=bool)
         for b in range(self.num_blocks):
             starts[self.ranges[b][0]] = True
-        _, new_cache, _ = self.model.apply_units(
-            params, emb, 0, self.model.n_units, ctx, cache,
-            reset_mask=jnp.asarray(starts))
-        return new_cache
+        return jnp.asarray(starts)
 
     def sample_token(self, logits, rng, temperature: float = 0.0,
                      top_k: int = 0):
@@ -384,6 +396,40 @@ class DiffusionBlocksModel:
         new_lengths = lengths + (active.astype(lengths.dtype)
                                  if active is not None else 1)
         return new_kv, new_lengths
+
+    def commit_prompt_chunk(self, params, kv, page_table, lengths, tokens, *,
+                            n_valid, precision=None, impl: str = "auto",
+                            aux_inputs=None):
+        """Chunked-prefill building block: commit up to C known (prompt)
+        tokens per slot in ONE dispatch — a prompt of S tokens costs
+        ceil(S / C) of these instead of S ``commit_prompt_token`` steps.
+
+        tokens: (B, C) — slot b's next prompt tokens starting at its own
+        offset ``lengths[b]`` (entries past ``n_valid[b]`` are padding:
+        attention writes them to the trash page, recurrent states hold).
+        Each block's clean stream restarts from raw embeddings at the block
+        boundaries exactly as in ``commit_token``; attention layers append
+        the chunk's K/V to pool pages and attend [history || intra-chunk
+        causal] via ``cache.paged_prefill_attention`` (the flash-prefill
+        kernel under ``impl="kernels"``); recurrent units advance their
+        state over the chunk with one in-dispatch scan.
+
+        Returns (new_kv, lengths + n_valid).
+        """
+        ctx = self._paged_ctx(params, lengths, page_table, None, precision,
+                              impl, aux_inputs)
+        ctx.mode = "prefill_chunk"
+        ctx.n_valid = n_valid
+        pol = precision_mod.get_policy(ctx.precision)
+        C = tokens.shape[1]
+        epos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)[None, :]
+        emb = self.model.embed(params, tokens,
+                               dtype=pol.compute_for(self.cfg.family),
+                               positions=epos)
+        _, new_kv, _ = self.model.apply_units(
+            params, emb, 0, self.model.n_units, ctx, kv,
+            reset_mask=self._block_starts())
+        return new_kv, lengths + n_valid
 
     def prefill_probe(self, params, tokens, k: int, aux_inputs=None,
                       impl: str = "auto"):

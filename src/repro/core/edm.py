@@ -13,7 +13,6 @@ same identity motivates weight 1 after the readout).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax

@@ -8,7 +8,6 @@ interval; the global NELBO decomposes as Σ_b L_b (Eq. 13).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax
@@ -94,7 +93,6 @@ class MaskedDiffusionBlocks:
         for s in range(n_samples):
             for b in range(Bn):
                 rng, r = jax.random.split(rng)
-                ur = None if blockwise else (0, self.model.n_units)
                 bb = b if blockwise else 0
                 if not blockwise:
                     loss, _ = self.e2e_loss(params, tokens, r)

@@ -9,8 +9,6 @@ inference keeps K iterations, now as Euler steps of the PF-ODE.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +21,7 @@ from repro.models.common import LayerCtx
 from repro.nn import adaln
 from repro.nn import attention as A
 from repro.nn import layers as L
-from repro.nn.init import ParamSpec, init_params, stack_specs
+from repro.nn.init import init_params, stack_specs
 
 
 class RecurrentDepthModel:

@@ -11,11 +11,9 @@ structural, not simulated.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 
 from repro import precision as precision_mod
 from repro.configs.base import TrainConfig
@@ -137,7 +135,7 @@ def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,
 def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
              rng, params=None, log=print, aux_fn=None, parallel=None,
              periphery: str = "replicate+psum-mean", impl: str = "auto",
-             precision=None):
+             precision=None, periphery_lr_scale=None):
     """Block-cycling single-host training driver (paper Fig. 3 right):
     each iteration samples a block uniformly and trains only it.
 
@@ -145,7 +143,11 @@ def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
     concurrently (one pod group per block when the host has the devices,
     round-robin otherwise), with the shared periphery reconciled by the
     ``periphery`` sync policy. ``tcfg.steps`` stays the total budget of
-    per-block updates in both modes, so histories are comparable."""
+    per-block updates in both modes, so histories are comparable.
+    ``periphery_lr_scale`` ("auto" = scale by B, or a float) compensates the
+    parallel engine's periphery update-count gap: it applies ONE periphery
+    update per batch where this sequential loop applies one per block
+    update."""
     if parallel == "blocks":
         if aux_fn is not None:
             raise NotImplementedError(
@@ -154,7 +156,8 @@ def train_db(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
         from repro.parallel import train_db_parallel
         return train_db_parallel(dbm, tcfg, data_iter, rng, params=params,
                                  log=log, periphery=periphery, impl=impl,
-                                 precision=precision)
+                                 precision=precision,
+                                 periphery_lr_scale=periphery_lr_scale)
     if parallel not in (None, "none"):
         raise ValueError(f"unknown parallel mode {parallel!r}")
     rng, r0 = jax.random.split(rng)

@@ -8,7 +8,6 @@ final z. The end-to-end baseline is a standard ViT ([CLS] readout).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -9,7 +9,7 @@ classification accuracy and denoising quality are meaningful.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 

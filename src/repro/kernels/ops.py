@@ -16,6 +16,7 @@ import jax
 from repro.kernels import edm_loss as _edm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import flash_decode as _fd
+from repro.kernels import flash_prefill as _fp
 from repro.kernels import fused_adaln as _ad
 
 
@@ -132,3 +133,16 @@ def flash_decode(q, k_pages, v_pages, page_table, lengths,
     train masks above never see 1-token queries."""
     return _fd.flash_decode(q, k_pages, v_pages, page_table, lengths,
                             window=window, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def flash_prefill(q, k_pages, v_pages, page_table, lengths,
+                  window: Optional[int] = None):
+    """Chunked-prefill paged attention. q: (B, C, KV, G, hd) — one prompt
+    CHUNK of grouped queries at absolute positions [lengths[b], lengths[b]+C)
+    whose own k/v are already appended to the pool
+    (``repro.nn.cache.append_paged_chunk``). Returns the fully-normalized
+    fp32 output over [committed history || intra-chunk causal] — the serving
+    ingest counterpart of ``flash_decode``."""
+    return _fp.flash_prefill(q, k_pages, v_pages, page_table, lengths,
+                             window=window, interpret=_interpret())

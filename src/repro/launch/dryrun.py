@@ -30,7 +30,7 @@ import traceback     # noqa: E402
 import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np   # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import configs                                    # noqa: E402
 from repro.configs import DBConfig, INPUT_SHAPES, get_config, get_shape  # noqa: E402
@@ -320,7 +320,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, mode: str,
                 "num_blocks": db.num_blocks, "skipped": False})
     if verbose:
         ma = compiled.memory_analysis()
-        print(f"== {arch} × {shape_name} mesh={'2x16x16' if multi_pod else '16x16'} mode={mode}")
+        mesh_s = '2x16x16' if multi_pod else '16x16'
+        print(f"== {arch} × {shape_name} mesh={mesh_s} mode={mode}")
         print(f"   memory_analysis: {ma}")
         print("   " + RA.format_row(f"{arch}/{shape_name}", rec))
     if out_dir:

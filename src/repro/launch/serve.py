@@ -1,35 +1,54 @@
-"""High-throughput block-wise serving: scan-fused generation over a paged
-bf16 KV cache, with static and continuous-batching schedulers.
+"""High-throughput block-wise serving: chunked prefill + scan-fused decode
+over a paged bf16 KV cache, with static and continuous-batching schedulers
+and a shared-prefix page cache.
 
 The seed served one jitted dispatch PLUS a host sync per generated token and
-kept a dense fp32 worst-case cache slab. This engine:
+kept a dense fp32 worst-case cache slab; PR 3 fused decode into one scan but
+still committed ONE prompt token per scan step, so time-to-first-token scaled
+with prompt length. This engine:
 
+  * prefills prompts in CHUNKS of ``chunk_size`` tokens: each chunk is one
+    sequence-level attention dispatch (``blocks.commit_prompt_chunk`` →
+    ``cache.paged_prefill_attention`` / the Pallas flash-prefill kernel), so
+    a prompt of S tokens costs ceil(S / C) serial attention steps instead of
+    S — the per-token scan stays available as ``prefill="per-token"`` and is
+    the numerical reference;
   * folds the whole denoise → sample → commit loop into ONE jitted
     ``lax.scan`` over new-token positions (greedy and temperature/top-k both
     traced — no per-token host round-trip);
-  * prefills ragged prompts inside one scan with per-slot activity masks —
-    different prompt lengths share ONE compiled program (masking is
-    length-aware, never shape-aware);
+  * handles ragged prompts inside one program with per-slot offsets and
+    activity masks (masking is length-aware, never shape-aware);
   * stores KV in the paged pool of ``repro.nn.cache`` (bf16 under the
     default ``precision="bf16"`` policy, fp32 logsumexp in the attend);
-  * optionally routes decode attention through the split-KV Pallas
-    flash-decode kernel (``--impl kernels``).
+  * optionally routes attention through the split-KV Pallas kernels
+    (``--impl kernels``): flash-decode for generation, flash-prefill for
+    ingest;
+  * optionally shares prompt-PREFIX pages across requests
+    (``prefix_cache=True``): finished prompts register their full prefix
+    pages (hashed by token content) in a refcounted trie; a new request
+    whose prompt extends a cached prefix maps those pages read-only and
+    prefills only its non-shared suffix. Pages are copy-on-write: the first
+    divergent write into a shared page (a matched partial tail page at
+    admission, or a registered page the owner keeps generating into) gets a
+    private copy first (``cache.copy_pool_pages``).
 
 Schedulers (``--scheduler``):
 
-  static      admit the whole batch, prefill, then one decode scan —
-              O(1) dispatches for the entire batch of generations.
+  static      admit the whole batch, prefill (chunk scan), then one decode
+              scan — O(1) dispatches for the entire batch of generations.
   continuous  slot-based continuous batching: a fixed number of request
-              slots over a shared page pool. Between scan SEGMENTS the host
-              admits queued requests into freed slots/pages and retires
-              finished sequences; inside a segment, slots still consuming
-              their prompt commit prompt tokens while neighbors generate.
+              slots over a shared page pool. The host interleaves ONE
+              prefill-chunk dispatch (advancing every still-prefilling slot
+              by up to ``chunk_size`` tokens) with each ``seg_len``-step
+              decode segment, so admitting a long prompt stalls decoding
+              slots by at most one chunk per segment.
 
 Compile-cache notes: ``steps_per_block`` / ``temperature`` / ``top_k`` /
-``precision`` / ``impl`` are STATIC — they select the trace. ``DecodeEngine``
-instances are memoized per (dbm, static config) by ``get_engine``, so
-repeated ``generate`` calls reuse compiled programs; only a new padded
-prompt width or segment length triggers a retrace.
+``precision`` / ``impl`` / ``prefill`` / ``chunk_size`` are STATIC — they
+select the trace. ``DecodeEngine`` instances are memoized per (dbm, static
+config) by ``get_engine``, so repeated ``generate`` calls reuse compiled
+programs; only a new padded prompt width or segment length triggers a
+retrace.
 """
 from __future__ import annotations
 
@@ -43,13 +62,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _ragged_transition_accuracy(lm, seqs) -> float:
-    """Mean legal-transition rate over variable-length sequences — scored
-    per row so zero-padding never fabricates (or breaks) transitions."""
-    return float(np.mean([lm.transition_accuracy(np.asarray(s)[None])
-                          for s in seqs]))
-
 from repro import precision as precision_mod
 from repro.configs import DBConfig, get_config, reduced
 from repro.core import DiffusionBlocksModel
@@ -57,26 +69,51 @@ from repro.checkpoint import load_blocks
 from repro.data import MarkovLM
 from repro.nn import cache as KVC
 
+DEFAULT_CHUNK = 64
+
+
+def _ragged_transition_accuracy(lm, seqs) -> float:
+    """Mean legal-transition rate over variable-length sequences — scored
+    per row so zero-padding never fabricates (or breaks) transitions."""
+    return float(np.mean([lm.transition_accuracy(np.asarray(s)[None])
+                          for s in seqs]))
+
 
 class DecodeEngine:
     """Owns the jitted scan-fused programs for one (model, static config).
 
-    Three programs, all length-aware over the paged cache:
-      _prefill  scan over prompt positions, committing where t < plens[b]
-      _decode   scan over new-token positions: denoise → sample → commit
-      _serve    continuous-batching segment: each slot either commits its
-                next PROMPT token (still prefilling) or a GENERATED token
+    All programs are length-aware over the paged cache:
+      _prefill        per-token reference: scan over prompt positions,
+                      committing where t < plens[b] (one serial attention
+                      step per token — the seed ingest path)
+      _prefill_chunks chunked prefill: scan over ceil(S/C) prompt CHUNKS;
+                      each step commits up to C tokens per slot at its own
+                      offset in ONE sequence-level attention dispatch
+      _prefill_chunk1 a single chunk step (the continuous batcher interleaves
+                      these with decode segments from the host)
+      _decode         scan over new-token positions: denoise → sample → commit
+      _serve          continuous-batching segment: each active slot either
+                      commits its next PROMPT token (per-token mode) or a
+                      GENERATED token
     """
 
     def __init__(self, dbm: DiffusionBlocksModel, *, steps_per_block: int = 1,
                  temperature: float = 0.0, top_k: int = 0,
-                 precision="bf16", impl: str = "auto"):
+                 precision="bf16", impl: str = "auto",
+                 prefill: str = "chunked", chunk_size: int = DEFAULT_CHUNK):
+        if prefill not in ("chunked", "per-token"):
+            raise ValueError(f"prefill must be 'chunked' or 'per-token', "
+                             f"got {prefill!r}")
         self.dbm = dbm
         self.pol = precision_mod.get_policy(precision)
         self.impl = impl
+        self.prefill_mode = prefill
+        self.chunk_size = int(chunk_size)
         self.dispatches = 0          # jitted-call count (throughput reporting)
+        self.prefill_steps = 0       # serial attention steps spent in prefill
         pol, spb = self.pol, steps_per_block
         temp, tk = temperature, top_k
+        Ck = self.chunk_size
 
         def prefill_scan(params, kv, page_table, lengths, prompts, plens):
             def body(carry, t):
@@ -89,6 +126,25 @@ class DecodeEngine:
                 return (kv, lengths), None
             return jax.lax.scan(body, (kv, lengths),
                                 jnp.arange(prompts.shape[1]))[0]
+
+        def chunk_step(params, kv, page_table, lengths, prompt_buf, plens):
+            # slot b's next chunk starts at its OWN offset lengths[b] (ragged
+            # plens and prefix-cache hits put slots at different offsets)
+            idx = lengths[:, None] + jnp.arange(Ck, dtype=lengths.dtype)
+            tok = jnp.take_along_axis(
+                prompt_buf, jnp.clip(idx, 0, prompt_buf.shape[1] - 1), axis=1)
+            n_valid = jnp.clip(plens - lengths, 0, Ck)
+            return dbm.commit_prompt_chunk(
+                params, kv, page_table, lengths, tok, n_valid=n_valid,
+                precision=pol, impl=impl)
+
+        def prefill_chunk_scan(params, kv, page_table, lengths, prompts,
+                               plens, n_chunks):
+            def body(carry, _):
+                kv, lengths = carry
+                return chunk_step(params, kv, page_table, lengths, prompts,
+                                  plens), None
+            return jax.lax.scan(body, (kv, lengths), None, length=n_chunks)[0]
 
         def decode_scan(params, kv, page_table, lengths, stop_at, rng, n):
             def body(carry, _):
@@ -129,10 +185,30 @@ class DecodeEngine:
             return kv, lengths, rng, toks.T          # (B, n); -1 = no emit
 
         self._prefill = jax.jit(prefill_scan)
+        self._prefill_chunk1 = jax.jit(chunk_step)
+        self._prefill_chunks = jax.jit(prefill_chunk_scan,
+                                       static_argnames=("n_chunks",))
         self._decode = jax.jit(decode_scan, static_argnames=("n",))
         self._serve = jax.jit(serve_scan, static_argnames=("n",))
 
     # ------------------------------------------------------------------
+    def run_prefill(self, params, kv, table, lengths, prompts, plens):
+        """Dispatch the configured prefill program over a whole (padded)
+        prompt buffer; returns (kv, lengths) and accounts serial steps."""
+        S0 = prompts.shape[1]
+        if self.prefill_mode == "chunked":
+            n_chunks = -(-S0 // self.chunk_size)
+            kv, lengths = self._prefill_chunks(params, kv, table, lengths,
+                                               prompts, plens,
+                                               n_chunks=n_chunks)
+            self.prefill_steps += n_chunks
+        else:
+            kv, lengths = self._prefill(params, kv, table, lengths,
+                                        prompts, plens)
+            self.prefill_steps += S0
+        self.dispatches += 1
+        return kv, lengths
+
     def generate(self, params, prompts, max_new: int, rng=None, *,
                  prompt_lengths=None, page_size: int = KVC.DEFAULT_PAGE_SIZE,
                  reference: bool = False):
@@ -157,9 +233,8 @@ class DecodeEngine:
                                              self.pol)
         table = KVC.identity_page_table(B, pps)
         lengths = jnp.zeros((B,), jnp.int32)
-        kv, lengths = self._prefill(params, kv, table, lengths,
-                                    prompts.astype(jnp.int32), plens)
-        self.dispatches += 1
+        kv, lengths = self.run_prefill(params, kv, table, lengths,
+                                       prompts.astype(jnp.int32), plens)
         stop_at = plens + max_new
         if reference:
             cols = []
@@ -184,7 +259,8 @@ class DecodeEngine:
 
 
 _ENGINE_DEFAULTS = dict(steps_per_block=1, temperature=0.0, top_k=0,
-                        precision="bf16", impl="auto")
+                        precision="bf16", impl="auto", prefill="chunked",
+                        chunk_size=DEFAULT_CHUNK)
 
 
 def get_engine(dbm: DiffusionBlocksModel, **config) -> DecodeEngine:
@@ -205,15 +281,20 @@ def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
              steps_per_block: int = 1, rng=None, *, prompt_lengths=None,
              temperature: float = 0.0, top_k: int = 0, precision="bf16",
              impl: str = "auto", page_size: int = KVC.DEFAULT_PAGE_SIZE,
+             prefill: str = "chunked", chunk_size: int = DEFAULT_CHUNK,
              reference: bool = False):
     """prompts: (B, S0) -> (B, S0 + max_new), scan-fused over the paged
     bf16 KV cache (see DecodeEngine). The cache dtype follows the
     ``repro.precision`` policy (bf16 KV by default; recurrent states keep
-    their family override). ``reference=True`` = seed-style per-token loop
-    (same math, one dispatch + host sync per token)."""
+    their family override). ``prefill="chunked"`` (default) ingests the
+    prompt ``chunk_size`` tokens per scan step; ``"per-token"`` is the
+    seed-style one-token-per-step reference scan. ``reference=True`` =
+    seed-style per-token DECODE loop (same math, one dispatch + host sync
+    per token)."""
     eng = get_engine(dbm, steps_per_block=steps_per_block,
                      temperature=temperature, top_k=top_k,
-                     precision=precision, impl=impl)
+                     precision=precision, impl=impl, prefill=prefill,
+                     chunk_size=chunk_size)
     return eng.generate(params, prompts, max_new, rng,
                         prompt_lengths=prompt_lengths, page_size=page_size,
                         reference=reference)
@@ -230,22 +311,45 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)
+    shared_tokens: int = 0        # prompt tokens served from the prefix cache
+    registered: bool = False      # prefix pages inserted into the cache
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
 
     @property
     def done(self) -> bool:
         return len(self.out) >= self.max_new
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (None if self.first_token_t is None
+                else self.first_token_t - self.submit_t)
 
 
 class ContinuousBatcher:
     """Slot-based continuous batching over a shared page pool.
 
     ``num_slots`` request slots share ``total_pages`` physical pages
-    (physical page 0 reserved as the trash page). Between scan segments of
-    ``seg_len`` steps the host admits queued requests into free slots —
-    allocating ``ceil((prompt + max_new) / page_size)`` pages each — and
-    retires finished sequences, returning their pages to the free list.
-    Inside a segment everything is one compiled program: slots still
-    consuming their prompt commit prompt tokens, the rest generate.
+    (physical page 0 reserved as the trash page). Between dispatches the host
+    admits queued requests into free slots and retires finished sequences,
+    returning pages whose refcount drops to zero to the free list.
+
+    Scheduling (``prefill="chunked"``, the default): each loop iteration runs
+    ONE prefill-chunk dispatch — advancing every still-prefilling slot by up
+    to ``chunk_size`` prompt tokens at its own offset — then one
+    ``seg_len``-step decode segment for the slots past their prompt. A long
+    prompt therefore stalls decoding slots by at most one chunk per segment,
+    and reaches its first token after ceil(S / C) chunks instead of S
+    per-token steps. ``prefill="per-token"`` restores the PR 3 behavior
+    (prompt tokens commit one per scan step inside the segment).
+
+    ``prefix_cache=True`` shares prompt-prefix pages across requests (see
+    ``repro.nn.cache.PrefixPageCache``): a request whose prompt extends a
+    previously-served prefix maps those pages read-only, starts prefilling
+    at the first non-shared token, and copy-on-writes the boundary page.
+    Requires a model whose sequence state lives entirely in paged KV
+    (``model.kv_carries_all_state`` — recurrent families raise here, at
+    construction time, not mid-serve).
     """
 
     def __init__(self, dbm, params, *, num_slots: int = 8,
@@ -253,11 +357,26 @@ class ContinuousBatcher:
                  max_prompt: int = 64, max_len: int = 128,
                  total_pages: Optional[int] = None, seg_len: int = 16,
                  steps_per_block: int = 1, temperature: float = 0.0,
-                 top_k: int = 0, precision="bf16", impl: str = "auto"):
+                 top_k: int = 0, precision="bf16", impl: str = "auto",
+                 prefill: str = "chunked",
+                 chunk_size: Optional[int] = None,
+                 prefix_cache: bool = False):
         self.dbm, self.params = dbm, params
+        chunk_size = (min(DEFAULT_CHUNK, max_prompt) if chunk_size is None
+                      else chunk_size)
         self.eng = get_engine(dbm, steps_per_block=steps_per_block,
                               temperature=temperature, top_k=top_k,
-                              precision=precision, impl=impl)
+                              precision=precision, impl=impl,
+                              prefill=prefill, chunk_size=chunk_size)
+        self.chunked = prefill == "chunked"
+        self.chunk_size = chunk_size
+        if prefix_cache and not dbm.model.kv_carries_all_state:
+            raise ValueError(
+                f"prefix_cache=True is unsound for family "
+                f"{dbm.cfg.family!r}: per-slot recurrent state is not paged, "
+                "so mapping shared prefix pages would skip the recurrence. "
+                "Serve this model with prefix_cache=False.")
+        self.prefix = KVC.PrefixPageCache(page_size) if prefix_cache else None
         self.page_size, self.seg_len = page_size, seg_len
         self.max_prompt, self.max_len = max_prompt, max_len
         pps = KVC.pages_for(max_len, page_size)
@@ -266,6 +385,7 @@ class ContinuousBatcher:
         self.kv = dbm.model.init_paged_cache(num_slots, self.total_pages,
                                              page_size, self.eng.pol)
         self.free_pages = list(range(1, self.total_pages))
+        self.page_refs = {}          # phys page -> refcount (slots + cache)
         self.num_slots = num_slots
         self.table = np.zeros((num_slots, pps), np.int32)   # 0 = trash page
         self.lengths = np.zeros(num_slots, np.int32)
@@ -276,7 +396,8 @@ class ContinuousBatcher:
         self.slot_req: List[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque = collections.deque()
         self._next_rid = 0
-        self.steps = 0               # scan steps executed (all slots)
+        self.steps = 0               # decode-segment scan steps (all slots)
+        self.cow_copies = 0          # copy-on-write page copies performed
 
     def submit(self, prompt, max_new: int) -> int:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -284,25 +405,103 @@ class ContinuousBatcher:
         assert prompt.size + max_new <= self.max_len, "request exceeds max_len"
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new))
+        req = Request(rid, prompt, max_new)
+        req.submit_t = time.time()
+        self.queue.append(req)
         return rid
 
-    # ---- host-side scheduling between segments -----------------------
+    # ---- page accounting ---------------------------------------------
+    def _alloc_page(self) -> Optional[int]:
+        """Pop a free page, evicting prefix-cache entries under pressure."""
+        if not self.free_pages and self.prefix is not None:
+            self.prefix.evict(self.page_refs, self.free_pages, need=1)
+        if not self.free_pages:
+            return None
+        page = self.free_pages.pop()
+        self.page_refs[page] = self.page_refs.get(page, 0) + 1
+        return page
+
+    def _release_pages(self, pages):
+        for p in pages:
+            self.page_refs[p] -= 1
+            if self.page_refs[p] == 0:
+                del self.page_refs[p]
+                self.free_pages.append(p)
+
+    def _cow(self, slot: int, logical: int) -> bool:
+        """Give ``slot`` a private copy of its ``logical``-th page (the page
+        is shared / cache-retained and about to be written). Returns False
+        when no page could be allocated."""
+        src = int(self.table[slot, logical])
+        dst = self._alloc_page()
+        if dst is None:
+            return False
+        self.kv = KVC.copy_pool_pages(self.kv, src, dst)
+        self.cow_copies += 1
+        self.table[slot, logical] = dst
+        req = self.slot_req[slot]
+        req.pages[logical] = dst
+        self._release_pages([src])   # drop this slot's ref on the shared page
+        return True
+
+    def _make_writable(self, slot: int, lo: int, hi: int) -> bool:
+        """Copy-on-write every shared page overlapping token positions
+        [lo, hi) of ``slot`` before a dispatch writes there."""
+        psz = self.page_size
+        for lp in range(lo // psz, (max(hi, lo + 1) - 1) // psz + 1):
+            phys = int(self.table[slot, lp])
+            if phys != KVC.TRASH_PAGE and self.page_refs.get(phys, 0) > 1:
+                if not self._cow(slot, lp):
+                    return False
+        return True
+
+    # ---- host-side scheduling between dispatches ---------------------
     def _admit(self) -> int:
         new_slots = np.zeros(self.num_slots, bool)
         for s in range(self.num_slots):
             if self.active[s] or not self.queue:
                 continue
             req = self.queue[0]
-            need = KVC.pages_for(len(req.prompt) + req.max_new,
-                                 self.page_size)
+            match = (self.prefix.match(req.prompt) if self.prefix is not None
+                     else KVC.PrefixMatch([], 0, 0))
+            # PIN every matched page before any eviction can run: under pool
+            # pressure evict() drops cache-held refs deepest-first, and
+            # without the pin it could free (and later re-allocate) the very
+            # pages this admission is about to map / CoW-copy from.
+            for p in match.pages:
+                self.page_refs[p] += 1
+            total = KVC.pages_for(len(req.prompt) + req.max_new,
+                                  self.page_size)
+            # fresh pages: everything past the shared prefix, PLUS a copy
+            # destination for a matched partial tail page (it is CoW'd at
+            # admission — the slot's first write lands inside it)
+            need = total - len(match.pages) + (1 if match.tail_tokens else 0)
+            if need > len(self.free_pages) and self.prefix is not None:
+                self.prefix.evict(self.page_refs, self.free_pages, need)
             if need > len(self.free_pages):
+                self._release_pages(match.pages)   # unpin; retry next round
                 break                      # wait for retirements
             self.queue.popleft()
-            req.pages = [self.free_pages.pop() for _ in range(need)]
+            row: List[int] = []
+            shared_full = (match.pages[:-1] if match.tail_tokens
+                           else match.pages)
+            row.extend(shared_full)        # pin becomes the slot's map ref
+            if match.tail_tokens:          # copy-on-write the boundary page
+                dst = self._alloc_page()
+                self.kv = KVC.copy_pool_pages(self.kv, match.pages[-1], dst)
+                self.cow_copies += 1
+                self._release_pages([match.pages[-1]])   # unpin the source
+                row.append(dst)
+            while len(row) < total:
+                row.append(self._alloc_page())
+            req.pages = row
+            req.shared_tokens = match.n_tokens
+            if self.prefix is not None and match.n_tokens > 0:
+                self.prefix.hits += 1
+                self.prefix.tokens_shared += match.n_tokens
             self.table[s, :] = KVC.TRASH_PAGE
-            self.table[s, :need] = req.pages
-            self.lengths[s] = 0
+            self.table[s, :len(row)] = row
+            self.lengths[s] = match.n_tokens   # prefill resumes at the suffix
             self.plens[s] = len(req.prompt)
             self.stop_at[s] = len(req.prompt) + req.max_new
             self.prompt_buf[s, :] = 0
@@ -318,6 +517,22 @@ class ContinuousBatcher:
                 self.kv, jnp.asarray(new_slots))
         return int(new_slots.sum())
 
+    def _register_prefixes(self):
+        """Insert freshly-completed prompts' prefix pages into the cache so
+        later requests can share them (the cache takes one ref per page)."""
+        if self.prefix is None:
+            return
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if (req is None or req.registered or not self.active[s]
+                    or self.lengths[s] < self.plens[s]):
+                continue
+            npg = KVC.pages_for(int(self.plens[s]), self.page_size)
+            self.prefix.insert(req.prompt,
+                               [int(self.table[s, i]) for i in range(npg)],
+                               self.page_refs)
+            req.registered = True
+
     def _retire(self) -> List[Request]:
         out = []
         for s in range(self.num_slots):
@@ -325,13 +540,24 @@ class ContinuousBatcher:
             if req is None or not self.active[s]:
                 continue
             if self.lengths[s] >= self.stop_at[s]:
-                self.free_pages.extend(req.pages)
+                self._release_pages(req.pages)
                 req.pages = []
                 self.table[s, :] = KVC.TRASH_PAGE
                 self.active[s] = False
                 self.slot_req[s] = None
                 out.append(req)
         return out
+
+    def _collect(self, emitted: np.ndarray):
+        now = time.time()
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            toks = [int(t) for t in emitted[s] if t >= 0]
+            if toks and req.first_token_t is None:
+                req.first_token_t = now
+            req.out.extend(toks)
 
     def run(self, rng=None) -> List[Request]:
         """Drain the queue; returns finished requests (ordered by rid)."""
@@ -342,20 +568,45 @@ class ContinuousBatcher:
                 raise RuntimeError(
                     "page pool too small for the next queued request "
                     f"(free={len(self.free_pages)} pages)")
-            self.kv, lengths, rng, emitted = self.eng._serve(
-                self.params, self.kv, jnp.asarray(self.table),
-                jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
-                jnp.asarray(self.plens), jnp.asarray(self.stop_at),
-                jnp.asarray(self.active), rng, n=self.seg_len)
-            self.eng.dispatches += 1
-            self.steps += self.seg_len
-            self.lengths = np.array(lengths)               # host copy (mutable)
-            emitted = np.asarray(emitted)                  # (slots, seg)
-            for s in range(self.num_slots):
-                req = self.slot_req[s]
-                if req is None:
-                    continue
-                req.out.extend(int(t) for t in emitted[s] if t >= 0)
+            in_prompt = self.active & (self.lengths < self.plens)
+            if self.chunked and in_prompt.any():
+                # ONE chunk dispatch advances every prefilling slot by up to
+                # chunk_size tokens at its own offset; decode-only slots see
+                # n_valid == 0 inside the program.
+                for s in np.nonzero(in_prompt)[0]:
+                    lo = int(self.lengths[s])
+                    hi = min(lo + self.chunk_size, int(self.plens[s]))
+                    if not self._make_writable(s, lo, hi):
+                        raise RuntimeError("page pool exhausted during "
+                                           "copy-on-write (prefill)")
+                self.kv, lengths = self.eng._prefill_chunk1(
+                    self.params, self.kv, jnp.asarray(self.table),
+                    jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
+                    jnp.asarray(self.plens))
+                self.lengths = np.array(lengths)
+                self.eng.dispatches += 1
+                self.eng.prefill_steps += 1
+                self._register_prefixes()
+            decode_ready = (self.active & (self.lengths >= self.plens)
+                            if self.chunked else self.active)
+            if decode_ready.any():
+                for s in np.nonzero(decode_ready)[0]:
+                    lo = int(self.lengths[s])
+                    hi = min(lo + self.seg_len, int(self.stop_at[s]))
+                    if not self._make_writable(s, lo, hi):
+                        raise RuntimeError("page pool exhausted during "
+                                           "copy-on-write (decode)")
+                self.kv, lengths, rng, emitted = self.eng._serve(
+                    self.params, self.kv, jnp.asarray(self.table),
+                    jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
+                    jnp.asarray(self.plens), jnp.asarray(self.stop_at),
+                    jnp.asarray(decode_ready), rng, n=self.seg_len)
+                self.eng.dispatches += 1
+                self.steps += self.seg_len
+                self.lengths = np.array(lengths)           # host copy
+                self._collect(np.asarray(emitted))         # (slots, seg)
+                if not self.chunked:
+                    self._register_prefixes()
             finished.extend(self._retire())
         return sorted(finished, key=lambda r: r.rid)
 
@@ -379,8 +630,17 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--precision", default="bf16")
     ap.add_argument("--impl", default="auto",
-                    help="decode attention impl: auto | kernels (Pallas "
-                         "flash-decode; interpret-mode on CPU)")
+                    help="attention impl: auto | kernels (Pallas flash-"
+                         "decode + flash-prefill; interpret-mode on CPU)")
+    ap.add_argument("--prefill", choices=("chunked", "per-token"),
+                    default="chunked",
+                    help="prompt ingest: chunked (C tokens per scan step) "
+                         "or the per-token reference scan")
+    ap.add_argument("--chunk-size", type=int, default=DEFAULT_CHUNK,
+                    help="prompt tokens per chunked-prefill dispatch")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="continuous: share prompt-prefix pages across "
+                         "requests (copy-on-write)")
     ap.add_argument("--page-size", type=int, default=KVC.DEFAULT_PAGE_SIZE)
     ap.add_argument("--num-slots", type=int, default=4,
                     help="continuous: concurrent request slots")
@@ -404,7 +664,9 @@ def main():
     rs = np.random.RandomState(1)
     kw = dict(steps_per_block=args.steps_per_block,
               temperature=args.temperature, top_k=args.top_k,
-              precision=args.precision, impl=args.impl)
+              precision=args.precision, impl=args.impl,
+              prefill=args.prefill,
+              chunk_size=min(args.chunk_size, max(args.prompt_len, 1)))
 
     if args.scheduler == "static":
         prompts = jnp.asarray(lm.sample(rs, args.batch, args.prompt_len))
@@ -428,6 +690,9 @@ def main():
               f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile) | "
               f"dispatches={eng.dispatches} "
               f"({eng.dispatches/n_tok:.3f}/token) | "
+              f"prefill={args.prefill} "
+              f"({eng.prefill_steps} serial steps for "
+              f"{args.batch}x{args.prompt_len} prompt tokens) | "
               f"cache={KVC.cache_bytes(pool_abstract)/1e6:.1f}MB paged")
         rows = np.array(out)
         lens = (np.asarray(plens) if plens is not None
@@ -439,7 +704,8 @@ def main():
                                page_size=args.page_size,
                                max_prompt=args.prompt_len,
                                max_len=args.prompt_len + args.max_new,
-                               seg_len=args.seg_len, **kw)
+                               seg_len=args.seg_len,
+                               prefix_cache=args.prefix_cache, **kw)
         for _ in range(args.requests):
             plen = (rs.randint(max(2, args.prompt_len // 2),
                                args.prompt_len + 1)
@@ -449,12 +715,19 @@ def main():
         done = cb.run(jax.random.PRNGKey(0))
         dt = time.time() - t0
         n_tok = sum(len(r.out) for r in done)
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        shared = sum(r.shared_tokens for r in done)
         print(f"[continuous] served {len(done)} requests / {n_tok} tokens "
               f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile) | "
               f"slots={args.num_slots} pool={cb.total_pages} pages x "
               f"{args.page_size} | dispatches={cb.eng.dispatches} "
               f"({cb.eng.dispatches/max(n_tok,1):.3f}/token) | "
+              f"mean TTFT {np.mean(ttfts):.3f}s | "
               f"cache={KVC.cache_bytes(cb.kv)/1e6:.1f}MB paged")
+        if cb.prefix is not None:
+            print(f"prefix cache: {cb.prefix.hits} hits, {shared} prompt "
+                  f"tokens served from shared pages, {cb.cow_copies} "
+                  f"copy-on-write page copies")
         seqs = [np.concatenate([r.prompt, np.asarray(r.out, np.int64)])
                 for r in done]
         print("legal-transition rate:",

@@ -21,16 +21,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
 from repro.configs import DBConfig, get_config, reduced
 from repro.configs.base import TrainConfig
 from repro.core import DiffusionBlocksModel
-from repro.core.training import (extract_block_view, make_db_train_step,
-                                 make_e2e_train_step)
-from repro.checkpoint import save_block, save_pytree
+from repro.core.training import make_db_train_step, make_e2e_train_step
+from repro.checkpoint import save_block
 from repro.data import MarkovLM, HostDataLoader
 from repro.launch.mesh import make_host_mesh
 from repro.sharding import param_shardings, tokens_sharding
@@ -64,6 +62,10 @@ def main():
                     help="periphery sync policy for --block-parallel "
                          "(replicate+psum-mean | owner-broadcast | "
                          "freeze-after-warmup)")
+    ap.add_argument("--periphery-lr-scale", default=None,
+                    help="--block-parallel: compensate the periphery's "
+                         "1-update-per-batch cadence ('auto' = scale by the "
+                         "block count, or a float; default off)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -115,9 +117,10 @@ def main():
                 "--block-parallel builds its own (pod, data) mesh and does "
                 "not compose with --model-parallel yet; drop one of the two")
         from repro.parallel import BlockParallelTrainer
-        trainer = BlockParallelTrainer(dbm, tcfg, periphery=args.periphery,
-                                       impl=args.impl,
-                                       precision=args.precision)
+        trainer = BlockParallelTrainer(
+            dbm, tcfg, periphery=args.periphery, impl=args.impl,
+            precision=args.precision,
+            periphery_lr_scale=args.periphery_lr_scale)
         print(f"block-parallel mode={trainer.mode}"
               + (f" mesh={dict(trainer.mesh.shape)}" if trainer.mesh else ""))
         params, _ = trainer.train(data, rng, params=params,

@@ -7,6 +7,13 @@ Modes:
   train      — full sequence, causal (+SWA) mask
   prefill    — like train, additionally returns KV/state caches
   decode     — one token + cache
+  prefill_chunk — C prompt tokens + PAGED cache: attention layers append the
+               whole chunk's K/V to pool pages and attend [history ||
+               intra-chunk causal] in one shot (``cache.paged_prefill_
+               attention`` / the flash-prefill kernel); recurrent layers
+               advance their state over the chunk with one in-dispatch scan.
+               Per-slot ``ctx.n_valid`` bounds real tokens (ragged tails
+               write to the trash page / hold recurrent state)
   db_concat  — DB AR training, [clean || noisy] single stream, custom mask
                (paper App. E.4 concat variant; attention layers only)
   db_two_pass— DB AR training, paired (clean, noisy) streams; noisy stream is
@@ -48,6 +55,7 @@ class LayerCtx:
     lengths: Optional[jax.Array] = None         # (B,) committed tokens / slot
     page_table: Optional[jax.Array] = None      # (B, n_logical_pages) int32
     active: Optional[jax.Array] = None          # (B,) bool: slots that commit
+    n_valid: Optional[jax.Array] = None         # (B,) prefill_chunk: real toks
     commit: bool = True                         # False = denoise probe (no append)
     q_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
     kv_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
@@ -55,6 +63,29 @@ class LayerCtx:
     def dims(self) -> A.AttnDims:
         c = self.cfg
         return A.AttnDims(c.n_heads, c.n_kv_heads, c.head_dim, c.rope_theta)
+
+
+def chunk_token_scan(step_fn, x, state, n_valid):
+    """Advance a RECURRENT layer over a prefill chunk inside ONE dispatch.
+
+    Attention layers ingest a chunk as one sequence-level call; recurrences
+    (mamba / xLSTM) are inherently serial per token, so they advance with a
+    ``lax.scan`` over the chunk's tokens instead — still killing the
+    per-token dispatch, and numerically IDENTICAL to the per-token prefill
+    (same decode-step math, same masked holds). ``step_fn(x_t (B,1,d),
+    state) -> (y_t (B,1,d), new_state)``; slots whose valid tokens ran out
+    (t >= n_valid[b]) hold their state. Returns (y (B,C,d), final_state)."""
+    from repro.nn.scan_util import uscan
+    S_c = x.shape[1]
+    acts = jnp.arange(S_c)[:, None] < n_valid[None, :]      # (C, B)
+
+    def tok(st, xs):
+        xt, act = xs
+        y_t, ns = step_fn(xt[:, None], st)
+        return masked_state_update(ns, st, act), y_t[:, 0]
+
+    new_state, ys = uscan(tok, state, (x.transpose(1, 0, 2), acts))
+    return ys.transpose(1, 0, 2), new_state
 
 
 def masked_state_update(new_state, old_state, active: Optional[jax.Array]):
@@ -134,13 +165,24 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
     cm = ctx.cond_mask
 
     x = _norm_modulate(params["ln1"], h, ctx, s1, c1, cm)
-    if ctx.mode == "decode" and not cross:
+    if ctx.mode in ("decode", "prefill_chunk") and not cross:
         if isinstance(cache, KVC.PagedKV):
-            attn_out, new_cache = KVC.paged_decode_attention(
-                params["attn"], x, dims, cache, lengths=ctx.lengths,
-                page_table=ctx.page_table, active=ctx.active,
-                commit=ctx.commit, window=cfg.sliding_window, impl=ctx.impl)
+            if ctx.mode == "prefill_chunk":
+                attn_out, new_cache = KVC.paged_prefill_attention(
+                    params["attn"], x, dims, cache, lengths=ctx.lengths,
+                    page_table=ctx.page_table, n_valid=ctx.n_valid,
+                    window=cfg.sliding_window, impl=ctx.impl)
+            else:
+                attn_out, new_cache = KVC.paged_decode_attention(
+                    params["attn"], x, dims, cache, lengths=ctx.lengths,
+                    page_table=ctx.page_table, active=ctx.active,
+                    commit=ctx.commit, window=cfg.sliding_window,
+                    impl=ctx.impl)
         else:
+            if ctx.mode == "prefill_chunk":
+                raise NotImplementedError(
+                    "prefill_chunk requires the paged cache "
+                    "(repro.nn.cache); dense caches prefill per-token")
             attn_out, new_cache = A.decode_attention(
                 params["attn"], x, dims, cache, ctx.pos,
                 window=cfg.sliding_window, kv_chunk=ctx.kv_chunk,
@@ -148,7 +190,7 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
     elif cross:
         # cross-attention to ctx.kv_x (image/audio memory); cache holds
         # precomputed (k, v) in decode/prefill reuse.
-        if cache is not None and ctx.mode == "decode":
+        if cache is not None and ctx.mode in ("decode", "prefill_chunk"):
             q, _, _ = A.project_qkv(params["attn"], x, dims)
             out = A.attend(q, cache["k"].astype(x.dtype),
                            cache["v"].astype(x.dtype), mask_mod=None,

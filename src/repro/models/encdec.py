@@ -48,6 +48,12 @@ def dlayer_spec(cfg, db: bool):
 
 def _self_attn(p, x, ctx, cache):
     dims = ctx.dims()
+    if ctx.mode == "prefill_chunk":
+        assert isinstance(cache, KVC.PagedKV), \
+            "prefill_chunk requires the paged cache"
+        return KVC.paged_prefill_attention(
+            p, x, dims, cache, lengths=ctx.lengths,
+            page_table=ctx.page_table, n_valid=ctx.n_valid, impl=ctx.impl)
     if ctx.mode == "decode":
         if isinstance(cache, KVC.PagedKV):
             return KVC.paged_decode_attention(
@@ -66,7 +72,7 @@ def _self_attn(p, x, ctx, cache):
 
 def _cross_attn(p, x, ctx, cache):
     dims = ctx.dims()
-    if cache is not None and ctx.mode == "decode":
+    if cache is not None and ctx.mode in ("decode", "prefill_chunk"):
         q, _, _ = A.project_qkv(p, x, dims)
         out = A.attend(q, cache["k"].astype(x.dtype),
                        cache["v"].astype(x.dtype), mask_mod=None,
@@ -101,7 +107,7 @@ def dlayer_apply(p, h, ctx, cache=None):
 
     x = adaln.modulate(L.apply_norm(p["ln2"], h, cfg.norm), s2, c2, cm)
     h = adaln.gate(h, L.apply_mlp(p["mlp"], x, cfg.mlp), g2, cm)
-    keep = ctx.mode in ("prefill", "decode")
+    keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
     return h, ({"self": new_self, "cross": new_cross} if keep else None)
 
 
@@ -159,6 +165,12 @@ class EncDecModel(BaseModel):
     def n_units(self) -> int:
         return self.cfg.n_layers           # decoder layers
 
+    @property
+    def kv_carries_all_state(self) -> bool:
+        # decoder sequence history is all in paged self-attn KV; the cross
+        # (encoder) block is per-request conditioning, as for VLM
+        return True
+
     def build_spec(self):
         cfg = self.cfg
         db = self.db is not None
@@ -189,10 +201,16 @@ class EncDecModel(BaseModel):
         h, _ = uscan(step, h, params["encoder"])
         return L.apply_norm(params["enc_norm"], h, self.cfg.norm)
 
-    def embed(self, params, tokens, dtype=None):
+    def embed(self, params, tokens, dtype=None, positions=None):
         h = super().embed(params, tokens, dtype)
-        # whisper decoder: learned/sinusoidal absolute positions (no rope)
-        pos = L.sinusoidal_positions(h.shape[1], self.cfg.d_model)
+        # whisper decoder: learned/sinusoidal absolute positions (no rope).
+        # ``positions`` carries each slot's true offsets on the serving
+        # paths (per-token decode commits, chunked prefill) so ragged
+        # batches embed at their own absolute positions.
+        if positions is None:
+            pos = L.sinusoidal_positions(h.shape[1], self.cfg.d_model)
+        else:
+            pos = L.sinusoidal_at(positions, self.cfg.d_model)
         return h + pos.astype(h.dtype)
 
     def apply_units(self, params, h, start, size, ctx, cache=None,

@@ -8,7 +8,6 @@ own KV cache.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from repro.nn.scan_util import uscan
@@ -54,11 +53,16 @@ def mamba_layer_apply(p, h, ctx, state=None):
             new_state = state
         else:                       # ragged batches: inactive slots hold
             new_state = C.masked_state_update(new_state, state, ctx.active)
+    elif ctx.mode == "prefill_chunk":
+        y, new_state = C.chunk_token_scan(
+            lambda xt, st: SSM.mamba2_decode_step(p["mixer"], xt, cfg.ssm,
+                                                  cfg.d_model, st),
+            x, state, ctx.n_valid)
     else:
         y, new_state = SSM.mamba2_fwd(p["mixer"], x, cfg.ssm, cfg.d_model,
                                       state if ctx.mode == "decode" else None)
-    return adaln.gate(h, y, g), (new_state if ctx.mode in ("prefill", "decode")
-                                 else None)
+    keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
+    return adaln.gate(h, y, g), (new_state if keep else None)
 
 
 def mamba_layer_two_pass(p, hc, hn, ctx):
@@ -129,7 +133,7 @@ class HybridModel(BaseModel):
         if reset_mask is not None:
             xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(unit, (h, zero), xs)
-        keep = ctx.mode in ("prefill", "decode")
+        keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
         return h, new_cache if keep else None, aux
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):

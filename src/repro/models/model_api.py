@@ -21,19 +21,15 @@ Every family implements:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (AUDIO, DENSE, HYBRID, MOE, SSM, VLM, DBConfig,
-                                ModelConfig)
+from repro.configs.base import DBConfig, ModelConfig
 from repro.nn import adaln
 from repro.nn import layers as L
-from repro.nn.init import (ParamSpec, init_params, logical_axes, spec_shapes,
-                           stack_specs)
+from repro.nn.init import init_params, logical_axes, spec_shapes
 
 
 class BaseModel:
@@ -88,6 +84,16 @@ class BaseModel:
         """Batch size of a cache pytree (leaf layout is family-specific)."""
         return jax.tree_util.tree_leaves(cache)[0].shape[1]
 
+    @property
+    def kv_carries_all_state(self) -> bool:
+        """True when a sequence's ENTIRE history lives in paged attention KV
+        (no per-slot recurrent state), so two slots mapping the same physical
+        prefix pages really do share the same computation — the soundness
+        precondition for the shared-prefix page cache. Recurrent families
+        (mamba / xLSTM) override to False: their O(1) state is not paged, so
+        prefix sharing cannot skip their prefill."""
+        return False
+
     # ---- shared ----------------------------------------------------------
     def init(self, rng, dtype=jnp.float32):
         return init_params(rng, self.spec, dtype)
@@ -117,7 +123,11 @@ class BaseModel:
             table = L.l2_normalize_embeddings(table)
         return table
 
-    def embed(self, params, tokens, dtype=None):
+    def embed(self, params, tokens, dtype=None, positions=None):
+        """``positions`` (broadcastable to tokens' shape) matter only for
+        families with absolute position embeddings (whisper/encdec); rope
+        families apply positions inside attention and ignore them here."""
+        del positions
         h = self.embedding_table(params)[tokens]
         return h if dtype is None else h.astype(dtype)
 

@@ -39,7 +39,12 @@ def _block_apply(p, h, ctx, kind: str, state=None):
     cfg = ctx.cfg
     s, c, g = _mods3(p, ctx)
     x = adaln.modulate(L.apply_norm(p["ln"], h, cfg.norm), s, c)
-    if kind == "slstm":
+    step = X.slstm_decode_step if kind == "slstm" else X.mlstm_decode_step
+    if ctx.mode == "prefill_chunk":
+        y, new_state = C.chunk_token_scan(
+            lambda xt, st: step(p["cell"], xt, cfg.n_heads, cfg.xlstm, st),
+            x, state, ctx.n_valid)
+    elif kind == "slstm":
         if ctx.mode == "decode":
             y, new_state = X.slstm_decode_step(p["cell"], x, cfg.n_heads,
                                                cfg.xlstm, state)
@@ -57,7 +62,7 @@ def _block_apply(p, h, ctx, kind: str, state=None):
             new_state = state
         else:                       # ragged batches: inactive slots hold
             new_state = C.masked_state_update(new_state, state, ctx.active)
-    keep = ctx.mode in ("prefill", "decode")
+    keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
     return adaln.gate(h, y, g), (new_state if keep else None)
 
 
@@ -113,7 +118,7 @@ class XLSTMModel(BaseModel):
         if reset_mask is not None:
             xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(unit, (h, zero), xs)
-        keep = ctx.mode in ("prefill", "decode")
+        keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
         return h, new_cache if keep else None, aux
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):

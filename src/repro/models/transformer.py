@@ -1,7 +1,6 @@
 """Dense / MoE decoder and VLM (cross-attn superblock) models."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 from repro.nn.scan_util import uscan
@@ -13,7 +12,7 @@ from repro.models import common as C
 from repro.models.model_api import BaseModel, register
 from repro.nn import attention as A
 from repro.nn import cache as KVC
-from repro.nn.init import init_params, stack_specs
+from repro.nn.init import stack_specs
 
 
 def _scan_slice(params, start, size):
@@ -32,6 +31,10 @@ class DecoderModel(BaseModel):
     @property
     def is_moe(self) -> bool:
         return self.cfg.family == MOE
+
+    @property
+    def kv_carries_all_state(self) -> bool:
+        return True
 
     def build_spec(self):
         layer = C.tlayer_spec(self.cfg, self.db is not None,
@@ -122,6 +125,13 @@ class VLMModel(BaseModel):
     def n_units(self) -> int:
         return self.cfg.n_layers // self.cfg.cross_attn_every
 
+    @property
+    def kv_carries_all_state(self) -> bool:
+        # sequence history is all in paged self-attn KV; the cross (image)
+        # block is per-request conditioning, not sequence state — sharing is
+        # sound for a common TEXT prefix under the same conditioning
+        return True
+
     def build_spec(self):
         db = self.db is not None
         self_layer = C.tlayer_spec(self.cfg, db)
@@ -171,7 +181,7 @@ class VLMModel(BaseModel):
             xs = (xs, reset_mask)
         (h, aux), new_cache = uscan(
             unit, (h, jnp.zeros((), jnp.float32)), xs)
-        keep = ctx.mode in ("prefill", "decode")
+        keep = ctx.mode in ("prefill", "decode", "prefill_chunk")
         return h, new_cache if keep else None, aux
 
     def apply_units_two_pass(self, params, h_clean, h_noisy, start, size, ctx):

@@ -9,7 +9,6 @@ hardware-target implementation, validated against these in interpret mode.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, Optional
 
 import jax
@@ -327,9 +326,11 @@ def decode_attention(params, x, dims: AttnDims, cache, pos, *,
 
     ``impl="kernels"`` routes the attend through the split-KV Pallas
     flash-decode kernel (``repro.kernels.flash_decode``) by viewing the dense
-    cache as pages with an identity table; the SWA ring buffer's slot→abs
-    mapping has no kernel mask equivalent, so that combination raises
-    (serve with the paged cache instead — its window masking is length-aware).
+    cache as pages with an identity table. The SWA ring buffer's slot→abs
+    mapping has no static kernel mask, so that case is first UN-ROTATED into
+    absolute order — a per-step O(window) gather, the same traffic the
+    reference masked attend pays — and the window semantics collapse into the
+    paged kernel's plain length mask.
 
     Returns (out, new_cache).
     """
@@ -345,18 +346,25 @@ def decode_attention(params, x, dims: AttnDims, cache, pos, *,
     new_v = jax.lax.dynamic_update_slice_in_dim(
         cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
     if impl in ("pallas", "kernels"):
-        if window is not None:
-            raise NotImplementedError(
-                "flash-decode over the dense SWA ring buffer is unsupported "
-                "(ring slot positions have no kernel mask); use the paged "
-                "cache (repro.nn.cache) or impl='auto'")
         from repro.nn import cache as KVC
         # attend committed tokens (< pos) from the OLD cache viewed as pages,
         # then fold in the fresh token's own (k, v) from the fp32 partials —
         # identical math to masked attention over the updated cache.
-        pages, table = KVC.dense_to_paged(cache["k"], cache["v"],
+        if window is not None:
+            # ring slot i holds abs pos p ≡ i (mod C). Gather the last
+            # L = min(pos, window-1, C) committed in-window keys into
+            # absolute order at logical [0, L): the kernel's length mask
+            # (idx < L) then IS the sliding window.
+            L = jnp.minimum(pos, min(window - 1, C))
+            src = (pos - L + jnp.arange(C)) % C              # (C,) abs order
+            k_lin = jnp.take(cache["k"], src, axis=1)
+            v_lin = jnp.take(cache["v"], src, axis=1)
+            lengths = jnp.full((B,), L, jnp.int32)
+        else:
+            k_lin, v_lin = cache["k"], cache["v"]
+            lengths = jnp.full((B,), pos, jnp.int32)
+        pages, table = KVC.dense_to_paged(k_lin, v_lin,
                                           KVC.DEFAULT_PAGE_SIZE * 8)
-        lengths = jnp.full((B,), pos, jnp.int32)
         qg = q[:, 0].reshape(B, dims.n_kv_heads, dims.q_per_kv, dims.head_dim)
         out = KVC.attend_paged(qg, pages, table, lengths, k[:, 0], v[:, 0],
                                impl=impl).astype(q.dtype)

@@ -26,7 +26,7 @@ unmasked).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -121,6 +121,50 @@ def append_paged(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
         pkv.k.at[phys, slot].set(k_new.astype(pkv.k.dtype)),
         pkv.v.at[phys, slot].set(v_new.astype(pkv.v.dtype)),
     )
+
+
+def append_paged_chunk(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array,
+                       n_valid: jax.Array) -> PagedKV:
+    """Write a whole CHUNK of C tokens' (k, v) per slot in one dense scatter.
+
+    k_new/v_new: (B, C, KV, hd); chunk token i of slot b lands at logical
+    position ``lengths[b] + i``. ``n_valid`` (B,) int32 is the count of real
+    tokens in the chunk per slot (ragged tails / inactive slots write to the
+    trash page — same no-branch redirect as ``append_paged``). Valid tokens
+    are always a chunk PREFIX (prompts are right-padded), so lengths advance
+    by exactly ``n_valid``.
+    """
+    B, C = k_new.shape[:2]
+    psz = pkv.page_size
+    pos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)[None, :]
+    logical = jnp.clip(pos // psz, 0, page_table.shape[1] - 1)
+    slot = pos % psz
+    phys = jnp.take_along_axis(page_table, logical, axis=1)     # (B, C)
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]
+    phys = jnp.where(valid, phys, TRASH_PAGE)
+    fp, fs = phys.reshape(-1), slot.reshape(-1)
+    k_flat = k_new.reshape(B * C, *k_new.shape[2:])
+    v_flat = v_new.reshape(B * C, *v_new.shape[2:])
+    return PagedKV(
+        pkv.k.at[fp, fs].set(k_flat.astype(pkv.k.dtype)),
+        pkv.v.at[fp, fs].set(v_flat.astype(pkv.v.dtype)),
+    )
+
+
+def copy_pool_pages(cache, src, dst):
+    """Copy physical page ``src`` onto ``dst`` in every PagedKV leaf of a
+    model cache (leaves are (units, P, psz, KV, hd) — the page table is
+    shared across units, so one physical id names the same slot everywhere).
+    Dense per-slot leaves (recurrent states, cross blocks) pass through
+    untouched. This is the device half of copy-on-write prefix sharing."""
+    def one(x):
+        if isinstance(x, PagedKV):
+            return PagedKV(x.k.at[:, dst].set(x.k[:, src]),
+                           x.v.at[:, dst].set(x.v[:, src]))
+        return x
+    return jax.tree_util.tree_map(one, cache,
+                                  is_leaf=lambda x: isinstance(x, PagedKV))
 
 
 def dense_to_paged(k: jax.Array, v: jax.Array, page_size: int
@@ -221,3 +265,217 @@ def paged_decode_attention(params, x, dims: A.AttnDims, pkv: PagedKV, *,
     new_pkv = append_paged(pkv, k_self, v_self, page_table, lengths,
                            active) if commit else pkv
     return out, new_pkv
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: C queries at a time over the pool (the chunk's own k/v are
+# appended FIRST, so one attend covers history + intra-chunk causal)
+# ---------------------------------------------------------------------------
+
+def _attend_prefill_ref(qg, pkv: PagedKV, page_table, lengths,
+                        window: Optional[int]):
+    """Gather-based reference for chunk queries. qg: (B, C, KV, G, hd) at
+    absolute positions lengths[b] + i; key at logical index j is valid for
+    query i iff j <= lengths[b] + i (and within the sliding window). Returns
+    (B, C, KV, G, hd) fp32."""
+    B, C, KV, G, hd = qg.shape
+    npg, psz = page_table.shape[1], pkv.page_size
+    L = npg * psz
+    kk = pkv.k[page_table].astype(jnp.float32)        # (B, npg, psz, KV, hd)
+    vv = pkv.v[page_table].astype(jnp.float32)
+    kk = kk.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)   # (B, KV, L, hd)
+    vv = vv.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
+    scale = 1.0 / (hd ** 0.5)
+    qf = qg.astype(jnp.float32)
+    s = jnp.einsum("bckgd,bksd->bkgcs", qf, kk) * scale   # (B,KV,G,C,L)
+    idx = jnp.arange(L)
+    qabs = lengths[:, None] + jnp.arange(C)               # (B, C)
+    valid = idx[None, None, :] <= qabs[:, :, None]        # (B, C, L)
+    if window is not None:
+        valid &= idx[None, None, :] > qabs[:, :, None] - window
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgcs,bksd->bkgcd", w, vv)
+    return out.transpose(0, 3, 1, 2, 4)                   # (B, C, KV, G, hd)
+
+
+def attend_prefill(qg, pkv: PagedKV, page_table, lengths, *,
+                   window: Optional[int] = None, impl: str = "auto"):
+    """Dispatch between the gather reference and the Pallas chunked-prefill
+    kernel (``repro.kernels.flash_prefill``)."""
+    if impl in ("pallas", "kernels"):
+        from repro.kernels import ops as kops
+        return kops.flash_prefill(qg, pkv.k, pkv.v, page_table, lengths,
+                                  window=window)
+    return _attend_prefill_ref(qg, pkv, page_table, lengths, window)
+
+
+def paged_prefill_attention(params, x, dims: A.AttnDims, pkv: PagedKV, *,
+                            lengths, page_table, n_valid,
+                            window: Optional[int] = None, impl: str = "auto"):
+    """Chunk-of-C prefill over the paged cache — the ingest counterpart of
+    ``paged_decode_attention``. x: (B, C, d); slot b's chunk sits at its OWN
+    absolute positions [lengths[b], lengths[b] + C) (per-slot rope + masks:
+    ragged batches and prefix-cache offsets trace once). The chunk's K/V are
+    written into pool pages in ONE scatter (ragged tails past ``n_valid[b]``
+    to the trash page), then one attend covers [committed history ||
+    intra-chunk causal]. Rows past ``n_valid[b]`` return garbage the caller
+    discards — exactly like inactive decode slots.
+
+    Returns (out (B, C, d), new_pkv).
+    """
+    B, C = x.shape[:2]
+    q, k, v = A.project_qkv(params, x, dims)
+    posv = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)[None, :]
+    q = apply_rope(q, posv, dims.rope_theta)
+    k = apply_rope(k, posv, dims.rope_theta)
+    new_pkv = append_paged_chunk(pkv, k, v, page_table, lengths, n_valid)
+    KV, G, hd = dims.n_kv_heads, dims.q_per_kv, dims.head_dim
+    qg = q.reshape(B, C, KV, G, hd)
+    out = attend_prefill(qg, new_pkv, page_table, lengths, window=window,
+                         impl=impl)
+    out = out.reshape(B, C, dims.n_heads * hd).astype(x.dtype)
+    return out @ params["wo"].astype(x.dtype), new_pkv
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix page cache (host-side allocator metadata)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PrefixNode:
+    """One cached page of prompt-prefix KV. Full-page nodes chain into a trie
+    keyed by their page's token ids; each node may also carry TAIL candidates
+    — partially-filled pages whose leading tokens continue this chain."""
+    page: int
+    children: Dict[tuple, "_PrefixNode"] = dataclasses.field(
+        default_factory=dict)
+    tails: List[Tuple[int, "np.ndarray"]] = dataclasses.field(
+        default_factory=list)
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of a prefix-cache lookup: ``pages`` are the shared physical
+    pages (full pages, plus at most one partial TAIL page), ``n_tokens`` the
+    prompt tokens they cover. ``tail_tokens`` > 0 means the LAST shared page
+    is partially filled — the slot's first write lands inside it, so the
+    scheduler must copy-on-write it before writing."""
+    pages: List[int]
+    n_tokens: int
+    tail_tokens: int
+
+
+class PrefixPageCache:
+    """Host-side shared-prefix registry over the physical page pool.
+
+    Prompt prefixes are hashed at PAGE granularity by token content: a trie
+    node per full page (chained, so equal pages in different contexts never
+    collide) plus partial-tail candidates for the page that follows a chain.
+    The cache holds one refcount on every registered page so it survives its
+    owner's retirement; the scheduler (``launch.serve.ContinuousBatcher``)
+    adds one ref per slot that maps a shared page and frees a page only when
+    its count drops to zero. Pages with refcount > 1 are READ-ONLY for any
+    slot — a slot about to write into one gets a private copy first
+    (``copy_pool_pages``), which is what makes the sharing copy-on-write.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root = _PrefixNode(page=-1)
+        self.hits = 0            # lookups that shared at least one page
+        self.tokens_shared = 0   # prompt tokens served from shared pages
+
+    # ---- lookup ------------------------------------------------------
+    def match(self, tokens) -> PrefixMatch:
+        """Longest shared prefix of ``tokens`` (np int array). Never matches
+        the WHOLE prompt's last page as full+exact unless the prompt is
+        page-aligned; a partial tail match covers at most page_size-1
+        tokens of the next page.
+
+        Pure lookup — no refcounts are taken and no statistics move (the
+        scheduler may defer the admission); ``hits`` / ``tokens_shared`` are
+        updated by the caller when a match is actually admitted."""
+        import numpy as np
+        tokens = np.asarray(tokens)
+        psz = self.page_size
+        node, pages, n = self.root, [], 0
+        while n + psz <= tokens.size:
+            key = tuple(int(t) for t in tokens[n:n + psz])
+            child = node.children.get(key)
+            if child is None:
+                break
+            node, n = child, n + psz
+            pages.append(child.page)
+        tail_tokens, best = 0, None
+        rest = tokens[n:]
+        for page, ttoks in node.tails:
+            m = 0
+            lim = min(ttoks.size, rest.size)
+            while m < lim and int(ttoks[m]) == int(rest[m]):
+                m += 1
+            if m > tail_tokens:
+                tail_tokens, best = m, page
+        if best is not None and tail_tokens > 0:
+            pages.append(best)
+            n += tail_tokens
+        return PrefixMatch(pages=pages, n_tokens=n, tail_tokens=tail_tokens)
+
+    # ---- registration ------------------------------------------------
+    def insert(self, tokens, pages: List[int], refcount: Dict[int, int]):
+        """Register a freshly-prefilled prompt's pages. ``pages[i]`` backs
+        tokens [i*psz, (i+1)*psz). Full pages extend the trie; a non-empty
+        partial last page becomes a tail candidate. Every NEWLY registered
+        page gains one cache-held ref in ``refcount``. Pages already in the
+        trie (the request itself was a cache hit) are left alone."""
+        import numpy as np
+        tokens = np.asarray(tokens)
+        psz = self.page_size
+        node, n, i = self.root, 0, 0
+        while n + psz <= tokens.size:
+            key = tuple(int(t) for t in tokens[n:n + psz])
+            child = node.children.get(key)
+            if child is None:
+                child = _PrefixNode(page=pages[i])
+                node.children[key] = child
+                refcount[pages[i]] = refcount.get(pages[i], 0) + 1
+            node, n, i = child, n + psz, i + 1
+        tail = tokens[n:]
+        if tail.size and i < len(pages):
+            known = any(np.array_equal(t, tail) for _, t in node.tails)
+            if not known:
+                node.tails.append((pages[i], tail.copy()))
+                refcount[pages[i]] = refcount.get(pages[i], 0) + 1
+
+    # ---- eviction ----------------------------------------------------
+    def evict(self, refcount: Dict[int, int], free_pages: List[int],
+              need: int) -> int:
+        """Drop cache-held refs until ``need`` pages are free (deepest trie
+        nodes and tails first — prefixes stay useful longest). Pages whose
+        count hits zero go back on the free list. Returns pages freed."""
+        freed = 0
+
+        def drop(page):
+            nonlocal freed
+            refcount[page] -= 1
+            if refcount[page] == 0:
+                del refcount[page]
+                free_pages.append(page)
+                freed += 1
+
+        def walk(node):
+            nonlocal freed
+            for key in list(node.children):
+                if len(free_pages) >= need:
+                    return
+                walk(node.children[key])
+                child = node.children[key]
+                if not child.children and not child.tails:
+                    drop(child.page)
+                    del node.children[key]
+            while node.tails and len(free_pages) < need:
+                page, _ = node.tails.pop()
+                drop(page)
+
+        walk(self.root)
+        return freed

@@ -1,7 +1,6 @@
 """Basic layers: linear, norms, rotary embeddings, positional encodings, MLP."""
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +80,14 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 
 def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
     """Whisper/ViT-style fixed sinusoidal table (S, d)."""
-    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    return sinusoidal_at(jnp.arange(seq_len), d_model)
+
+
+def sinusoidal_at(positions: jax.Array, d_model: int) -> jax.Array:
+    """Sinusoidal embeddings at arbitrary (possibly traced, per-slot)
+    positions: (...,) -> (..., d). The serving paths use this with each
+    slot's own absolute offsets (ragged decode, chunked prefill)."""
+    pos = positions.astype(jnp.float32)[..., None]
     half = d_model // 2
     div = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
     ang = pos * div

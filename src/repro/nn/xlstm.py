@@ -7,7 +7,7 @@ stabilizer m_t).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -315,7 +315,6 @@ def _slstm_cell(params, xt, state, n_heads: int):
     """xt: (B, 4*d) pre-projected inputs. state: (h, c, n, m)."""
     h, c, n, m = state
     B = xt.shape[0]
-    d = h.shape[1] * h.shape[2]
     hd = h.shape[2]
     rec = jnp.einsum("ghij,bhj->bghi", params["r"].astype(jnp.float32), h)
     raw = xt.astype(jnp.float32).reshape(B, 4, n_heads, hd) \
@@ -376,7 +375,6 @@ def slstm_two_pass(params, x_clean, x_noisy, n_heads: int, cfg: XLSTMConfig):
     """DB two-pass: clean scan (collecting per-step states); each noisy token i
     runs one sLSTM cell step from the clean state at i-1, all in parallel."""
     B, S, d = x_clean.shape
-    hd = d // n_heads
     y_clean, _, states_seq = slstm_fwd(params, x_clean, n_heads, cfg,
                                        return_states=True)
     # states_seq leaves: (S, B, ...) post-step; state BEFORE step i is the

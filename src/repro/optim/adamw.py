@@ -5,7 +5,6 @@ same NamedSharding as the params (ZeRO-style for free under pjit).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

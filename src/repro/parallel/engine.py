@@ -64,12 +64,24 @@ _POLICY_ALIASES = {"mean": "replicate+psum-mean", "psum-mean":
                    "freeze-after-warmup"}
 
 
-def _split_optimizer(tcfg: TrainConfig):
+def _split_optimizer(tcfg: TrainConfig, lr_scale: float = 1.0):
     """Same AdamW/schedule as ``make_db_train_step``'s, but with clipping
     hoisted out: the engine clips each block's FULL view grads (stack +
     periphery, matching the sequential per-block step) before the periphery
-    reduction splits them across two optimizers."""
-    lr = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.steps)
+    reduction splits them across two optimizers.
+
+    ``lr_scale`` compensates the periphery's 1-vs-B update-count gap: the
+    sequential trainer applies one periphery AdamW update per BLOCK update
+    (B per batch-equivalent), the parallel engine one per BATCH. With
+    ``lr_scale = B`` the periphery rate is scaled by B and the warmup/cosine
+    schedule is evaluated at the equivalent block-update count, so the
+    periphery trajectory tracks the sequential cadence to first order."""
+    base = warmup_cosine(tcfg.lr, tcfg.warmup_steps, tcfg.steps)
+    if lr_scale == 1.0:
+        lr = base
+    else:
+        def lr(step):
+            return lr_scale * base(step.astype(jnp.float32) * lr_scale)
     return adamw(lr, tcfg.b1, tcfg.b2, tcfg.eps,
                  weight_decay=tcfg.weight_decay, grad_clip=None)
 
@@ -85,7 +97,8 @@ class BlockParallelTrainer:
     def __init__(self, dbm: DiffusionBlocksModel, tcfg: TrainConfig,
                  periphery: str = "replicate+psum-mean",
                  freeze_steps: Optional[int] = None, impl: str = "auto",
-                 devices=None, jit: bool = True, precision=None):
+                 devices=None, jit: bool = True, precision=None,
+                 periphery_lr_scale=None):
         self.dbm, self.tcfg, self.impl = dbm, tcfg, impl
         self.precision = precision_mod.get_policy(precision)
         self.policy = _POLICY_ALIASES.get(periphery, periphery)
@@ -100,7 +113,15 @@ class BlockParallelTrainer:
         self.mode = "shard_map" if self.mesh is not None else "round_robin"
         self.qranges = jnp.asarray(P.block_qranges(dbm.db))        # (B, 2)
         self.block_ids = jnp.arange(self.B)
+        if periphery_lr_scale in (None, "none"):
+            self.periphery_lr_scale = 1.0
+        elif periphery_lr_scale == "auto":
+            self.periphery_lr_scale = float(self.B)
+        else:
+            self.periphery_lr_scale = float(periphery_lr_scale)
         self._opt_init, self._opt_update = _split_optimizer(tcfg)
+        self._popt_init, self._popt_update = _split_optimizer(
+            tcfg, self.periphery_lr_scale)
         self._step_fn = self._build_step(jit)
         if self.mesh is not None:
             sp = NamedSharding(self.mesh, rules.block_state_specs()["stacked"])
@@ -113,6 +134,7 @@ class BlockParallelTrainer:
         policy, impl, freeze_steps = self.policy, self.impl, self.freeze_steps
         pol = self.precision
         opt_update = self._opt_update
+        popt_update = self._popt_update
         pod_ax = rules.BLOCK_AXIS if self.mode == "shard_map" else None
         data_size = self.mesh.shape["data"] if self.mesh is not None else 1
         data_ax = "data" if (self.mode == "shard_map" and data_size > 1) \
@@ -172,7 +194,7 @@ class BlockParallelTrainer:
                 body, acc0, (stacks, stack_opt, rngs, qranges, block_ids))
             if pod_ax is not None:
                 acc = jax.lax.psum(acc, pod_ax)
-            updates, new_popt, _ = opt_update(acc, periph_opt, periph)
+            updates, new_popt, _ = popt_update(acc, periph_opt, periph)
             new_periph = apply_updates(periph, updates)
             if policy == "freeze-after-warmup":
                 frozen = periph_opt.step >= freeze_steps
@@ -196,7 +218,7 @@ class BlockParallelTrainer:
         stacks = stack_block_views(params, self.dbm.ranges)
         _, periph = split_periphery(params)
         stack_opt = jax.vmap(self._opt_init)(stacks)
-        periph_opt = self._opt_init(periph)
+        periph_opt = self._popt_init(periph)
         if self.mesh is not None:
             specs = rules.block_state_specs()
             sp = NamedSharding(self.mesh, specs["stacked"])
@@ -312,10 +334,15 @@ def train_db_parallel(dbm: DiffusionBlocksModel, tcfg: TrainConfig, data_iter,
                       rng, params=None, log=print,
                       periphery: str = "replicate+psum-mean",
                       devices=None, ckpt_dir: Optional[str] = None,
-                      impl: str = "auto", precision=None):
-    """Functional wrapper mirroring ``train_db``'s signature."""
+                      impl: str = "auto", precision=None,
+                      periphery_lr_scale=None):
+    """Functional wrapper mirroring ``train_db``'s signature.
+    ``periphery_lr_scale``: None (off), "auto" (scale by B), or a float —
+    compensates the periphery's 1-update-per-batch vs the sequential
+    trainer's 1-update-per-block-update cadence."""
     trainer = BlockParallelTrainer(dbm, tcfg, periphery=periphery,
                                    devices=devices, impl=impl,
-                                   precision=precision)
+                                   precision=precision,
+                                   periphery_lr_scale=periphery_lr_scale)
     return trainer.train(data_iter, rng, params=params, log=log,
                          ckpt_dir=ckpt_dir)

@@ -17,7 +17,6 @@ wire_bytes heuristic per op (ring algorithms, n→∞ limit):
 """
 from __future__ import annotations
 
-import json
 import re
 from typing import Dict, Optional
 

@@ -10,6 +10,7 @@ the 16-way model axis for every assigned architecture.
 """
 from __future__ import annotations
 
+import os
 from typing import Any, Optional, Tuple
 
 import jax
@@ -29,8 +30,6 @@ LOGICAL_RULES = {
     None: None,
 }
 
-
-import os
 
 
 def spec_for_axes(axes: Tuple[Optional[str], ...], mesh: Mesh,

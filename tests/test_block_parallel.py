@@ -233,3 +233,47 @@ def test_checkpoint_roundtrip_per_block_opt(dbm, params, tmp_path):
     tree_equal(restored.periph, state.periph, atol=1e-6, rtol=1e-6)
     tree_equal(restored.stack_opt, state.stack_opt, atol=1e-6, rtol=1e-6)
     tree_equal(restored.periph_opt, state.periph_opt, atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# periphery lr compensation (1-vs-B update-count gap)
+# ---------------------------------------------------------------------------
+def test_periphery_lr_scale_compensates_update_cadence():
+    """With ``lr_scale=B`` the periphery optimizer's first update must be
+    exactly B * sched(B) / sched(1) times the unscaled one: rate scaled by B
+    AND the warmup/cosine schedule evaluated at the equivalent block-update
+    count."""
+    from repro.optim.schedules import warmup_cosine
+    from repro.parallel.engine import _split_optimizer
+    cfg = tcfg(steps=32)
+    base_init, base_upd = _split_optimizer(cfg)
+    comp_init, comp_upd = _split_optimizer(cfg, lr_scale=float(B))
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 0.5)}
+    u_b, _, _ = base_upd(g, base_init(p), p)
+    u_c, _, _ = comp_upd(g, comp_init(p), p)
+    sched = warmup_cosine(cfg.lr, cfg.warmup_steps, cfg.steps)
+    ratio = float(B * sched(jnp.asarray(1.0 * B)) / sched(jnp.asarray(1.0)))
+    np.testing.assert_allclose(np.asarray(u_c["w"]) / np.asarray(u_b["w"]),
+                               ratio, rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_periphery_lr_compensation_convergence_parity(dbm):
+    """Same data/rng, same per-block-update budget: the compensated engine's
+    final losses must land strictly closer to the sequential trainer's than
+    the uncompensated engine's (whose periphery moves B× too slowly), and
+    within an absolute band of the sequential tail."""
+    from repro.core import train_db
+    cfg = tcfg(steps=6 * B)
+    kw = dict(log=lambda *_: None)
+    _, h_seq = train_db(dbm, cfg, data_it(), jax.random.PRNGKey(5), **kw)
+    _, h_comp = train_db(dbm, cfg, data_it(), jax.random.PRNGKey(5),
+                         parallel="blocks", periphery_lr_scale="auto", **kw)
+    _, h_unc = train_db(dbm, cfg, data_it(), jax.random.PRNGKey(5),
+                        parallel="blocks", **kw)
+    tail = lambda h: float(np.mean([l for _, _, l in h[-2 * B:]]))  # noqa: E731
+    t_seq, t_comp, t_unc = tail(h_seq), tail(h_comp), tail(h_unc)
+    assert np.isfinite(t_comp)
+    assert abs(t_comp - t_seq) < abs(t_unc - t_seq)
+    assert abs(t_comp - t_seq) < 0.9

@@ -8,13 +8,13 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.checkpoint import load_blocks, load_pytree, save_block, save_pytree
-from repro.configs import DBConfig
-from repro.configs.base import ModelConfig
-from repro.core import DiffusionBlocksModel
-from repro.data import (ByteTokenizer, GaussianMixtureImages, HostDataLoader,
+from repro.checkpoint import load_blocks, load_pytree, save_block, save_pytree  # noqa: E402
+from repro.configs import DBConfig  # noqa: E402
+from repro.configs.base import ModelConfig  # noqa: E402
+from repro.core import DiffusionBlocksModel  # noqa: E402
+from repro.data import (ByteTokenizer, GaussianMixtureImages, HostDataLoader,  # noqa: E402
                         MarkovLM, Text8Tokenizer)
 
 

@@ -50,7 +50,6 @@ def test_block_step_leaves_other_blocks_untouched(dbm):
             jax.tree_util.tree_flatten_with_path(layers2)[0],
             jax.tree_util.tree_flatten_with_path(layers0)[0]):
         a, c = np.asarray(a), np.asarray(c)
-        inside = a[start:start + size]
         outside = np.concatenate([a[:start], a[start + size:]])
         outside_ref = np.concatenate([c[:start], c[start + size:]])
         np.testing.assert_array_equal(outside, outside_ref,
@@ -118,7 +117,6 @@ def test_e2e_training_learns():
 def test_two_pass_equals_concat_objective():
     """For an attention arch both causal modes implement the same objective:
     with identical (σ, ε) draws the losses must match."""
-    import dataclasses
     db_c = DBConfig(num_blocks=2, causal_mode="concat", overlap_gamma=0.0)
     db_t = DBConfig(num_blocks=2, causal_mode="two_pass", overlap_gamma=0.0)
     dbm_c = DiffusionBlocksModel(TINY, db_c)

@@ -140,12 +140,23 @@ def test_dense_decode_attention_kernel_route():
                                    atol=1e-4, rtol=1e-4)
 
 
-def test_dense_kernel_route_rejects_swa_ring():
-    dims, p, x = _attn_setup(key=4)
-    cache = A.init_kv_cache(2, 8, dims, jnp.float32)
-    with pytest.raises(NotImplementedError):
-        A.decode_attention(p, x[:, :1], dims, cache, 0, window=8,
-                           impl="kernels")
+def test_dense_kernel_route_swa_ring_matches_reference():
+    """The SWA ring buffer is un-rotated into absolute order and served
+    through the paged flash-decode kernel; token-by-token outputs must match
+    the reference masked attend over the ring — including the wrap-around
+    steps (pos >= window) and the not-yet-full prefix (pos < window)."""
+    dims, p, x = _attn_setup(S=14, key=4)
+    B, S, _ = x.shape
+    window = 6
+    c_ref = A.init_kv_cache(B, window, dims, jnp.float32)
+    c_ker = A.init_kv_cache(B, window, dims, jnp.float32)
+    for t in range(S):
+        o_ref, c_ref = A.decode_attention(p, x[:, t:t + 1], dims, c_ref, t,
+                                          window=window)
+        o_ker, c_ker = A.decode_attention(p, x[:, t:t + 1], dims, c_ker, t,
+                                          window=window, impl="kernels")
+        np.testing.assert_allclose(np.asarray(o_ker), np.asarray(o_ref),
+                                   atol=1e-4, rtol=1e-4, err_msg=f"pos {t}")
 
 
 def test_paged_append_trash_redirect():
@@ -330,3 +341,65 @@ def test_engine_memoized_and_jit_cache_stable(dbm_params):
         n = eng._decode._cache_size()
         eng.generate(params, prompts, 3, jax.random.PRNGKey(1))
         assert eng._decode._cache_size() == n      # same shapes: no retrace
+
+
+# ---------------------------------------------------------------------------
+# Slot recycling under prefix sharing (PR 4): retiring a slot must only free
+# pages whose refcount drops to zero, and a recycled slot must not observe a
+# prior tenant's pages.
+# ---------------------------------------------------------------------------
+
+def test_retire_under_sharing_frees_only_zero_ref_pages(dbm_params):
+    """Serve two prefix-sharing requests through ONE slot. Retiring the
+    first must NOT free the shared prefix pages (the cache and later the
+    second slot still hold refs); after both retire, exactly the
+    cache-retained pages stay out of the free list."""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(11)
+    sys_p = rs.randint(0, TINY.vocab_size, size=16)    # 4 full pages of 4
+    u1 = rs.randint(0, TINY.vocab_size, size=4)
+    u2 = rs.randint(0, TINY.vocab_size, size=4)
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=24,
+                           max_len=32, seg_len=4, page_size=4,
+                           chunk_size=8, prefix_cache=True,
+                           precision="fp32")
+    cb.submit(np.concatenate([sys_p, u1]), max_new=4)
+    cb.run(jax.random.PRNGKey(0))
+    # first request retired: its prefix pages survive as cache-held refs
+    retained_after_1 = set(cb.page_refs)
+    assert retained_after_1, "prefix pages should stay cache-retained"
+    assert all(r == 1 for r in cb.page_refs.values())
+    assert len(cb.free_pages) + len(cb.page_refs) == cb.total_pages - 1
+    cb.submit(np.concatenate([sys_p, u2]), max_new=4)
+    done = cb.run(jax.random.PRNGKey(1))
+    assert done[0].shared_tokens == 16
+    # second request retired too: shared pages still retained exactly once
+    assert set(cb.page_refs) >= retained_after_1
+    assert all(r == 1 for r in cb.page_refs.values())
+    assert len(cb.free_pages) + len(cb.page_refs) == cb.total_pages - 1
+
+
+def test_recycled_slot_no_leak_under_prefix_sharing(dbm_params):
+    """PR 3's leak test, under prefix sharing: a recycled slot's SECOND
+    request must be independent of its first occupant — serve [p1, p2] and
+    [p1', p2] (same lengths, different tokens) through ONE slot with the
+    prefix cache ON; p2's greedy output must be identical. Catches stale
+    pages leaking through the recycled slot AND through the prefix trie."""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(12)
+    p1 = rs.randint(0, TINY.vocab_size, size=8)
+    p1_alt = (p1 + 7) % TINY.vocab_size
+    p2 = rs.randint(0, TINY.vocab_size, size=8)
+
+    def serve(first):
+        cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=12,
+                               max_len=20, seg_len=4, page_size=4,
+                               chunk_size=4, prefix_cache=True,
+                               precision="fp32")
+        cb.submit(first, max_new=5)
+        cb.submit(p2, max_new=5)
+        done = cb.run(jax.random.PRNGKey(9))
+        assert done[1].shared_tokens == 0     # p2 shares nothing with p1
+        return done[1].out
+
+    assert serve(p1) == serve(p1_alt)

@@ -1,7 +1,6 @@
 """Per-assigned-architecture smoke tests: reduced config (≤2 layers,
 d_model≤512, ≤4 experts) — one forward, one DB train step, one decode step.
 Asserts output shapes and finiteness (no NaNs)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +12,6 @@ from repro.configs import DBConfig
 from repro.configs.base import TrainConfig
 from repro.core import DiffusionBlocksModel
 from repro.core.training import make_db_train_step
-from repro.models import LayerCtx, build_model
 
 ARCHS = configs.list_archs()
 

@@ -5,9 +5,9 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.optim import adamw, apply_updates, global_norm, warmup_cosine
+from repro.optim import adamw, apply_updates, global_norm, warmup_cosine  # noqa: E402
 
 
 def numpy_adamw(params, grads, steps, lr, b1, b2, eps, wd):

@@ -4,14 +4,14 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
-from repro.configs import DBConfig
-from repro.core import edm
-from repro.core import partition as P
+from repro.configs import DBConfig  # noqa: E402
+from repro.core import edm  # noqa: E402
+from repro.core import partition as P  # noqa: E402
 
 db_configs = st.builds(
     DBConfig,
