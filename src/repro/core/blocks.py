@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import precision as precision_mod
-from repro.configs.base import AUDIO, HYBRID, SSM, VLM, DBConfig, ModelConfig
+from repro.configs.base import HYBRID, SSM, DBConfig, ModelConfig
 from repro.core import edm
 from repro.core import partition as P
 from repro.models import build_model
@@ -98,24 +98,27 @@ class DiffusionBlocksModel:
         return edm.sample_sigma_in_qrange(rng, shape, self.db, q_lo, q_hi)
 
     # ------------------------------------------------------------------
-    # conditioning inputs (stubbed modality frontends)
+    # conditioning inputs (modality frontends live on the model —
+    # ``model.encode_conditioning`` is the ONE code path shared by the
+    # training losses, the dense dry-run shapes, and the serving engine's
+    # admission-time encode)
     # ------------------------------------------------------------------
     def make_ctx(self, params, S: int, mode: str, sigma=None,
                  aux_inputs: Optional[Dict[str, jax.Array]] = None,
-                 precision=None, **kw) -> LayerCtx:
+                 precision=None, cond_lengths=None, **kw) -> LayerCtx:
         ctx = LayerCtx(cfg=self.cfg, mode=mode, positions=jnp.arange(S),
-                       precision=precision_mod.get_policy(precision), **kw)
+                       precision=precision_mod.get_policy(precision),
+                       cond_lengths=cond_lengths, **kw)
         if sigma is not None:
             ctx.cond = self.model.cond(params, jnp.log(sigma.reshape(-1)))
-        aux_inputs = aux_inputs or {}
-        # decode reads cross-attention K/V from the cache (filled at prefill);
-        # re-encoding the modality frontend per decode step would be wasted.
-        if self.cfg.family == VLM and mode != "decode":
-            ctx.kv_x = aux_inputs["image_embs"]
-            ctx.kv_positions = jnp.arange(ctx.kv_x.shape[1])
-        if self.cfg.family == AUDIO and mode != "decode":
-            ctx.kv_x = self.model.encode(params, aux_inputs["audio_embs"], ctx)
-            ctx.kv_positions = jnp.arange(ctx.kv_x.shape[1])
+        # decode reads cross-attention K/V from the cache (filled at prefill
+        # or at engine admission); re-encoding the modality frontend per
+        # decode step would be wasted.
+        if mode != "decode":
+            kv_x = self.model.encode_conditioning(params, aux_inputs, ctx)
+            if kv_x is not None:
+                ctx.kv_x = kv_x
+                ctx.kv_positions = jnp.arange(kv_x.shape[1])
         return ctx
 
     # ------------------------------------------------------------------
@@ -331,13 +334,17 @@ class DiffusionBlocksModel:
 
     def serve_step(self, params, cache, pos, rng, aux_inputs=None,
                    steps_per_block: int = 1, temperature: float = 0.0,
-                   top_k: int = 0):
+                   top_k: int = 0, cond_lengths=None):
         """One generation step over DENSE caches: denoise token at ``pos``
         through the blocks, sample, commit. This is what decode dry-run
         shapes lower; the paged serving engine uses ``serve_step_paged``.
+        ``cond_lengths`` masks the cross (conditioning) blocks per row when
+        the dense cache was filled via ``model.set_conditioning`` (ragged
+        conditioning); None keeps the unmasked read of prefill-sized blocks.
         ``steps_per_block``/``temperature``/``top_k`` are static under jit
         (see denoise_next_token). Returns (token (B,), new_cache)."""
-        ctx_base = self.make_ctx(params, 1, "decode", None, aux_inputs)
+        ctx_base = self.make_ctx(params, 1, "decode", None, aux_inputs,
+                                 cond_lengths=cond_lengths)
         ctx_base.positions = None
         r_noise, r_samp = jax.random.split(rng)
         d_final = self.denoise_next_token(params, cache, pos, r_noise,
@@ -352,9 +359,10 @@ class DiffusionBlocksModel:
     # Paged serving steps (repro.nn.cache pools; used by launch.serve)
     # ------------------------------------------------------------------
     def _paged_ctx(self, params, lengths, page_table, active, precision,
-                   impl, aux_inputs=None) -> LayerCtx:
-        ctx = self.make_ctx(params, 1, "decode", None, aux_inputs,
-                            precision=precision, impl=impl)
+                   impl, cond_lengths=None) -> LayerCtx:
+        ctx = self.make_ctx(params, 1, "decode", None, None,
+                            precision=precision, impl=impl,
+                            cond_lengths=cond_lengths)
         ctx.positions = None
         ctx.lengths = lengths
         ctx.page_table = page_table
@@ -365,15 +373,19 @@ class DiffusionBlocksModel:
                          active=None, steps_per_block: int = 1,
                          temperature: float = 0.0, top_k: int = 0,
                          precision=None, impl: str = "auto",
-                         aux_inputs=None):
+                         cond_lengths=None):
         """One generation step over the PAGED serving cache: each slot
         denoises + commits at its OWN position ``lengths[b]`` (ragged batches
         share this one trace). ``active`` masks slots that commit this step —
         inactive slots compute but write nothing (KV appends are redirected
-        to the trash page, recurrent states held). Keyword config is static
-        under jit. Returns (token (B,), new_kv, new_lengths)."""
+        to the trash page, recurrent states held). Conditioned slots read
+        their cross memory from the cache (written once at admission by
+        ``model.set_conditioning``) under the per-slot valid length
+        ``cond_lengths`` — aux inputs are never re-encoded per step. Keyword
+        config is static under jit. Returns (token (B,), new_kv,
+        new_lengths)."""
         ctx = self._paged_ctx(params, lengths, page_table, active, precision,
-                              impl, aux_inputs)
+                              impl, cond_lengths)
         r_noise, r_samp = jax.random.split(rng)
         d_final = self.denoise_next_token(params, kv, None, r_noise, ctx,
                                           steps_per_block)
@@ -386,12 +398,12 @@ class DiffusionBlocksModel:
 
     def commit_prompt_token(self, params, kv, page_table, lengths, token, *,
                             active=None, precision=None, impl: str = "auto",
-                            aux_inputs=None):
+                            cond_lengths=None):
         """Prefill building block: commit a known (prompt) token at each
         slot's ``lengths[b]`` without the denoising probe. Returns
         (new_kv, new_lengths)."""
         ctx = self._paged_ctx(params, lengths, page_table, active, precision,
-                              impl, aux_inputs)
+                              impl, cond_lengths)
         new_kv = self.commit_token(params, kv, None, token, ctx)
         new_lengths = lengths + (active.astype(lengths.dtype)
                                  if active is not None else 1)
@@ -399,7 +411,7 @@ class DiffusionBlocksModel:
 
     def commit_prompt_chunk(self, params, kv, page_table, lengths, tokens, *,
                             n_valid, precision=None, impl: str = "auto",
-                            aux_inputs=None):
+                            cond_lengths=None):
         """Chunked-prefill building block: commit up to C known (prompt)
         tokens per slot in ONE dispatch — a prompt of S tokens costs
         ceil(S / C) of these instead of S ``commit_prompt_token`` steps.
@@ -417,7 +429,7 @@ class DiffusionBlocksModel:
         Returns (new_kv, lengths + n_valid).
         """
         ctx = self._paged_ctx(params, lengths, page_table, None, precision,
-                              impl, aux_inputs)
+                              impl, cond_lengths)
         ctx.mode = "prefill_chunk"
         ctx.n_valid = n_valid
         pol = precision_mod.get_policy(ctx.precision)

@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro import configs                                    # noqa: E402
 from repro.configs import DBConfig, INPUT_SHAPES, get_config, get_shape  # noqa: E402
-from repro.configs.base import AUDIO, TrainConfig, VLM       # noqa: E402
+from repro.configs.base import TrainConfig                   # noqa: E402
 from repro.core import DiffusionBlocksModel                  # noqa: E402
 from repro.core.training import (extract_block_view,         # noqa: E402
                                  make_db_train_step, make_e2e_train_step)
@@ -48,32 +48,23 @@ from repro.sharding.rules import zero1_shardings  # noqa: E402
 DTYPE = jnp.bfloat16
 
 
-def input_specs(cfg, shape, dtype=DTYPE):
-    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+def input_specs(dbm, shape, dtype=DTYPE):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+    Aux conditioning specs come from the model's own frontend declaration
+    (``model.aux_input_specs``) — the ONE code path shared with the
+    training losses and the batched serving engine."""
     B, S = shape.global_batch, shape.seq_len
     specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-    if cfg.family == VLM:
-        specs["image_embs"] = jax.ShapeDtypeStruct(
-            (B, cfg.n_image_tokens, cfg.d_model), dtype)
-    if cfg.family == AUDIO:
-        specs["audio_embs"] = jax.ShapeDtypeStruct(
-            (B, cfg.n_audio_frames, cfg.d_model), dtype)
+    specs.update(dbm.model.aux_input_specs(B, dtype) or {})
     return specs
 
 
-def aux_specs(cfg, batch, dtype=DTYPE):
-    aux = {}
-    if cfg.family == VLM:
-        aux["image_embs"] = jax.ShapeDtypeStruct(
-            (batch, cfg.n_image_tokens, cfg.d_model), dtype)
-    if cfg.family == AUDIO:
-        aux["audio_embs"] = jax.ShapeDtypeStruct(
-            (batch, cfg.n_audio_frames, cfg.d_model), dtype)
-    return aux or None
+def aux_specs(dbm, batch, dtype=DTYPE):
+    return dbm.model.aux_input_specs(batch, dtype)
 
 
-def aux_shardings(cfg, mesh, batch):
-    aux = aux_specs(cfg, batch)
+def aux_shardings(dbm, mesh, batch):
+    aux = aux_specs(dbm, batch)
     if aux is None:
         return None
     return {k: tokens_sharding(mesh, batch) for k in aux}
@@ -101,8 +92,8 @@ def lower_train(dbm, shape, mesh, mode: str, block: int = 0,
                                   jnp.int32)
     t_shard = tokens_sharding(mesh, shape.global_batch)
     rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-    aux = aux_specs(cfg, shape.global_batch)
-    a_shard = aux_shardings(cfg, mesh, shape.global_batch)
+    aux = aux_specs(dbm, shape.global_batch)
+    a_shard = aux_shardings(dbm, mesh, shape.global_batch)
 
     if mode == "db":
         init_opt, step = make_db_train_step(dbm, block, tcfg, jit=False,
@@ -142,8 +133,8 @@ def lower_prefill(dbm, shape, mesh, probe_k=None):
     tokens = jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len),
                                   jnp.int32)
     t_shard = tokens_sharding(mesh, shape.global_batch)
-    aux = aux_specs(cfg, shape.global_batch)
-    a_shard = aux_shardings(cfg, mesh, shape.global_batch)
+    aux = aux_specs(dbm, shape.global_batch)
+    a_shard = aux_shardings(dbm, mesh, shape.global_batch)
 
     if probe_k is not None:
         def prefill(params, tokens, aux):
@@ -182,8 +173,8 @@ def lower_decode(dbm, shape, mesh):
     c_shard = cache_sharding(mesh, cache_abs, B)
     pos = jax.ShapeDtypeStruct((), jnp.int32)
     rng = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-    aux = aux_specs(cfg, B)
-    a_shard = aux_shardings(cfg, mesh, B)
+    aux = aux_specs(dbm, B)
+    a_shard = aux_shardings(dbm, mesh, B)
 
     def serve(params, cache, pos, rng, aux):
         return dbm.serve_step(params, cache, pos, rng, aux_inputs=aux)

@@ -115,19 +115,22 @@ class DecodeEngine:
         temp, tk = temperature, top_k
         Ck = self.chunk_size
 
-        def prefill_scan(params, kv, page_table, lengths, prompts, plens):
+        def prefill_scan(params, kv, page_table, lengths, prompts, plens,
+                         cond_lengths):
             def body(carry, t):
                 kv, lengths = carry
                 act = t < plens
                 tok = jnp.take(prompts, t, axis=1)
                 kv, lengths = dbm.commit_prompt_token(
                     params, kv, page_table, lengths, tok[:, None],
-                    active=act, precision=pol, impl=impl)
+                    active=act, precision=pol, impl=impl,
+                    cond_lengths=cond_lengths)
                 return (kv, lengths), None
             return jax.lax.scan(body, (kv, lengths),
                                 jnp.arange(prompts.shape[1]))[0]
 
-        def chunk_step(params, kv, page_table, lengths, prompt_buf, plens):
+        def chunk_step(params, kv, page_table, lengths, prompt_buf, plens,
+                       cond_lengths):
             # slot b's next chunk starts at its OWN offset lengths[b] (ragged
             # plens and prefix-cache hits put slots at different offsets)
             idx = lengths[:, None] + jnp.arange(Ck, dtype=lengths.dtype)
@@ -136,17 +139,18 @@ class DecodeEngine:
             n_valid = jnp.clip(plens - lengths, 0, Ck)
             return dbm.commit_prompt_chunk(
                 params, kv, page_table, lengths, tok, n_valid=n_valid,
-                precision=pol, impl=impl)
+                precision=pol, impl=impl, cond_lengths=cond_lengths)
 
         def prefill_chunk_scan(params, kv, page_table, lengths, prompts,
-                               plens, n_chunks):
+                               plens, cond_lengths, n_chunks):
             def body(carry, _):
                 kv, lengths = carry
                 return chunk_step(params, kv, page_table, lengths, prompts,
-                                  plens), None
+                                  plens, cond_lengths), None
             return jax.lax.scan(body, (kv, lengths), None, length=n_chunks)[0]
 
-        def decode_scan(params, kv, page_table, lengths, stop_at, rng, n):
+        def decode_scan(params, kv, page_table, lengths, stop_at, rng,
+                        cond_lengths, n):
             def body(carry, _):
                 kv, lengths, rng = carry
                 rng, rs = jax.random.split(rng)
@@ -154,14 +158,14 @@ class DecodeEngine:
                 tok, kv, lengths = dbm.serve_step_paged(
                     params, kv, page_table, lengths, rs, active=act,
                     steps_per_block=spb, temperature=temp, top_k=tk,
-                    precision=pol, impl=impl)
+                    precision=pol, impl=impl, cond_lengths=cond_lengths)
                 return (kv, lengths, rng), tok
             (kv, lengths, rng), toks = jax.lax.scan(
                 body, (kv, lengths, rng), None, length=n)
             return kv, lengths, rng, toks.T          # (B, n)
 
         def serve_scan(params, kv, page_table, lengths, prompt_buf, plens,
-                       stop_at, active, rng, n):
+                       stop_at, active, rng, cond_lengths, n):
             def body(carry, _):
                 kv, lengths, rng = carry
                 rng, rs = jax.random.split(rng)
@@ -170,7 +174,7 @@ class DecodeEngine:
                 ptok = jnp.take_along_axis(prompt_buf, idx[:, None], 1)[:, 0]
                 act = active & (lengths < stop_at)
                 ctx = dbm._paged_ctx(params, lengths, page_table, act, pol,
-                                     impl)
+                                     impl, cond_lengths)
                 rn, rsamp = jax.random.split(rs)
                 d = dbm.denoise_next_token(params, kv, None, rn, ctx, spb)
                 logits = dbm.model.logits(params, d)
@@ -192,30 +196,41 @@ class DecodeEngine:
         self._serve = jax.jit(serve_scan, static_argnames=("n",))
 
     # ------------------------------------------------------------------
-    def run_prefill(self, params, kv, table, lengths, prompts, plens):
+    def run_prefill(self, params, kv, table, lengths, prompts, plens,
+                    cond_lengths=None):
         """Dispatch the configured prefill program over a whole (padded)
         prompt buffer; returns (kv, lengths) and accounts serial steps."""
         S0 = prompts.shape[1]
+        if cond_lengths is None:
+            cond_lengths = jnp.zeros((prompts.shape[0],), jnp.int32)
         if self.prefill_mode == "chunked":
             n_chunks = -(-S0 // self.chunk_size)
             kv, lengths = self._prefill_chunks(params, kv, table, lengths,
-                                               prompts, plens,
+                                               prompts, plens, cond_lengths,
                                                n_chunks=n_chunks)
             self.prefill_steps += n_chunks
         else:
             kv, lengths = self._prefill(params, kv, table, lengths,
-                                        prompts, plens)
+                                        prompts, plens, cond_lengths)
             self.prefill_steps += S0
         self.dispatches += 1
         return kv, lengths
 
     def generate(self, params, prompts, max_new: int, rng=None, *,
                  prompt_lengths=None, page_size: int = KVC.DEFAULT_PAGE_SIZE,
+                 aux_inputs=None, cond_lengths=None,
                  reference: bool = False):
         """Static-batch generation. prompts: (B, S0) (right-padded when
         ``prompt_lengths`` is ragged) -> (B, S0 + max_new); row b holds its
         prompt then its ``max_new`` generated tokens starting at
         ``prompt_lengths[b]``.
+
+        ``aux_inputs`` (dict of (B, Sk, d) conditioning embeddings —
+        image_embs / audio_embs) is encoded ONCE through the model's
+        frontend and written into every slot's cross block before prefill;
+        the scan programs then read it from the cache under the per-slot
+        valid lengths ``cond_lengths`` (default: the full encoded length for
+        every row).
 
         ``reference=True`` replays the seed serving loop faithfully — one
         jitted dispatch + host sync per generated token — through the SAME
@@ -233,20 +248,45 @@ class DecodeEngine:
                                              self.pol)
         table = KVC.identity_page_table(B, pps)
         lengths = jnp.zeros((B,), jnp.int32)
+        if aux_inputs:
+            cond = self.dbm.model.encode_conditioning(params, aux_inputs)
+            if cond is None:
+                spec = self.dbm.model.aux_input_specs(B)
+                raise ValueError(
+                    f"aux_inputs {sorted(aux_inputs)} not understood by "
+                    f"family {self.dbm.cfg.family!r}: expected "
+                    f"{sorted(spec) if spec else 'no aux inputs'}")
+            if (cond_lengths is not None
+                    and not self.dbm.model.cond_padding_safe):
+                raise ValueError(
+                    "ragged cond_lengths through the static batch is "
+                    f"unsound for family {self.dbm.cfg.family!r}: its "
+                    "frontend (bidirectional encoder) mixes padded frames "
+                    "into every row. Serve ragged conditioning through "
+                    "ContinuousBatcher.submit, which encodes each request "
+                    "at its true length.")
+            kv = self.dbm.model.set_conditioning(params, kv, cond)
+            clens = (jnp.full((B,), cond.shape[1], jnp.int32)
+                     if cond_lengths is None
+                     else jnp.asarray(cond_lengths, jnp.int32))
+        else:
+            clens = jnp.zeros((B,), jnp.int32)
         kv, lengths = self.run_prefill(params, kv, table, lengths,
-                                       prompts.astype(jnp.int32), plens)
+                                       prompts.astype(jnp.int32), plens,
+                                       clens)
         stop_at = plens + max_new
         if reference:
             cols = []
             for _ in range(max_new):
                 kv, lengths, rng, t = self._decode(params, kv, table, lengths,
-                                                   stop_at, rng, n=1)
+                                                   stop_at, rng, clens, n=1)
                 self.dispatches += 1
                 cols.append(np.asarray(t))       # host sync per token (seed)
             gen = np.concatenate(cols, axis=1)
         else:
             kv, lengths, rng, t = self._decode(params, kv, table, lengths,
-                                               stop_at, rng, n=max_new)
+                                               stop_at, rng, clens,
+                                               n=max_new)
             self.dispatches += 1
             gen = np.asarray(t)
         out = np.zeros((B, S0 + max_new), dtype=np.asarray(prompts).dtype)
@@ -282,13 +322,15 @@ def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
              temperature: float = 0.0, top_k: int = 0, precision="bf16",
              impl: str = "auto", page_size: int = KVC.DEFAULT_PAGE_SIZE,
              prefill: str = "chunked", chunk_size: int = DEFAULT_CHUNK,
-             reference: bool = False):
+             aux_inputs=None, cond_lengths=None, reference: bool = False):
     """prompts: (B, S0) -> (B, S0 + max_new), scan-fused over the paged
     bf16 KV cache (see DecodeEngine). The cache dtype follows the
     ``repro.precision`` policy (bf16 KV by default; recurrent states keep
     their family override). ``prefill="chunked"`` (default) ingests the
     prompt ``chunk_size`` tokens per scan step; ``"per-token"`` is the
-    seed-style one-token-per-step reference scan. ``reference=True`` =
+    seed-style one-token-per-step reference scan. ``aux_inputs`` conditions
+    the batch (VLM image_embs / audio audio_embs, (B, Sk, d)): encoded once
+    and served from the per-slot cross blocks. ``reference=True`` =
     seed-style per-token DECODE loop (same math, one dispatch + host sync
     per token)."""
     eng = get_engine(dbm, steps_per_block=steps_per_block,
@@ -297,6 +339,7 @@ def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
                      chunk_size=chunk_size)
     return eng.generate(params, prompts, max_new, rng,
                         prompt_lengths=prompt_lengths, page_size=page_size,
+                        aux_inputs=aux_inputs, cond_lengths=cond_lengths,
                         reference=reference)
 
 
@@ -309,6 +352,8 @@ class Request:
     rid: int
     prompt: np.ndarray
     max_new: int
+    aux_inputs: Optional[dict] = None   # per-request conditioning (Sk, d)
+    cond_fp: int = 0                    # conditioning fingerprint (0 = none)
     out: List[int] = dataclasses.field(default_factory=list)
     pages: List[int] = dataclasses.field(default_factory=list)
     shared_tokens: int = 0        # prompt tokens served from the prefix cache
@@ -350,6 +395,18 @@ class ContinuousBatcher:
     Requires a model whose sequence state lives entirely in paged KV
     (``model.kv_carries_all_state`` — recurrent families raise here, at
     construction time, not mid-serve).
+
+    CONDITIONED requests: ``submit(..., aux_inputs={"image_embs": (Sk, d)})``
+    (or ``audio_embs``) attaches per-request conditioning. The modality
+    frontend runs ONCE at admission (``model.encode_conditioning`` — for
+    audio that is the whole encoder stack, at the request's true frame
+    count) and the projected result is written into the slot's fixed cross
+    block (``model.set_conditioning``); every subsequent chunk/decode
+    dispatch reads it from the cache under the per-slot valid length, so
+    conditioned and unconditioned slots mix in ONE compiled program
+    (``cond_lengths[s] == 0`` makes a slot's cross term exactly zero).
+    Prefix sharing keys on (token content, conditioning fingerprint):
+    identical text under different conditioning never shares pages.
     """
 
     def __init__(self, dbm, params, *, num_slots: int = 8,
@@ -380,8 +437,13 @@ class ContinuousBatcher:
         self.page_size, self.seg_len = page_size, seg_len
         self.max_prompt, self.max_len = max_prompt, max_len
         pps = KVC.pages_for(max_len, page_size)
-        self.total_pages = (1 + num_slots * pps if total_pages is None
-                            else total_pages)
+        # default pool: worst-case pages per slot, plus — under prefix
+        # sharing — one copy-on-write spare per slot (a decode write into a
+        # cache-RETAINED boundary page copies it even when every mapped page
+        # is live, so a zero-slack pool would deadlock on its own request)
+        cow_spare = num_slots if prefix_cache else 0
+        self.total_pages = (1 + num_slots * pps + cow_spare
+                            if total_pages is None else total_pages)
         self.kv = dbm.model.init_paged_cache(num_slots, self.total_pages,
                                              page_size, self.eng.pol)
         self.free_pages = list(range(1, self.total_pages))
@@ -393,19 +455,40 @@ class ContinuousBatcher:
         self.stop_at = np.zeros(num_slots, np.int32)
         self.active = np.zeros(num_slots, bool)
         self.prompt_buf = np.zeros((num_slots, max_prompt), np.int32)
+        self.cond_lengths = np.zeros(num_slots, np.int32)
         self.slot_req: List[Optional[Request]] = [None] * num_slots
         self.queue: collections.deque = collections.deque()
         self._next_rid = 0
         self.steps = 0               # decode-segment scan steps (all slots)
         self.cow_copies = 0          # copy-on-write page copies performed
 
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int, aux_inputs=None) -> int:
+        """Queue a request. ``aux_inputs``: optional per-request conditioning
+        — {"image_embs": (Sk, d)} / {"audio_embs": (Sk, d)} numpy/jax arrays
+        WITHOUT a batch dim. The fingerprint for conditioning-aware prefix
+        sharing is taken here (content hash); the encoder itself runs at
+        admission."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size <= self.max_prompt, "prompt exceeds max_prompt"
         assert prompt.size + max_new <= self.max_len, "request exceeds max_len"
+        if aux_inputs:
+            cap = self.dbm.model.max_cond_tokens
+            if cap == 0:
+                raise ValueError(
+                    f"family {self.dbm.cfg.family!r} takes no aux "
+                    "conditioning inputs")
+            aux_inputs = {k: np.asarray(v, np.float32)
+                          for k, v in aux_inputs.items()}
+            for k, v in aux_inputs.items():
+                assert v.ndim == 2 and v.shape[1] == self.dbm.cfg.d_model, \
+                    f"{k}: expected (Sk, d_model), got {v.shape}"
+                assert v.shape[0] <= cap, \
+                    f"{k}: {v.shape[0]} tokens exceed the conditioning " \
+                    f"block capacity {cap}"
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, prompt, max_new)
+        req = Request(rid, prompt, max_new, aux_inputs=aux_inputs or None,
+                      cond_fp=KVC.conditioning_fingerprint(aux_inputs))
         req.submit_t = time.time()
         self.queue.append(req)
         return rid
@@ -456,13 +539,46 @@ class ContinuousBatcher:
         return True
 
     # ---- host-side scheduling between dispatches ---------------------
+    def _write_conditioning(self, slot: int, req: Request):
+        """Encode a newly-admitted request's conditioning ONCE and write it
+        into the slot's cross block. One jitted program per aux shape set
+        (the audio encoder runs at the request's TRUE frame count — padding
+        frames through a bidirectional encoder would change its output);
+        ``slot`` stays a traced scalar so all slots share the program."""
+        if req.aux_inputs is None:
+            self.cond_lengths[slot] = 0
+            return
+        # memoized on the dbm (like the engines): every batcher over the
+        # same model reuses one compiled program per aux shape set
+        progs = self.dbm.__dict__.setdefault("_cond_write_progs", {})
+        key = tuple(sorted((k, v.shape) for k, v in req.aux_inputs.items()))
+        key = (key, self.num_slots)
+        fn = progs.get(key)
+        if fn is None:
+            model = self.dbm.model
+
+            def encode_write(params, kv, aux, slot):
+                cond = model.encode_conditioning(params, aux)
+                return model.set_conditioning(params, kv, cond, slot)
+
+            # donate the pool: without it every conditioned admission would
+            # copy the whole paged cache to build the updated one (CPU
+            # backends ignore donation with a warning, so skip it there)
+            donate = () if jax.default_backend() == "cpu" else (1,)
+            fn = progs[key] = jax.jit(encode_write, donate_argnums=donate)
+        aux = {k: jnp.asarray(v)[None] for k, v in req.aux_inputs.items()}
+        self.kv = fn(self.params, self.kv, aux, jnp.asarray(slot, jnp.int32))
+        self.cond_lengths[slot] = next(iter(req.aux_inputs.values())).shape[0]
+
     def _admit(self) -> int:
         new_slots = np.zeros(self.num_slots, bool)
+        admitted = []
         for s in range(self.num_slots):
             if self.active[s] or not self.queue:
                 continue
             req = self.queue[0]
-            match = (self.prefix.match(req.prompt) if self.prefix is not None
+            match = (self.prefix.match(req.prompt, req.cond_fp)
+                     if self.prefix is not None
                      else KVC.PrefixMatch([], 0, 0))
             # PIN every matched page before any eviction can run: under pool
             # pressure evict() drops cache-held refs deepest-first, and
@@ -509,12 +625,15 @@ class ContinuousBatcher:
             self.slot_req[s] = req
             self.active[s] = True
             new_slots[s] = True
+            admitted.append((s, req))
         if new_slots.any():
             # recycled slots must not inherit the previous occupant's
             # per-slot state (recurrent mamba/xLSTM, cross blocks); paged KV
             # needs no reset — length masking hides stale pages.
             self.kv = self.dbm.model.reset_paged_slots(
                 self.kv, jnp.asarray(new_slots))
+        for s, req in admitted:      # AFTER the reset: encode-once-per-request
+            self._write_conditioning(s, req)
         return int(new_slots.sum())
 
     def _register_prefixes(self):
@@ -530,7 +649,7 @@ class ContinuousBatcher:
             npg = KVC.pages_for(int(self.plens[s]), self.page_size)
             self.prefix.insert(req.prompt,
                                [int(self.table[s, i]) for i in range(npg)],
-                               self.page_refs)
+                               self.page_refs, req.cond_fp)
             req.registered = True
 
     def _retire(self) -> List[Request]:
@@ -544,6 +663,7 @@ class ContinuousBatcher:
                 req.pages = []
                 self.table[s, :] = KVC.TRASH_PAGE
                 self.active[s] = False
+                self.cond_lengths[s] = 0
                 self.slot_req[s] = None
                 out.append(req)
         return out
@@ -582,7 +702,7 @@ class ContinuousBatcher:
                 self.kv, lengths = self.eng._prefill_chunk1(
                     self.params, self.kv, jnp.asarray(self.table),
                     jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
-                    jnp.asarray(self.plens))
+                    jnp.asarray(self.plens), jnp.asarray(self.cond_lengths))
                 self.lengths = np.array(lengths)
                 self.eng.dispatches += 1
                 self.eng.prefill_steps += 1
@@ -600,7 +720,8 @@ class ContinuousBatcher:
                     self.params, self.kv, jnp.asarray(self.table),
                     jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
                     jnp.asarray(self.plens), jnp.asarray(self.stop_at),
-                    jnp.asarray(decode_ready), rng, n=self.seg_len)
+                    jnp.asarray(decode_ready), rng,
+                    jnp.asarray(self.cond_lengths), n=self.seg_len)
                 self.eng.dispatches += 1
                 self.steps += self.seg_len
                 self.lengths = np.array(lengths)           # host copy
@@ -650,6 +771,12 @@ def main():
                     help="continuous: queued requests (ragged prompts)")
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths across the batch/queue")
+    ap.add_argument("--conditioned", action="store_true",
+                    help="attach aux conditioning (VLM/audio archs): random "
+                         "image/audio embeddings drawn from a small pool so "
+                         "the conditioning-aware prefix cache can hit")
+    ap.add_argument("--cond-pool", type=int, default=3,
+                    help="distinct conditioning inputs in the pool")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -662,6 +789,16 @@ def main():
 
     lm = MarkovLM(vocab_size=cfg.vocab_size, seed=7)
     rs = np.random.RandomState(1)
+    aux_key, cond_pool = None, []
+    if args.conditioned:
+        specs = dbm.model.aux_input_specs(1)
+        if not specs:
+            raise SystemExit(f"--conditioned: family {cfg.family!r} takes "
+                             "no aux inputs (pick a vlm/audio arch)")
+        aux_key = next(iter(specs))
+        Sk = dbm.model.max_cond_tokens
+        cond_pool = [rs.randn(Sk, cfg.d_model).astype(np.float32)
+                     for _ in range(args.cond_pool)]
     kw = dict(steps_per_block=args.steps_per_block,
               temperature=args.temperature, top_k=args.top_k,
               precision=args.precision, impl=args.impl,
@@ -674,10 +811,13 @@ def main():
         if args.ragged:
             plens = rs.randint(max(2, args.prompt_len // 2),
                                args.prompt_len + 1, size=args.batch)
+        aux = (None if aux_key is None else
+               {aux_key: jnp.asarray(np.stack([cond_pool[0]] * args.batch))})
         eng = get_engine(dbm, **kw)
         t0 = time.time()
         out = eng.generate(params, prompts, args.max_new,
-                           prompt_lengths=plens, page_size=args.page_size)
+                           prompt_lengths=plens, page_size=args.page_size,
+                           aux_inputs=aux)
         jax.block_until_ready(out)
         dt = time.time() - t0
         n_tok = args.batch * args.max_new
@@ -706,11 +846,14 @@ def main():
                                max_len=args.prompt_len + args.max_new,
                                seg_len=args.seg_len,
                                prefix_cache=args.prefix_cache, **kw)
-        for _ in range(args.requests):
+        for i in range(args.requests):
             plen = (rs.randint(max(2, args.prompt_len // 2),
                                args.prompt_len + 1)
                     if args.ragged else args.prompt_len)
-            cb.submit(lm.sample(rs, 1, plen)[0], args.max_new)
+            aux = (None if aux_key is None else
+                   {aux_key: cond_pool[i % len(cond_pool)]})
+            cb.submit(lm.sample(rs, 1, plen)[0], args.max_new,
+                      aux_inputs=aux)
         t0 = time.time()
         done = cb.run(jax.random.PRNGKey(0))
         dt = time.time() - t0

@@ -56,6 +56,10 @@ class LayerCtx:
     page_table: Optional[jax.Array] = None      # (B, n_logical_pages) int32
     active: Optional[jax.Array] = None          # (B,) bool: slots that commit
     n_valid: Optional[jax.Array] = None         # (B,) prefill_chunk: real toks
+    cond_lengths: Optional[jax.Array] = None    # (B,) valid conditioning toks
+    #   per-slot length of the cross-attention (image/audio) memory block;
+    #   0 = unconditioned slot (cross contributes exactly zero). None keeps
+    #   the legacy unmasked read (dense caches sized to the true length).
     commit: bool = True                         # False = denoise probe (no append)
     q_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
     kv_chunk: int = dataclasses.field(default_factory=lambda: runtime.attn_chunk())
@@ -98,6 +102,77 @@ def masked_state_update(new_state, old_state, active: Optional[jax.Array]):
     return jax.tree_util.tree_map(
         lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)),
                                n, o), new_state, old_state)
+
+
+def cross_cached_attn(p, x, ctx: LayerCtx, cache):
+    """Cross-attention over a PRECOMPUTED per-slot (k, v) conditioning block
+    (decode / prefill_chunk: the memory was projected once at prefill or at
+    engine admission — re-encoding per step would be wasted). One code path
+    for every conditioned family (VLM image blocks, encdec audio blocks).
+
+    With ``ctx.cond_lengths`` the block is attended under a per-slot valid
+    length (``cache.cross_attend``): the paged engine keeps one fixed-size
+    block per slot and admits RAGGED conditioning, including length-0
+    (unconditioned) slots in the same compiled program. Without it, the
+    legacy unmasked read serves dense caches sized to the true length."""
+    dims = ctx.dims()
+    q, _, _ = A.project_qkv(p, x, dims)
+    if ctx.cond_lengths is not None:
+        out = KVC.cross_attend(q, cache["k"].astype(x.dtype),
+                               cache["v"].astype(x.dtype), ctx.cond_lengths)
+    else:
+        out = A.attend(q, cache["k"].astype(x.dtype),
+                       cache["v"].astype(x.dtype), mask_mod=None,
+                       qpos=jnp.zeros((x.shape[1],), jnp.int32),
+                       kpos=jnp.arange(cache["k"].shape[1]), impl="naive")
+    out = out.reshape(*x.shape[:2], dims.n_heads * dims.head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def project_cross_kv(p, cond, dims):
+    """Project conditioning embeddings (B, Sk, d) into a cross block's
+    (k, v) — the admission-time half of ``cross_cached_attn``, the same math
+    ``attention.project_qkv`` applies to ``kv_x`` at dense prefill (the q
+    projection is skipped: queries come from the text stream per step)."""
+    B, Sk, _ = cond.shape
+    k = cond @ p["wk"].astype(cond.dtype)
+    v = cond @ p["wv"].astype(cond.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(cond.dtype)
+        v = v + p["bv"].astype(cond.dtype)
+    k = k.reshape(B, Sk, dims.n_kv_heads, dims.head_dim)
+    v = v.reshape(B, Sk, dims.n_kv_heads, dims.head_dim)
+    return k, v
+
+
+def write_cross_block(cross_cache, cross_params, cond, dims, block: int,
+                      slot=None):
+    """Write projected conditioning into per-slot cross blocks.
+
+    cross_cache: {"k", "v"} with leaves (n_units, num_slots, block, KV, hd);
+    cross_params: the stacked per-unit cross-attention params (leading
+    n_units axis); cond: (B, Sk, d), zero-padded here to the fixed ``block``
+    capacity so ONE compiled program serves every conditioning length.
+    ``slot=None`` requires B == num_slots and overwrites every slot's block;
+    an int32 ``slot`` (traced is fine) overwrites one slot's block, B == 1.
+    The full block is always written, so a recycled slot can never observe a
+    previous occupant's tail."""
+    Sk = cond.shape[1]
+    assert Sk <= block, f"conditioning length {Sk} exceeds block {block}"
+    if Sk < block:
+        cond = jnp.pad(cond, ((0, 0), (0, block - Sk), (0, 0)))
+    k, v = jax.vmap(lambda p: project_cross_kv(p, cond, dims))(cross_params)
+    k = k.astype(cross_cache["k"].dtype)       # (units, B, block, KV, hd)
+    v = v.astype(cross_cache["v"].dtype)
+    if slot is None:
+        assert k.shape == cross_cache["k"].shape, (
+            f"set_conditioning(slot=None) writes ALL slots: cond batch "
+            f"{cond.shape[0]} != num_slots {cross_cache['k'].shape[1]}")
+        return {"k": k, "v": v}
+    start = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)) + \
+        (jnp.zeros((), jnp.int32),) * 3
+    return {"k": jax.lax.dynamic_update_slice(cross_cache["k"], k, start),
+            "v": jax.lax.dynamic_update_slice(cross_cache["v"], v, start)}
 
 
 def default_mask(cfg: ModelConfig, bidirectional: bool = False):
@@ -191,16 +266,15 @@ def tlayer_apply(params, h, ctx: LayerCtx, *, cross: bool = False,
         # cross-attention to ctx.kv_x (image/audio memory); cache holds
         # precomputed (k, v) in decode/prefill reuse.
         if cache is not None and ctx.mode in ("decode", "prefill_chunk"):
-            q, _, _ = A.project_qkv(params["attn"], x, dims)
-            out = A.attend(q, cache["k"].astype(x.dtype),
-                           cache["v"].astype(x.dtype), mask_mod=None,
-                           qpos=jnp.zeros((x.shape[1],), jnp.int32),
-                           kpos=jnp.arange(cache["k"].shape[1]),
-                           impl="naive")
-            attn_out = out.reshape(*x.shape[:2], dims.n_heads * dims.head_dim) \
-                @ params["attn"]["wo"].astype(x.dtype)
+            attn_out = cross_cached_attn(params["attn"], x, ctx, cache)
             new_cache = cache
         else:
+            if ctx.kv_x is None:
+                raise ValueError(
+                    "cross-attention layer with no conditioning memory: "
+                    "pass aux_inputs (image_embs/audio_embs) on the dense "
+                    "train/prefill path — the serving engine admits "
+                    "unconditioned requests via cond_lengths=0 instead")
             attn_out, (k, v) = A.attention_fwd(
                 params["attn"], x, dims, positions=ctx.positions,
                 mask_mod=None, kv_x=ctx.kv_x,

@@ -73,14 +73,13 @@ def _self_attn(p, x, ctx, cache):
 def _cross_attn(p, x, ctx, cache):
     dims = ctx.dims()
     if cache is not None and ctx.mode in ("decode", "prefill_chunk"):
-        q, _, _ = A.project_qkv(p, x, dims)
-        out = A.attend(q, cache["k"].astype(x.dtype),
-                       cache["v"].astype(x.dtype), mask_mod=None,
-                       qpos=jnp.zeros((x.shape[1],), jnp.int32),
-                       kpos=jnp.arange(cache["k"].shape[1]), impl="naive")
-        out = out.reshape(*x.shape[:2], dims.n_heads * dims.head_dim) \
-            @ p["wo"].astype(x.dtype)
-        return out, cache
+        return C.cross_cached_attn(p, x, ctx, cache), cache
+    if ctx.kv_x is None:
+        raise ValueError(
+            "cross-attention layer with no conditioning memory: pass "
+            "aux_inputs (audio_embs) on the dense train/prefill path — the "
+            "serving engine admits unconditioned requests via "
+            "cond_lengths=0 instead")
     out, (k, v) = A.attention_fwd(
         p, x, dims, positions=ctx.positions, mask_mod=None, kv_x=ctx.kv_x,
         kv_positions=ctx.kv_positions, impl=ctx.impl)
@@ -291,3 +290,31 @@ class EncDecModel(BaseModel):
             one)
         return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
                                                  slot_mask, 1))
+
+    # ---- conditioning (stubbed mel/conv frontend + real encoder stack) ---
+    @property
+    def max_cond_tokens(self) -> int:
+        return self.cfg.n_audio_frames
+
+    def aux_input_specs(self, batch, dtype=jnp.bfloat16):
+        return {"audio_embs": jax.ShapeDtypeStruct(
+            (batch, self.cfg.n_audio_frames, self.cfg.d_model), dtype)}
+
+    @property
+    def cond_padding_safe(self) -> bool:
+        return False      # bidirectional encoder: padded frames leak in
+
+    def encode_conditioning(self, params, aux_inputs, ctx=None):
+        if not aux_inputs or "audio_embs" not in aux_inputs:
+            return None
+        if ctx is None:
+            ctx = C.LayerCtx(cfg=self.cfg, mode="train")
+        return self.encode(params, aux_inputs["audio_embs"], ctx)
+
+    def set_conditioning(self, params, cache, cond, slot=None):
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        cross = C.write_cross_block(cache["cross"], params["layers"]["xattn"],
+                                    cond, dims, cfg.n_audio_frames, slot)
+        return dict(cache, cross=cross)

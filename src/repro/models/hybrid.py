@@ -5,6 +5,13 @@ Unit = superblock of ``attn_every`` mamba layers + one application of the
 shared attention block. The shared block's weights are the same for every
 unit (closure constants under the unit scan) but each application keeps its
 own KV cache.
+
+Conditioning posture (serving): no aux inputs — the family inherits the
+base conditioning API (``max_cond_tokens == 0``), so
+``ContinuousBatcher.submit(..., aux_inputs=...)`` rejects conditioned
+requests loudly, and ``kv_carries_all_state`` stays False (the mamba
+recurrence is per-slot O(1) state, not paged), which keeps the shared-
+prefix page cache disabled for this family regardless of fingerprinting.
 """
 from __future__ import annotations
 

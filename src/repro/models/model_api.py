@@ -80,6 +80,57 @@ class BaseModel:
         cross blocks override."""
         return cache
 
+    # ---- conditioning (aux image/audio inputs) ---------------------------
+    # One code path for every consumer: the training losses and the dense
+    # dry-run shapes (via blocks.make_ctx), AND the batched serving engine
+    # (which encodes ONCE at admission and stores the projected result in
+    # the per-slot cross blocks) all go through these methods. Unconditioned
+    # families return None / raise, so callers can feature-test the model
+    # instead of switching on cfg.family.
+
+    @property
+    def max_cond_tokens(self) -> int:
+        """Capacity of the per-slot conditioning memory block (0 = the
+        family takes no aux conditioning inputs)."""
+        return 0
+
+    def aux_input_specs(self, batch: int, dtype=jnp.bfloat16):
+        """ShapeDtypeStruct stand-ins for the family's aux conditioning
+        inputs (no allocation), or None. The dry-run lowering and the
+        benchmarks build their placeholder inputs from this."""
+        return None
+
+    @property
+    def cond_padding_safe(self) -> bool:
+        """True when ``encode_conditioning`` is position-local, so a
+        zero-padded aux batch with per-row valid lengths encodes the valid
+        rows exactly as an unpadded one would (VLM passthrough). The audio
+        encoder is bidirectional — padding frames change every row — so it
+        overrides to False: ragged conditioning must be encoded per request
+        at its true length (the continuous batcher's admission path)."""
+        return True
+
+    def encode_conditioning(self, params, aux_inputs, ctx=None):
+        """Run the family's modality frontend over the aux inputs and return
+        the cross-attention memory (B, Sk, d), or None when the family is
+        unconditioned / no aux was supplied. VLM passes stubbed patch
+        embeddings through; audio runs the (bidirectional) encoder stack —
+        ONCE per request, never per decode step."""
+        return None
+
+    def set_conditioning(self, params, cache, cond, slot=None):
+        """Project encoded conditioning ``cond`` (B, Sk, d) through every
+        unit's cross-attention (k, v) and write it into the cache's
+        per-slot cross blocks (``cond`` is zero-padded to the block
+        capacity; the valid length travels separately as
+        ``LayerCtx.cond_lengths``). ``slot=None`` writes all slots
+        (B == num_slots, the static engine); an int32 ``slot`` writes one
+        slot's block (continuous-batching admission, B == 1). Works on both
+        the paged serving cache and the dense ``init_cache`` layout (the
+        dry-run reference path)."""
+        raise ValueError(
+            f"family {self.cfg.family!r} has no conditioning inputs")
+
     def cache_batch(self, cache) -> int:
         """Batch size of a cache pytree (leaf layout is family-specific)."""
         return jax.tree_util.tree_leaves(cache)[0].shape[1]

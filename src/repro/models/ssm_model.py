@@ -1,4 +1,11 @@
-"""xLSTM model: units of (sLSTM, mLSTM) block pairs with pre-norm residuals."""
+"""xLSTM model: units of (sLSTM, mLSTM) block pairs with pre-norm residuals.
+
+Conditioning posture (serving): no aux inputs — inherits the base
+conditioning API (``max_cond_tokens == 0``; conditioned ``submit`` raises),
+and ``kv_carries_all_state`` stays False (per-slot recurrent state is not
+paged), so the shared-prefix page cache remains disabled for this family
+regardless of conditioning fingerprints.
+"""
 from __future__ import annotations
 
 import jax

@@ -252,3 +252,26 @@ class VLMModel(BaseModel):
             one)
         return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
                                                  slot_mask, 1))
+
+    # ---- conditioning (stubbed vision frontend) --------------------------
+    @property
+    def max_cond_tokens(self) -> int:
+        return self.cfg.n_image_tokens
+
+    def aux_input_specs(self, batch, dtype=jnp.bfloat16):
+        return {"image_embs": jax.ShapeDtypeStruct(
+            (batch, self.cfg.n_image_tokens, self.cfg.d_model), dtype)}
+
+    def encode_conditioning(self, params, aux_inputs, ctx=None):
+        if not aux_inputs or "image_embs" not in aux_inputs:
+            return None
+        return aux_inputs["image_embs"]
+
+    def set_conditioning(self, params, cache, cond, slot=None):
+        cfg = self.cfg
+        dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          cfg.rope_theta)
+        cross = C.write_cross_block(cache["cross"],
+                                    params["units"]["cross"]["attn"], cond,
+                                    dims, cfg.n_image_tokens, slot)
+        return dict(cache, cross=cross)

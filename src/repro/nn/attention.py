@@ -298,12 +298,18 @@ def attention_fwd(params, x, dims: AttnDims, *, positions, mask_mod,
     ``positions`` drive the mask; ``rope_positions`` (default: positions) drive
     rotary phases — they differ for the DB clean||noisy concat sequence, where
     the noisy copy of token i sits at mask-position S+i but rope-position i.
+
+    Cross-attention (``kv_x`` given) applies NO rope to either side: the
+    conditioning memory has no relative positions w.r.t. the text stream,
+    and the serving decode path reads the precomputed (k, v) block with
+    un-roped queries — roping q only at prefill would make a token's cross
+    output depend on whether it was ingested or generated.
     """
     q, k, v = project_qkv(params, x, dims, kv_x)
     rpos = positions if rope_positions is None else rope_positions
-    q = apply_rope(q, rpos, dims.rope_theta)
     kpos = positions if kv_positions is None else kv_positions
-    if kv_x is None:   # self-attention: rope on k too
+    if kv_x is None:   # self-attention: rope on q and k
+        q = apply_rope(q, rpos, dims.rope_theta)
         k = apply_rope(k, rpos, dims.rope_theta)
     out = attend(q, k, v, mask_mod=mask_mod, qpos=positions, kpos=kpos,
                  impl=impl, q_chunk=q_chunk, kv_chunk=kv_chunk)

@@ -186,6 +186,65 @@ def dense_to_paged(k: jax.Array, v: jax.Array, page_size: int
 
 
 # ---------------------------------------------------------------------------
+# Conditioning memory (fixed per-slot cross-attention blocks)
+# ---------------------------------------------------------------------------
+
+def cross_attend(q, k, v, cond_lengths):
+    """Cross-attention over a fixed per-slot conditioning block with a
+    per-slot VALID length — the serving counterpart of the unmasked
+    ``attention.attend(mask_mod=None)`` cross path.
+
+    q: (B, S, H, hd) un-roped queries; k/v: (B, Sk, KV, hd) the slot's
+    conditioning memory (image patches / encoded audio frames), zero-padded
+    past ``cond_lengths[b]``. Padding must be MASKED, not attended: attending
+    zero keys would dilute the softmax. ``cond_lengths[b] == 0`` means the
+    slot is UNCONDITIONED — the sum of weights is zero and the output is
+    exactly 0 (no NaN), which is what an absent cross term contributes.
+
+    Returns (B, S, H, hd) in q.dtype (fp32 softmax inside).
+    """
+    B, S, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(Sk)[None, :] < cond_lengths[:, None]        # (B, Sk)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))   # all-masked rows -> p ~ 0
+    p = jnp.where(valid[:, None, None, None, :], p, 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p / l, v.astype(jnp.float32))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd).astype(q.dtype)
+
+
+def conditioning_fingerprint(aux_inputs) -> int:
+    """Content hash of a request's aux conditioning inputs (image/audio
+    embeddings), folded into ``PrefixPageCache`` keys: identical prompt text
+    under DIFFERENT conditioning must never share prefix pages (every
+    token's hidden stream — and therefore its paged self-attention K/V —
+    passes through cross-attention to this memory), while identical text
+    AND identical conditioning shares exactly as unconditioned text does.
+
+    Host-side (numpy), deterministic across processes. Returns 0 for
+    unconditioned requests (``None`` / empty dict) — the unconditioned trie
+    root, so text-only serving keeps today's hit rates."""
+    import hashlib
+
+    import numpy as np
+    if not aux_inputs:
+        return 0
+    h = hashlib.sha256()
+    for key in sorted(aux_inputs):
+        arr = np.ascontiguousarray(np.asarray(aux_inputs[key], np.float32))
+        h.update(key.encode())
+        h.update(str(arr.shape).encode())
+        h.update(arr.tobytes())
+    return int.from_bytes(h.digest()[:8], "big") or 1
+
+
+# ---------------------------------------------------------------------------
 # Attend over the pool (committed tokens < lengths[b]) + the token's own k/v
 # ---------------------------------------------------------------------------
 
@@ -378,28 +437,45 @@ class PrefixPageCache:
     its count drops to zero. Pages with refcount > 1 are READ-ONLY for any
     slot — a slot about to write into one gets a private copy first
     (``copy_pool_pages``), which is what makes the sharing copy-on-write.
+
+    CONDITIONING-AWARE: every lookup/registration carries the request's
+    conditioning fingerprint (``conditioning_fingerprint`` — a content hash
+    of its aux image/audio embeddings; 0 = unconditioned). Each fingerprint
+    owns its own trie root, so identical prompt text under different
+    conditioning NEVER shares pages (the page content depends on the
+    conditioning through cross-attention), while requests with identical
+    text AND identical conditioning — and all unconditioned requests —
+    share exactly as before.
     """
 
     def __init__(self, page_size: int):
         self.page_size = page_size
-        self.root = _PrefixNode(page=-1)
+        self.roots: Dict[int, _PrefixNode] = {}
         self.hits = 0            # lookups that shared at least one page
         self.tokens_shared = 0   # prompt tokens served from shared pages
 
+    def _root(self, cond_fp: int) -> _PrefixNode:
+        if cond_fp not in self.roots:
+            self.roots[cond_fp] = _PrefixNode(page=-1)
+        return self.roots[cond_fp]
+
     # ---- lookup ------------------------------------------------------
-    def match(self, tokens) -> PrefixMatch:
-        """Longest shared prefix of ``tokens`` (np int array). Never matches
-        the WHOLE prompt's last page as full+exact unless the prompt is
-        page-aligned; a partial tail match covers at most page_size-1
-        tokens of the next page.
+    def match(self, tokens, cond_fp: int = 0) -> PrefixMatch:
+        """Longest shared prefix of ``tokens`` (np int array) under the
+        request's conditioning fingerprint. Never matches the WHOLE prompt's
+        last page as full+exact unless the prompt is page-aligned; a partial
+        tail match covers at most page_size-1 tokens of the next page.
 
         Pure lookup — no refcounts are taken and no statistics move (the
         scheduler may defer the admission); ``hits`` / ``tokens_shared`` are
         updated by the caller when a match is actually admitted."""
         import numpy as np
+        node = self.roots.get(cond_fp)   # pure: never create roots on lookup
+        if node is None:
+            return PrefixMatch(pages=[], n_tokens=0, tail_tokens=0)
         tokens = np.asarray(tokens)
         psz = self.page_size
-        node, pages, n = self.root, [], 0
+        pages, n = [], 0
         while n + psz <= tokens.size:
             key = tuple(int(t) for t in tokens[n:n + psz])
             child = node.children.get(key)
@@ -422,16 +498,18 @@ class PrefixPageCache:
         return PrefixMatch(pages=pages, n_tokens=n, tail_tokens=tail_tokens)
 
     # ---- registration ------------------------------------------------
-    def insert(self, tokens, pages: List[int], refcount: Dict[int, int]):
-        """Register a freshly-prefilled prompt's pages. ``pages[i]`` backs
-        tokens [i*psz, (i+1)*psz). Full pages extend the trie; a non-empty
-        partial last page becomes a tail candidate. Every NEWLY registered
-        page gains one cache-held ref in ``refcount``. Pages already in the
-        trie (the request itself was a cache hit) are left alone."""
+    def insert(self, tokens, pages: List[int], refcount: Dict[int, int],
+               cond_fp: int = 0):
+        """Register a freshly-prefilled prompt's pages under its conditioning
+        fingerprint. ``pages[i]`` backs tokens [i*psz, (i+1)*psz). Full pages
+        extend the trie; a non-empty partial last page becomes a tail
+        candidate. Every NEWLY registered page gains one cache-held ref in
+        ``refcount``. Pages already in the trie (the request itself was a
+        cache hit) are left alone."""
         import numpy as np
         tokens = np.asarray(tokens)
         psz = self.page_size
-        node, n, i = self.root, 0, 0
+        node, n, i = self._root(cond_fp), 0, 0
         while n + psz <= tokens.size:
             key = tuple(int(t) for t in tokens[n:n + psz])
             child = node.children.get(key)
@@ -451,8 +529,9 @@ class PrefixPageCache:
     def evict(self, refcount: Dict[int, int], free_pages: List[int],
               need: int) -> int:
         """Drop cache-held refs until ``need`` pages are free (deepest trie
-        nodes and tails first — prefixes stay useful longest). Pages whose
-        count hits zero go back on the free list. Returns pages freed."""
+        nodes and tails first — prefixes stay useful longest; conditioning
+        tries are walked in insertion order). Pages whose count hits zero go
+        back on the free list. Returns pages freed."""
         freed = 0
 
         def drop(page):
@@ -477,5 +556,11 @@ class PrefixPageCache:
                 page, _ = node.tails.pop()
                 drop(page)
 
-        walk(self.root)
+        for fp in list(self.roots):
+            if len(free_pages) >= need:
+                break
+            root = self.roots[fp]
+            walk(root)
+            if not root.children and not root.tails:
+                del self.roots[fp]
         return freed

@@ -192,7 +192,8 @@ def test_paged_commit_matches_prefill(dbm_params):
     table = KVC.identity_page_table(B, pps)
     plens = jnp.full((B,), S0, jnp.int32)
     kv, lengths = eng._prefill(params, kv, table, jnp.zeros((B,), jnp.int32),
-                               prompts.astype(jnp.int32), plens)
+                               prompts.astype(jnp.int32), plens,
+                               jnp.zeros((B,), jnp.int32))
     assert np.all(np.asarray(lengths) == S0)
     _, pre = dbm.prefill(params, prompts)
     # gather the paged pool back into logical (units, B, S, KV, hd)

@@ -435,6 +435,145 @@ def test_prefix_cache_eviction_never_frees_matched_pages(dbm_params):
     assert done.out == cb_ref.run(jax.random.PRNGKey(2))[0].out
 
 
+# ---------------------------------------------------------------------------
+# conditioned requests: aux_inputs through the batched engine
+# ---------------------------------------------------------------------------
+
+TINY_VLM = ModelConfig(name="tiny-prefill-vlm", family="vlm", n_layers=4,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab_size=32, cross_attn_every=2, n_image_tokens=4)
+TINY_AUDIO = ModelConfig(name="tiny-prefill-audio", family="audio",
+                         n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+                         d_ff=128, vocab_size=32, n_encoder_layers=2,
+                         n_audio_frames=6, rope_theta=0.0, norm="layernorm",
+                         mlp="gelu", is_encoder_decoder=True)
+
+
+def _conditioned_setup(family):
+    """(dbm, params, prompt, auxA, auxB): a tiny conditioned model whose
+    cross-attention actually moves the logits (the VLM cross gate is
+    tanh(0)=0 at init, so it is opened explicitly), plus two distinct
+    conditioning inputs strong enough to flip greedy argmax."""
+    rs = np.random.RandomState(0)
+    if family == "vlm":
+        dbm = make_dbm(TINY_VLM, blocks=2)
+        params = dbm.init(jax.random.PRNGKey(0))
+        params["units"]["cross"]["xgate"] = 2.0 * jnp.ones_like(
+            params["units"]["cross"]["xgate"])
+        key, Sk = "image_embs", TINY_VLM.n_image_tokens
+    else:
+        dbm = make_dbm(TINY_AUDIO, blocks=2)
+        params = dbm.init(jax.random.PRNGKey(0))
+        key, Sk = "audio_embs", TINY_AUDIO.n_audio_frames
+    prompt = rs.randint(0, 32, size=7)
+    auxA = {key: 4 * rs.randn(Sk, 64).astype(np.float32)}
+    auxB = {key: 4 * rs.randn(Sk, 64).astype(np.float32)}
+    return dbm, params, prompt, auxA, auxB
+
+
+def _dryrun_reference(dbm, params, prompt, max_new, aux, rng):
+    """The single-request dry-run path: DENSE caches, conditioning through
+    the model frontend, one eager serve_step per generated token — the
+    numerical ground truth the batched engine must reproduce exactly."""
+    model = dbm.model
+    S0 = prompt.size
+    cache = model.init_cache(1, S0 + max_new, jnp.float32)
+    cond = model.encode_conditioning(
+        params, {k: jnp.asarray(v)[None] for k, v in aux.items()})
+    cache = model.set_conditioning(params, cache, cond)
+    clens = jnp.full((1,), cond.shape[1], jnp.int32)
+    ctx = dbm.make_ctx(params, 1, "decode", None, None, cond_lengths=clens)
+    ctx.positions = None
+    for t in range(S0):
+        cache = dbm.commit_token(params, cache, t,
+                                 jnp.asarray(prompt[t]).reshape(1, 1), ctx)
+    toks = []
+    for t in range(max_new):
+        rng, rs_ = jax.random.split(rng)
+        tok, cache = dbm.serve_step(params, cache, S0 + t, rs_,
+                                    cond_lengths=clens)
+        toks.append(int(tok[0]))
+    return toks
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", ["vlm", "audio"])
+def test_conditioned_engine_matches_dryrun(family):
+    """Greedy parity for CONDITIONED requests: the static scan-fused engine
+    AND the continuous batcher (prefix cache ON) must be bit-identical to
+    the single-request dense dry-run path — same frontend encode, same
+    cross reads, same rng stream."""
+    dbm, params, prompt, auxA, _ = _conditioned_setup(family)
+    ref = _dryrun_reference(dbm, params, prompt, 6, auxA,
+                            jax.random.PRNGKey(7))
+    out = generate(dbm, params, jnp.asarray(prompt)[None], 6,
+                   rng=jax.random.PRNGKey(7), precision="fp32",
+                   aux_inputs={k: jnp.asarray(v)[None]
+                               for k, v in auxA.items()})
+    assert [int(t) for t in np.asarray(out)[0, 7:]] == ref
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=8,
+                           max_len=16, seg_len=4, page_size=4, chunk_size=4,
+                           precision="fp32", prefix_cache=True)
+    cb.submit(prompt, 6, aux_inputs=auxA)
+    assert cb.run(jax.random.PRNGKey(7))[0].out == ref
+
+
+def test_conditioned_prefix_cache_differential():
+    """Identical prompt TEXT under different conditioning: zero shared
+    prefix pages and different greedy outputs. Identical text + identical
+    conditioning fingerprint: shares pages and reproduces the output."""
+    dbm, params, prompt, auxA, auxB = _conditioned_setup("vlm")
+    cb = ContinuousBatcher(dbm, params, num_slots=2, max_prompt=8,
+                           max_len=16, seg_len=4, page_size=4, chunk_size=4,
+                           precision="fp32", prefix_cache=True)
+    cb.submit(prompt, 6, aux_inputs=auxA)
+    d1 = cb.run(jax.random.PRNGKey(3))[0]
+    cb.submit(prompt, 6, aux_inputs=auxB)           # same text, other image
+    d2 = cb.run(jax.random.PRNGKey(3))[0]
+    assert d2.shared_tokens == 0                    # never shares across fp
+    assert d2.out != d1.out                         # conditioning matters
+    cb.submit(prompt, 6, aux_inputs=auxA)           # same text, same image
+    d3 = cb.run(jax.random.PRNGKey(3))[0]
+    assert d3.shared_tokens > 0                     # same fp shares
+    assert d3.out == d1.out
+    # unconditioned text never matches a conditioned trie
+    cb.submit(prompt, 6)
+    d4 = cb.run(jax.random.PRNGKey(3))[0]
+    assert d4.shared_tokens == 0
+
+
+def test_conditioned_and_unconditioned_slots_mix():
+    """Conditioned and unconditioned requests schedule together in one
+    compiled program (cond_lengths masks per slot); the run is
+    deterministic and every request completes."""
+    dbm, params, prompt, auxA, auxB = _conditioned_setup("vlm")
+    rs = np.random.RandomState(5)
+    prompts = [rs.randint(0, 32, size=rs.randint(4, 8)) for _ in range(4)]
+    auxes = [auxA, None, auxB, None]
+
+    def serve():
+        cb = ContinuousBatcher(dbm, params, num_slots=2, max_prompt=8,
+                               max_len=16, seg_len=4, page_size=4,
+                               chunk_size=4, precision="fp32")
+        for p, a in zip(prompts, auxes):
+            cb.submit(p, 5, aux_inputs=a)
+        return [r.out for r in cb.run(jax.random.PRNGKey(11))]
+
+    out1 = serve()
+    assert serve() == out1
+    assert all(len(o) == 5 for o in out1)
+    assert all(0 <= t < 32 for o in out1 for t in o)
+
+
+def test_submit_rejects_aux_on_unconditioned_family(dbm_params):
+    dbm, params = dbm_params
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=8,
+                           max_len=16, seg_len=4, page_size=4)
+    with pytest.raises(ValueError, match="no aux"):
+        cb.submit(np.arange(4), 2,
+                  aux_inputs={"image_embs": np.zeros((4, 64), np.float32)})
+
+
 def test_prefix_cache_eviction_frees_pages(dbm_params):
     """Cache-retained pages must be evictable under pool pressure: fill the
     cache with disjoint prompts, then admit one more — the batcher evicts

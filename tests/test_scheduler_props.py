@@ -1,0 +1,352 @@
+"""Property-test suite for the continuous-batching scheduler and the
+conditioning-aware shared-prefix page cache.
+
+Randomized admit / decode / retire traces drive a REAL ``ContinuousBatcher``
+(real page allocator, prefix trie, copy-on-write, slot recycling, admission-
+time conditioning writes) while the two heavy jitted dispatch programs are
+replaced by numpy fakes with identical scheduling semantics — so hundreds of
+traces run in seconds and every dispatch can assert write-safety on the host.
+
+Invariants checked on every trace:
+
+  * page conservation — free pages and referenced pages partition the pool
+    exactly (nothing leaks, nothing is double-owned, the trash page is never
+    allocated);
+  * refcount accounting — ``page_refs`` equals (slot-mapped pages) +
+    (prefix-trie-held pages), page for page;
+  * copy-on-write safety — a dispatch only ever writes pages whose refcount
+    is exactly 1 and which the writing slot owns (a write into a shared page
+    would corrupt every other reader);
+  * slot recycling — recycled slots never leak the previous occupant's
+    conditioning: unconditioned slots always see an all-zero cross block
+    (the INIT state), conditioned slots a freshly written one;
+  * no cross-conditioning sharing — a request only ever shares prefix pages
+    registered under ITS OWN conditioning fingerprint (identical text under
+    a different image/audio input shares nothing).
+
+The seeded driver runs >= 200 traces deterministically (no hypothesis
+needed); when hypothesis is installed (the dev extra — CI fast lane), the
+same trace property is additionally explored by ``@given``.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+import jax
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core import DiffusionBlocksModel
+from repro.launch.serve import ContinuousBatcher
+from repro.nn import cache as KVC
+
+TINY_VLM = ModelConfig(name="tiny-sched-vlm", family="vlm", n_layers=4,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=32, cross_attn_every=2, n_image_tokens=4)
+
+PSZ = 4          # page size
+CHUNK = 4
+MAX_PROMPT = 16
+MAX_NEW = 6
+MAX_LEN = MAX_PROMPT + MAX_NEW
+
+
+@pytest.fixture(scope="module")
+def dbm_params():
+    dbm = DiffusionBlocksModel(TINY_VLM, DBConfig(num_blocks=2,
+                                                  overlap_gamma=0.1))
+    return dbm, dbm.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Fake dispatch programs: numpy semantics of the jitted scan programs, plus
+# host-side write-safety assertions against the batcher's page accounting.
+# ---------------------------------------------------------------------------
+
+class FakeDispatch:
+    """Replaces ``eng._prefill_chunk1`` / ``eng._serve`` on one batcher."""
+
+    def __init__(self, cb: ContinuousBatcher):
+        self.cb = cb
+
+    def _assert_writable(self, slot: int, pos: int):
+        cb = self.cb
+        logical = pos // PSZ
+        phys = int(cb.table[slot, logical])
+        assert phys != KVC.TRASH_PAGE, \
+            f"slot {slot} writes pos {pos} into the trash page"
+        assert cb.page_refs.get(phys, 0) == 1, \
+            f"CoW violation: slot {slot} writes pos {pos} into page {phys} " \
+            f"with refcount {cb.page_refs.get(phys, 0)}"
+        req = cb.slot_req[slot]
+        assert req is not None and req.pages[logical] == phys, \
+            f"slot {slot} writes page {phys} it does not own"
+
+    def prefill_chunk1(self, params, kv, table, lengths, prompt_buf, plens,
+                       cond_lengths):
+        lengths = np.array(lengths)
+        plens = np.array(plens)
+        adv = np.clip(plens - lengths, 0, CHUNK)
+        for s in range(lengths.shape[0]):
+            for p in range(int(lengths[s]), int(lengths[s] + adv[s])):
+                self._assert_writable(s, p)
+        return kv, lengths + adv
+
+    def serve(self, params, kv, table, lengths, prompt_buf, plens, stop_at,
+              active, rng, cond_lengths, n):
+        lengths = np.array(lengths)
+        stop_at, active = np.array(stop_at), np.array(active)
+        plens = np.array(plens)
+        B = lengths.shape[0]
+        emitted = np.full((B, n), -1, np.int64)
+        for t in range(n):
+            act = active & (lengths < stop_at)
+            for s in np.nonzero(act)[0]:
+                self._assert_writable(int(s), int(lengths[s]))
+                if lengths[s] >= plens[s]:
+                    emitted[s, t] = 1          # dummy generated token
+            lengths = lengths + act.astype(lengths.dtype)
+        return kv, lengths, rng, emitted
+
+
+def make_batcher(dbm, params, *, num_slots, total_pages=None,
+                 prefix_cache=True):
+    cb = ContinuousBatcher(dbm, params, num_slots=num_slots, page_size=PSZ,
+                           max_prompt=MAX_PROMPT, max_len=MAX_LEN,
+                           seg_len=3, chunk_size=CHUNK, precision="fp32",
+                           prefix_cache=prefix_cache,
+                           total_pages=total_pages)
+    fake = FakeDispatch(cb)
+    cb.eng = type(cb.eng).__new__(type(cb.eng))        # detached shell
+    cb.eng.__dict__.update(dispatches=0, prefill_steps=0, pol=None,
+                           _prefill_chunk1=fake.prefill_chunk1,
+                           _serve=fake.serve)
+    cb.chunked = True
+    cb.chunk_size = CHUNK
+    return cb
+
+
+# ---------------------------------------------------------------------------
+# Invariant checks (host-side, after every run and at every admission)
+# ---------------------------------------------------------------------------
+
+def walk_trie_pages(prefix):
+    """Every cache-held page ref, per conditioning fingerprint root."""
+    held = {}
+
+    def walk(node):
+        for child in node.children.values():
+            held[child.page] = held.get(child.page, 0) + 1
+            walk(child)
+        for page, _ in node.tails:
+            held[page] = held.get(page, 0) + 1
+
+    for root in prefix.roots.values():
+        walk(root)
+    return held
+
+
+def check_invariants(cb: ContinuousBatcher):
+    total = cb.total_pages
+    free = list(cb.free_pages)
+    refs = dict(cb.page_refs)
+    # -- conservation & disjointness over the pool [1, total)
+    assert KVC.TRASH_PAGE not in free and KVC.TRASH_PAGE not in refs
+    assert len(set(free)) == len(free), "free list holds duplicates"
+    assert not (set(free) & set(refs)), "page both free and referenced"
+    assert set(free) | set(refs) == set(range(1, total)), \
+        "pages leaked or invented"
+    assert all(r > 0 for r in refs.values())
+    # -- refcounts decompose exactly into slot maps + trie holds
+    expected = walk_trie_pages(cb.prefix) if cb.prefix is not None else {}
+    for s in range(cb.num_slots):
+        req = cb.slot_req[s]
+        if req is None:
+            continue
+        assert cb.active[s]
+        for p in req.pages:
+            expected[p] = expected.get(p, 0) + 1
+    assert refs == expected, f"refcounts {refs} != slots+trie {expected}"
+    # -- slot bookkeeping
+    for s in range(cb.num_slots):
+        if not cb.active[s]:
+            assert cb.slot_req[s] is None
+            assert cb.cond_lengths[s] == 0
+
+
+def check_conditioning_state(cb: ContinuousBatcher):
+    """Recycled-slot hygiene: an UNCONDITIONED active slot must see the INIT
+    (all-zero) cross block — never a previous occupant's image."""
+    ck = np.asarray(cb.kv["cross"]["k"], np.float32)
+    cv = np.asarray(cb.kv["cross"]["v"], np.float32)
+    for s in range(cb.num_slots):
+        if cb.active[s] and cb.cond_lengths[s] == 0:
+            assert np.all(ck[:, s] == 0) and np.all(cv[:, s] == 0), \
+                f"slot {s}: unconditioned but cross block is non-zero"
+        if cb.active[s] and cb.cond_lengths[s] > 0:
+            assert np.any(ck[:, s, :cb.cond_lengths[s]] != 0), \
+                f"slot {s}: conditioned but cross block is empty"
+
+
+# ---------------------------------------------------------------------------
+# Trace driver
+# ---------------------------------------------------------------------------
+
+def run_trace(dbm, params, seed: int):
+    rs = np.random.RandomState(seed)
+    num_slots = int(rs.randint(1, 4))
+    # modest pool so eviction paths run; floor covers one max request + CoW
+    pps = KVC.pages_for(MAX_LEN, PSZ)
+    total_pages = 1 + int(rs.randint(pps + 2, num_slots * pps + 4))
+    cb = make_batcher(dbm, params, num_slots=num_slots,
+                      total_pages=total_pages)
+
+    # conditioning pool: collisions on purpose (same fp shares, different
+    # fp must not), plus unconditioned requests
+    cond_pool = [None,
+                 rs.randn(4, TINY_VLM.d_model).astype(np.float32),
+                 rs.randn(4, TINY_VLM.d_model).astype(np.float32)]
+    # prompt pool: heavy shared prefixes
+    prefixes = [rs.randint(0, 32, size=int(rs.randint(4, 13)))
+                for _ in range(3)]
+
+    orig_admit = cb._admit
+
+    def admit_checked():
+        n = orig_admit()
+        if n:
+            check_invariants(cb)
+            check_conditioning_state(cb)
+        return n
+
+    cb._admit = admit_checked
+
+    submitted = []              # (prompt, cond_idx, req)
+    for _ in range(int(rs.randint(1, 4))):      # submission waves
+        for _ in range(int(rs.randint(1, 5))):
+            pre = prefixes[rs.randint(len(prefixes))]
+            tail = rs.randint(0, 32, size=int(rs.randint(0, 5)))
+            prompt = np.concatenate([pre, tail])[:MAX_PROMPT]
+            ci = int(rs.randint(len(cond_pool)))
+            aux = (None if cond_pool[ci] is None
+                   else {"image_embs": cond_pool[ci]})
+            max_new = int(rs.randint(1, MAX_NEW + 1))
+            rid = cb.submit(prompt, max_new, aux_inputs=aux)
+            req = cb.queue[-1]
+            assert req.rid == rid
+            submitted.append((prompt, ci, req))
+        try:
+            done = cb.run(jax.random.PRNGKey(seed))
+        except RuntimeError as e:               # pool too small to admit
+            assert "page pool" in str(e)
+            cb.queue.clear()
+        check_invariants(cb)
+
+    # -- no cross-conditioning prefix sharing: a request may share at most
+    # the longest common prefix it has with OTHER requests under the SAME
+    # conditioning fingerprint; with no same-fp sibling it shares nothing.
+    def common_prefix(a, b):
+        m = min(a.size, b.size)
+        neq = np.nonzero(a[:m] != b[:m])[0]
+        return int(neq[0]) if neq.size else m
+
+    for i, (prompt, ci, req) in enumerate(submitted):
+        if req.shared_tokens == 0:
+            continue
+        same_fp_cp = [common_prefix(prompt, p2)
+                      for j, (p2, cj, _) in enumerate(submitted)
+                      if j != i and cj == ci]
+        bound = max(same_fp_cp, default=0)
+        assert req.shared_tokens <= bound, \
+            f"request shared {req.shared_tokens} tokens but its longest " \
+            f"same-conditioning common prefix is {bound} (cross-" \
+            f"conditioning sharing)"
+    return cb
+
+
+# ---------------------------------------------------------------------------
+# Seeded driver: >= 200 deterministic randomized traces (no hypothesis)
+# ---------------------------------------------------------------------------
+
+N_TRACES = 200
+
+
+def test_scheduler_traces_seeded(dbm_params):
+    dbm, params = dbm_params
+    for seed in range(N_TRACES):
+        run_trace(dbm, params, seed)
+
+
+def test_retire_returns_all_pages_without_prefix_cache(dbm_params):
+    """Without the prefix cache no refs survive retirement: every page goes
+    back to the free list after each trace drains."""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(42)
+    cb = make_batcher(dbm, params, num_slots=2, prefix_cache=False)
+    for _ in range(6):
+        cb.submit(rs.randint(0, 32, size=int(rs.randint(3, MAX_PROMPT))),
+                  int(rs.randint(1, MAX_NEW)),
+                  aux_inputs={"image_embs":
+                              rs.randn(4, TINY_VLM.d_model).astype(np.float32)})
+    cb.run(jax.random.PRNGKey(0))
+    assert not cb.page_refs
+    assert sorted(cb.free_pages) == list(range(1, cb.total_pages))
+    assert not any(cb.active)
+
+
+def test_prefix_cache_fingerprint_roots():
+    """One trie root per conditioning fingerprint: lookups are pure (no
+    roots created), eviction drains roots in insertion order and prunes
+    empty ones, and chains under different fingerprints never alias."""
+    pc = KVC.PrefixPageCache(page_size=4)
+    refs, free = {}, []
+    tok = np.arange(16)
+    pc.insert(tok, [1, 2, 3, 4], refs, cond_fp=111)
+    pc.insert(tok, [5, 6, 7, 8], refs, cond_fp=222)
+    assert pc.match(tok, 111).pages == [1, 2, 3, 4]
+    assert pc.match(tok, 222).pages == [5, 6, 7, 8]
+    assert pc.match(tok, 333).pages == [] and 333 not in pc.roots
+    assert refs == {p: 1 for p in range(1, 9)}
+    assert pc.evict(refs, free, need=4) == 4
+    assert sorted(free) == [1, 2, 3, 4]          # first root drained ...
+    assert 111 not in pc.roots and 222 in pc.roots
+    assert pc.match(tok, 222).pages == [5, 6, 7, 8]   # ... second intact
+    pc.evict(refs, free, need=8)
+    assert not refs and not pc.roots
+    # partial tails live under their fingerprint too
+    tok2 = np.arange(10)
+    pc.insert(tok2, [1, 2, 3], {}, cond_fp=7)
+    m = pc.match(tok2, 7)
+    assert (m.pages, m.n_tokens, m.tail_tokens) == ([1, 2, 3], 10, 2)
+    assert pc.match(tok2, 8).n_tokens == 0
+
+
+def test_fingerprint_distinguishes_content():
+    a = {"image_embs": np.ones((4, 8), np.float32)}
+    b = {"image_embs": np.zeros((4, 8), np.float32)}
+    c = {"image_embs": np.ones((4, 8), np.float32)}
+    assert KVC.conditioning_fingerprint(a) == KVC.conditioning_fingerprint(c)
+    assert KVC.conditioning_fingerprint(a) != KVC.conditioning_fingerprint(b)
+    assert KVC.conditioning_fingerprint(None) == 0
+    assert KVC.conditioning_fingerprint({}) == 0
+    # shape-sensitive even when bytes agree
+    d = {"image_embs": np.ones((8, 4), np.float32)}
+    assert KVC.conditioning_fingerprint(a) != KVC.conditioning_fingerprint(d)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis exploration of the same property (dev extra / CI)
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(min_value=N_TRACES, max_value=10 * N_TRACES))
+    def test_scheduler_traces_hypothesis(dbm_params, seed):
+        dbm, params = dbm_params
+        run_trace(dbm, params, seed)
