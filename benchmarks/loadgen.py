@@ -1,0 +1,223 @@
+"""Traffic-replay load generator for the serving stack.
+
+Synthesizes realistic request traces and replays them against the engine —
+either IN-PROCESS (a submitter thread feeding ``ContinuousBatcher.step()``
+directly, isolating scheduler capacity from HTTP overhead) or over HTTP/SSE
+through ``repro.launch.server`` (client-observed latency). Traces model the
+pathologies a static benchmark misses:
+
+  arrivals        Poisson (exponential inter-arrival gaps at ``rate`` req/s)
+                  or BURSTY: geometric-size bursts (mean ``burst_mean``)
+                  arriving as a Poisson process at ``rate / burst_mean``
+                  bursts/s — same mean offered load, heavy short-term
+                  overload.
+  lengths         heavy-tailed prompt and output lengths (clipped lognormal)
+                  — a few long requests among many short ones.
+  populations     a small pool of shared system prompts prepended to a
+                  fraction of requests (exercises the prefix cache under
+                  load), and mixed conditioned/unconditioned requests drawn
+                  from a named conditioning pool.
+
+Metrics per request: TTFT (submit -> first streamed token) and TPOT (mean
+inter-token time after the first delivered segment), summarized as p50/p99
+versus offered load. ``find_knee`` locates the saturation knee: the highest
+offered load whose p99 TTFT stays within ``factor``x the lightest-load p99.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Trace synthesis
+# ---------------------------------------------------------------------------
+
+def _arrival_times(rs, n: int, arrival: str, rate: float,
+                   burst_mean: float) -> np.ndarray:
+    if arrival == "poisson":
+        return np.cumsum(rs.exponential(1.0 / rate, size=n))
+    if arrival == "bursty":
+        t: List[float] = []
+        now = 0.0
+        while len(t) < n:
+            now += rs.exponential(burst_mean / rate)   # burst-level process
+            k = int(rs.geometric(1.0 / burst_mean))    # burst size, mean b
+            t.extend([now] * min(k, n - len(t)))
+        return np.asarray(t)
+    raise ValueError(f"arrival must be 'poisson' or 'bursty', got {arrival!r}")
+
+
+def synth_workload(rs, n: int, *, arrival: str = "poisson", rate: float = 4.0,
+                   burst_mean: float = 4.0, vocab: int = 32,
+                   max_prompt: int = 24, max_new_cap: int = 12,
+                   prompt_med: float = 8.0, prompt_sigma: float = 0.6,
+                   new_med: float = 6.0, new_sigma: float = 0.5,
+                   sys_population: int = 3, sys_frac: float = 0.5,
+                   sys_len: int = 8, cond_names=(), cond_frac: float = 0.0
+                   ) -> List[Dict]:
+    """One trace: n items of ``{"t", "prompt", "max_new", "aux"}`` with
+    arrival offsets in seconds from trace start."""
+    t = _arrival_times(rs, n, arrival, rate, burst_mean)
+    sys_prompts = [rs.randint(0, vocab, size=sys_len)
+                   for _ in range(sys_population)]
+    items = []
+    for i in range(n):
+        plen = int(np.clip(rs.lognormal(np.log(prompt_med), prompt_sigma),
+                           1, max_prompt))
+        if sys_population and rs.rand() < sys_frac:
+            sp = sys_prompts[int(rs.randint(sys_population))]
+            tail = rs.randint(0, vocab, size=max(1, plen))
+            prompt = np.concatenate([sp, tail])[:max_prompt]
+        else:
+            prompt = rs.randint(0, vocab, size=plen)
+        max_new = int(np.clip(rs.lognormal(np.log(new_med), new_sigma),
+                              1, max_new_cap))
+        aux = (cond_names[int(rs.randint(len(cond_names)))]
+               if len(cond_names) and rs.rand() < cond_frac else None)
+        items.append({"t": float(t[i]), "prompt": prompt,
+                      "max_new": max_new, "aux": aux})
+    return items
+
+
+def offered_rate(items: List[Dict]) -> float:
+    """Mean offered load of a trace in requests/s."""
+    span = max(it["t"] for it in items)
+    return len(items) / span if span > 0 else float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Replay: in-process (batcher.step loop) and HTTP/SSE
+# ---------------------------------------------------------------------------
+
+def replay_inproc(cb, items: List[Dict], *, aux_registry=None, rng=None,
+                  speed: float = 1.0) -> List[Dict]:
+    """Drive one ``ContinuousBatcher`` with a submitter thread sleeping to
+    the trace's arrival times while this thread runs the ``step()`` loop.
+    Token timestamps come from the batcher's ``token_cb`` (segment
+    granularity — exactly what an SSE consumer would observe, minus the
+    socket). Returns one record per request."""
+    aux_registry = aux_registry or {}
+    recs: Dict[int, Dict] = {}
+    lock = threading.Lock()
+
+    def rec(rid: int) -> Dict:
+        with lock:
+            return recs.setdefault(rid, {"times": [], "counts": []})
+
+    def on_tokens(req, toks):
+        r = rec(req.rid)
+        r["times"].append(time.time())
+        r["counts"].append(len(toks))
+
+    prev_cb = cb.token_cb
+    cb.token_cb = on_tokens
+    t0 = time.time()
+
+    def submitter():
+        for it in items:
+            dt = t0 + it["t"] / speed - time.time()
+            if dt > 0:
+                time.sleep(dt)
+            aux = aux_registry.get(it["aux"]) if it.get("aux") else None
+            cb.submit(np.asarray(it["prompt"], np.int32), it["max_new"],
+                      aux_inputs=aux)
+
+    th = threading.Thread(target=submitter, name="loadgen-submit")
+    th.start()
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    finished = []
+    while th.is_alive() or cb.has_work():
+        if cb.has_work():
+            rng, fin = cb.step(rng, strict=False)
+            finished.extend(fin)
+        else:
+            time.sleep(0.001)
+    th.join()
+    cb.token_cb = prev_cb
+    out = []
+    for req in finished:
+        r = rec(req.rid)
+        out.append({"submit": req.submit_t, "times": r["times"],
+                    "counts": r["counts"], "n": len(req.out),
+                    "shared_tokens": req.shared_tokens,
+                    "error": req.error})
+    return out
+
+
+async def replay_http(host: str, port: int, items: List[Dict], *,
+                      speed: float = 1.0) -> List[Dict]:
+    """Replay a trace against a running ``InferenceServer`` over HTTP/SSE;
+    timestamps are CLIENT-observed (connection + parse included)."""
+    from repro.launch.server import stream_generate
+
+    async def one(it):
+        await asyncio.sleep(it["t"] / speed)
+        r = await stream_generate(host, port, it["prompt"], it["max_new"],
+                                  aux=it.get("aux"))
+        ok = (r["status"] == 200 and r["final"] is not None
+              and "error" not in r["final"])
+        return {"submit": r["submit_t"], "times": r["token_times"],
+                "counts": r["token_counts"], "n": len(r["ids"]),
+                "error": None if ok else f"status={r['status']} "
+                                         f"final={r['final']}"}
+
+    return list(await asyncio.gather(*[one(it) for it in items]))
+
+
+# ---------------------------------------------------------------------------
+# Metrics
+# ---------------------------------------------------------------------------
+
+def _pct_ms(xs: List[float], q: float) -> Optional[float]:
+    return round(float(np.percentile(xs, q)) * 1e3, 3) if xs else None
+
+
+def summarize(records: List[Dict], *, offered_rps: Optional[float] = None
+              ) -> Dict:
+    """p50/p99 TTFT and TPOT plus throughput for one replayed trace.
+
+    TTFT: submit -> first delivered segment. TPOT: (last - first segment
+    arrival) / tokens delivered after the first segment — the steady-state
+    per-token pace a streaming consumer experiences."""
+    ok = [r for r in records if not r.get("error") and r["times"]]
+    ttft = [r["times"][0] - r["submit"] for r in ok]
+    tpot = [(r["times"][-1] - r["times"][0]) / (r["n"] - r["counts"][0])
+            for r in ok if r["n"] > r["counts"][0]]
+    toks = sum(r["n"] for r in ok)
+    span = (max(r["times"][-1] for r in ok) - min(r["submit"] for r in ok)
+            if ok else 0.0)
+    return {
+        "n": len(records),
+        "completed": len(ok),
+        "errors": len(records) - len(ok),
+        "offered_rps": None if offered_rps is None else round(offered_rps, 3),
+        "p50_ttft_ms": _pct_ms(ttft, 50),
+        "p99_ttft_ms": _pct_ms(ttft, 99),
+        "p50_tpot_ms": _pct_ms(tpot, 50),
+        "p99_tpot_ms": _pct_ms(tpot, 99),
+        "tok_s": round(toks / span, 2) if span > 0 else None,
+        "makespan_s": round(span, 3),
+    }
+
+
+def find_knee(points: List[Dict], factor: float = 3.0) -> Dict:
+    """Saturation knee over one arrival mode's sweep: the highest offered
+    load whose p99 TTFT stays within ``factor``x the lightest-load p99.
+    ``points``: summaries with ``offered_rps`` and ``p99_ttft_ms`` set."""
+    pts = sorted((p for p in points if p["p99_ttft_ms"] is not None),
+                 key=lambda p: p["offered_rps"])
+    if not pts:
+        return {"knee_rps": None, "saturated": None}
+    budget = factor * pts[0]["p99_ttft_ms"]
+    within = [p for p in pts if p["p99_ttft_ms"] <= budget]
+    return {
+        "knee_rps": within[-1]["offered_rps"] if within else None,
+        "saturated": pts[-1]["p99_ttft_ms"] > budget,
+        "p99_budget_ms": round(budget, 3),
+    }

@@ -27,7 +27,8 @@ def main() -> None:
                             table7_partitioning, table8_blockcount,
                             table12_walltime, table13_blockparallel,
                             table14_kernel_grads, table15_decode,
-                            table16_prefill, table17_conditioned)
+                            table16_prefill, table17_conditioned,
+                            table18_load)
     from benchmarks.common import emit
 
     tables = {
@@ -45,6 +46,7 @@ def main() -> None:
         "table15_decode": table15_decode.run_rows,
         "table16_prefill": table16_prefill.run_rows,
         "table17_conditioned": table17_conditioned.run_rows,
+        "table18_load": table18_load.run_rows,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

@@ -1,0 +1,81 @@
+"""Streaming HTTP/SSE client demo against the serving frontend — start an
+in-process ``InferenceServer`` on a tiny model, then exercise the whole
+endpoint surface: stream a request token-by-token (asserting the SSE
+reassembly equals the ``done`` event), cancel a long request mid-stream
+(pages return to the pool immediately), run a non-streaming request,
+and read ``/v1/health`` before and after a graceful drain.
+
+    PYTHONPATH=src python examples/serve_client.py
+
+Against an external server (``python -m repro.launch.server --port 8080``)
+the same client calls work with ``host, port = "127.0.0.1", 8080``.
+Wire format: docs/api.md.
+"""
+import asyncio
+
+import jax
+import numpy as np
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core import DiffusionBlocksModel
+from repro.launch.serve import ContinuousBatcher
+from repro.launch.server import (InferenceServer, request_json,
+                                 stream_generate)
+
+
+def build_server():
+    cfg = ModelConfig(name="client-ex", family="dense", n_layers=4,
+                      d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                      vocab_size=32)
+    dbm = DiffusionBlocksModel(cfg, DBConfig(num_blocks=2,
+                                             overlap_gamma=0.1))
+    params = dbm.init(jax.random.PRNGKey(0))
+    cb = ContinuousBatcher(dbm, params, num_slots=2, max_prompt=12,
+                           max_len=40, seg_len=3, page_size=4,
+                           chunk_size=4, precision="fp32")
+    return InferenceServer(cb, rng=jax.random.PRNGKey(7))
+
+
+async def main():
+    server = build_server()
+    await server.start()
+    host, port = server.host, server.port
+    print(f"serving on {host}:{port}")
+    rs = np.random.RandomState(0)
+
+    # ---- streaming: one SSE `token` event per decode segment -------------
+    prompt = [int(t) for t in rs.randint(0, 32, size=6)]
+    r = await stream_generate(host, port, prompt, max_new=12)
+    assert r["status"] == 200 and not r["final"]["cancelled"]
+    assert r["ids"] == r["final"]["ids"]      # reassembly == done event
+    print(f"request {r['request_id']}: {r['events']} SSE events, "
+          f"ids={r['ids']}, ttft={r['final'].get('ttft_ms')}ms")
+
+    # ---- mid-stream cancellation: POST /v1/cancel after 4 tokens ---------
+    r = await stream_generate(host, port, prompt, max_new=24,
+                              cancel_after=4)
+    assert r["final"]["cancelled"] and 0 < len(r["ids"]) < 24
+    print(f"request {r['request_id']}: cancelled after {len(r['ids'])} "
+          "tokens, pages freed")
+
+    # ---- non-streaming: single JSON response -----------------------------
+    code, out = await request_json(host, port, "POST", "/v1/generate",
+                                   {"prompt": prompt, "max_new": 8,
+                                    "stream": False})
+    assert code == 200 and len(out["ids"]) == 8
+    print(f"request {out['request_id']}: non-streaming ids={out['ids']}")
+
+    # ---- health + graceful drain -----------------------------------------
+    _, health = await request_json(host, port, "GET", "/v1/health")
+    print(f"health: {health}")
+    await server.drain()
+    code, out = await request_json(host, port, "POST", "/v1/generate",
+                                   {"prompt": prompt, "max_new": 4})
+    assert code == 503
+    print(f"after drain: new requests rejected with 503 ({out['error']})")
+    await server.aclose()
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

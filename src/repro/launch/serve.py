@@ -55,8 +55,9 @@ from __future__ import annotations
 import argparse
 import collections
 import dataclasses
+import threading
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +110,7 @@ class DecodeEngine:
         self.impl = impl
         self.prefill_mode = prefill
         self.chunk_size = int(chunk_size)
+        self.temperature, self.top_k = float(temperature), int(top_k)
         self.dispatches = 0          # jitted-call count (throughput reporting)
         self.prefill_steps = 0       # serial attention steps spent in prefill
         pol, spb = self.pol, steps_per_block
@@ -360,6 +362,8 @@ class Request:
     registered: bool = False      # prefix pages inserted into the cache
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
+    cancelled: bool = False       # retired early via ``cancel(rid)``
+    error: Optional[str] = None   # rejection reason (non-strict scheduling)
 
     @property
     def done(self) -> bool:
@@ -407,6 +411,30 @@ class ContinuousBatcher:
     (``cond_lengths[s] == 0`` makes a slot's cross term exactly zero).
     Prefix sharing keys on (token content, conditioning fingerprint):
     identical text under different conditioning never shares pages.
+
+    FRONTEND HOOKS (the asyncio server in ``repro.launch.server`` and the
+    load harness in ``benchmarks/loadgen.py`` drive the batcher through
+    these; plain ``run()`` keeps the original drain-the-queue semantics):
+
+      step(rng)       ONE scheduling iteration — apply pending cancels,
+                      admit, one prefill-chunk dispatch, one decode segment,
+                      retire — returning the requests finished this
+                      iteration. ``run()`` is now a loop over ``step``.
+      cancel(rid)     thread-safe mid-flight abort: a queued request is
+                      dropped, an admitted one retires its slot BETWEEN
+                      segments — its pages return to the pool immediately,
+                      respecting prefix-cache refcounts (shared pages only
+                      drop this slot's ref).
+      pause(rid) /    thread-safe flow control: a paused request keeps its
+      resume(rid)     slot and pages but is excluded from decode segments —
+                      slow-consumer backpressure without losing work.
+      token_cb        optional ``(Request, list[int]) -> None`` called from
+                      the scheduling thread with each segment's newly
+                      emitted tokens (SSE streaming taps this).
+
+    ``submit``/``cancel``/``pause``/``resume`` may be called from any
+    thread; mutations are applied by the scheduling thread at the next
+    ``step`` boundary — engine dispatches never race host bookkeeping.
     """
 
     def __init__(self, dbm, params, *, num_slots: int = 8,
@@ -461,6 +489,11 @@ class ContinuousBatcher:
         self._next_rid = 0
         self.steps = 0               # decode-segment scan steps (all slots)
         self.cow_copies = 0          # copy-on-write page copies performed
+        self._lock = threading.Lock()        # guards queue/cancel/pause sets
+        self._cancel_pending: set = set()    # rids to abort at next step
+        self._paused: set = set()            # rids excluded from decode
+        self.cancelled_count = 0
+        self.token_cb: Optional[Callable[[Request, List[int]], None]] = None
 
     def submit(self, prompt, max_new: int, aux_inputs=None) -> int:
         """Queue a request. ``aux_inputs``: optional per-request conditioning
@@ -485,13 +518,41 @@ class ContinuousBatcher:
                 assert v.shape[0] <= cap, \
                     f"{k}: {v.shape[0]} tokens exceed the conditioning " \
                     f"block capacity {cap}"
-        rid = self._next_rid
-        self._next_rid += 1
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
         req = Request(rid, prompt, max_new, aux_inputs=aux_inputs or None,
                       cond_fp=KVC.conditioning_fingerprint(aux_inputs))
         req.submit_t = time.time()
-        self.queue.append(req)
+        with self._lock:
+            self.queue.append(req)
         return rid
+
+    def cancel(self, rid: int) -> bool:
+        """Abort request ``rid`` (thread-safe). Applied at the next ``step``
+        boundary: a queued request is dropped before admission; an admitted
+        one retires its slot between segments and frees its pages
+        immediately (shared prefix pages only drop this slot's refcount —
+        cache-retained copies survive). Returns False when ``rid`` is
+        unknown or already finished."""
+        with self._lock:
+            known = (any(r.rid == rid for r in self.queue)
+                     or any(r is not None and r.rid == rid
+                            for r in self.slot_req))
+            if known:
+                self._cancel_pending.add(rid)
+        return known
+
+    def pause(self, rid: int):
+        """Exclude ``rid`` from decode segments (thread-safe): the request
+        keeps its slot and pages but emits no tokens until ``resume`` —
+        slow-consumer backpressure."""
+        with self._lock:
+            self._paused.add(rid)
+
+    def resume(self, rid: int):
+        with self._lock:
+            self._paused.discard(rid)
 
     # ---- page accounting ---------------------------------------------
     def _alloc_page(self) -> Optional[int]:
@@ -652,6 +713,25 @@ class ContinuousBatcher:
                                self.page_refs, req.cond_fp)
             req.registered = True
 
+    def _retire_slot(self, s: int) -> Request:
+        """Free slot ``s``: release its request's page refs (shared pages
+        survive while the prefix cache or another slot still holds them),
+        blank the page-table row, and mark the slot recyclable."""
+        req = self.slot_req[s]
+        self._release_pages(req.pages)
+        req.pages = []
+        self.table[s, :] = KVC.TRASH_PAGE
+        self.active[s] = False
+        self.cond_lengths[s] = 0
+        # zero the scheduling row: a slot cancelled mid-prefill would
+        # otherwise keep lengths < plens and make every later chunk dispatch
+        # commit its dead prompt into the trash page
+        self.lengths[s] = self.plens[s] = self.stop_at[s] = 0
+        self.slot_req[s] = None
+        with self._lock:
+            self._paused.discard(req.rid)
+        return req
+
     def _retire(self) -> List[Request]:
         out = []
         for s in range(self.num_slots):
@@ -659,13 +739,33 @@ class ContinuousBatcher:
             if req is None or not self.active[s]:
                 continue
             if self.lengths[s] >= self.stop_at[s]:
-                self._release_pages(req.pages)
-                req.pages = []
-                self.table[s, :] = KVC.TRASH_PAGE
-                self.active[s] = False
-                self.cond_lengths[s] = 0
-                self.slot_req[s] = None
-                out.append(req)
+                out.append(self._retire_slot(s))
+        return out
+
+    def _apply_cancellations(self) -> List[Request]:
+        """Apply pending ``cancel`` calls (scheduling thread, between
+        dispatches): drop queued requests, retire cancelled slots and free
+        their pages. Returns the cancelled requests."""
+        with self._lock:
+            cancels, self._cancel_pending = self._cancel_pending, set()
+        if not cancels:
+            return []
+        out = []
+        with self._lock:
+            kept = collections.deque()
+            for r in self.queue:
+                if r.rid in cancels:
+                    r.cancelled = True
+                    out.append(r)
+                else:
+                    kept.append(r)
+            self.queue = kept
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is not None and req.rid in cancels:
+                req.cancelled = True
+                out.append(self._retire_slot(s))
+        self.cancelled_count += len(out)
         return out
 
     def _collect(self, emitted: np.ndarray):
@@ -678,57 +778,101 @@ class ContinuousBatcher:
             if toks and req.first_token_t is None:
                 req.first_token_t = now
             req.out.extend(toks)
+            if toks and self.token_cb is not None:
+                self.token_cb(req, toks)
+
+    def _paused_mask(self) -> np.ndarray:
+        with self._lock:
+            paused = set(self._paused)
+        if not paused:
+            return np.zeros(self.num_slots, bool)
+        return np.array([self.slot_req[s] is not None
+                         and self.slot_req[s].rid in paused
+                         for s in range(self.num_slots)])
+
+    def has_work(self) -> bool:
+        """True while a step could make progress OR bookkeeping is pending
+        (queued/active requests, unapplied cancels)."""
+        with self._lock:
+            pending = bool(self._cancel_pending)
+        return pending or bool(self.queue) or bool(self.active.any())
+
+    def step(self, rng, *, strict: bool = True):
+        """ONE scheduling iteration: apply pending cancellations, admit
+        queued requests into free slots, run one prefill-chunk dispatch
+        (chunked mode) and one ``seg_len``-step decode segment, then retire
+        finished slots. Returns ``(rng, finished)`` — the requests that
+        completed (or were cancelled / rejected) this iteration.
+
+        ``strict=True`` (the ``run()`` default) raises when the head of the
+        queue can never be admitted (pool too small and nothing running);
+        ``strict=False`` — the serving frontend — instead pops that request
+        with ``req.error`` set so one impossible request cannot wedge the
+        engine loop."""
+        finished = self._apply_cancellations()
+        if not (self.queue or self.active.any()):
+            return rng, finished
+        if not self._admit() and not self.active.any():
+            msg = ("page pool too small for the next queued request "
+                   f"(free={len(self.free_pages)} pages)")
+            if strict:
+                raise RuntimeError(msg)
+            with self._lock:
+                req = self.queue.popleft()
+            req.error = msg
+            finished.append(req)
+            return rng, finished
+        in_prompt = self.active & (self.lengths < self.plens)
+        if self.chunked and in_prompt.any():
+            # ONE chunk dispatch advances every prefilling slot by up to
+            # chunk_size tokens at its own offset; decode-only slots see
+            # n_valid == 0 inside the program.
+            for s in np.nonzero(in_prompt)[0]:
+                lo = int(self.lengths[s])
+                hi = min(lo + self.chunk_size, int(self.plens[s]))
+                if not self._make_writable(s, lo, hi):
+                    raise RuntimeError("page pool exhausted during "
+                                       "copy-on-write (prefill)")
+            self.kv, lengths = self.eng._prefill_chunk1(
+                self.params, self.kv, jnp.asarray(self.table),
+                jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
+                jnp.asarray(self.plens), jnp.asarray(self.cond_lengths))
+            self.lengths = np.array(lengths)
+            self.eng.dispatches += 1
+            self.eng.prefill_steps += 1
+            self._register_prefixes()
+        decode_ready = (self.active & (self.lengths >= self.plens)
+                        if self.chunked else self.active)
+        decode_ready = decode_ready & ~self._paused_mask()
+        if decode_ready.any():
+            for s in np.nonzero(decode_ready)[0]:
+                lo = int(self.lengths[s])
+                hi = min(lo + self.seg_len, int(self.stop_at[s]))
+                if not self._make_writable(s, lo, hi):
+                    raise RuntimeError("page pool exhausted during "
+                                       "copy-on-write (decode)")
+            self.kv, lengths, rng, emitted = self.eng._serve(
+                self.params, self.kv, jnp.asarray(self.table),
+                jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
+                jnp.asarray(self.plens), jnp.asarray(self.stop_at),
+                jnp.asarray(decode_ready), rng,
+                jnp.asarray(self.cond_lengths), n=self.seg_len)
+            self.eng.dispatches += 1
+            self.steps += self.seg_len
+            self.lengths = np.array(lengths)           # host copy
+            self._collect(np.asarray(emitted))         # (slots, seg)
+            if not self.chunked:
+                self._register_prefixes()
+        finished.extend(self._retire())
+        return rng, finished
 
     def run(self, rng=None) -> List[Request]:
         """Drain the queue; returns finished requests (ordered by rid)."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         finished = []
-        while self.queue or self.active.any():
-            if not self._admit() and not self.active.any():
-                raise RuntimeError(
-                    "page pool too small for the next queued request "
-                    f"(free={len(self.free_pages)} pages)")
-            in_prompt = self.active & (self.lengths < self.plens)
-            if self.chunked and in_prompt.any():
-                # ONE chunk dispatch advances every prefilling slot by up to
-                # chunk_size tokens at its own offset; decode-only slots see
-                # n_valid == 0 inside the program.
-                for s in np.nonzero(in_prompt)[0]:
-                    lo = int(self.lengths[s])
-                    hi = min(lo + self.chunk_size, int(self.plens[s]))
-                    if not self._make_writable(s, lo, hi):
-                        raise RuntimeError("page pool exhausted during "
-                                           "copy-on-write (prefill)")
-                self.kv, lengths = self.eng._prefill_chunk1(
-                    self.params, self.kv, jnp.asarray(self.table),
-                    jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
-                    jnp.asarray(self.plens), jnp.asarray(self.cond_lengths))
-                self.lengths = np.array(lengths)
-                self.eng.dispatches += 1
-                self.eng.prefill_steps += 1
-                self._register_prefixes()
-            decode_ready = (self.active & (self.lengths >= self.plens)
-                            if self.chunked else self.active)
-            if decode_ready.any():
-                for s in np.nonzero(decode_ready)[0]:
-                    lo = int(self.lengths[s])
-                    hi = min(lo + self.seg_len, int(self.stop_at[s]))
-                    if not self._make_writable(s, lo, hi):
-                        raise RuntimeError("page pool exhausted during "
-                                           "copy-on-write (decode)")
-                self.kv, lengths, rng, emitted = self.eng._serve(
-                    self.params, self.kv, jnp.asarray(self.table),
-                    jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
-                    jnp.asarray(self.plens), jnp.asarray(self.stop_at),
-                    jnp.asarray(decode_ready), rng,
-                    jnp.asarray(self.cond_lengths), n=self.seg_len)
-                self.eng.dispatches += 1
-                self.steps += self.seg_len
-                self.lengths = np.array(lengths)           # host copy
-                self._collect(np.asarray(emitted))         # (slots, seg)
-                if not self.chunked:
-                    self._register_prefixes()
-            finished.extend(self._retire())
+        while self.has_work():
+            rng, fin = self.step(rng)
+            finished.extend(fin)
         return sorted(finished, key=lambda r: r.rid)
 
 

@@ -324,6 +324,123 @@ def test_continuous_batching_rejects_oversized_request(dbm_params):
 
 
 # ---------------------------------------------------------------------------
+# Cancellation (PR 6): queued and admitted aborts must free pages exactly —
+# these extend the leak tests above to the ``cancel(rid)`` path.
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_request_dropped_before_admission(dbm_params):
+    dbm, params = dbm_params
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=8,
+                           max_len=16, seg_len=4, page_size=4)
+    rs = np.random.RandomState(21)
+    rids = [cb.submit(rs.randint(0, TINY.vocab_size, size=5), max_new=4)
+            for _ in range(3)]
+    assert cb.cancel(rids[1])
+    done = cb.run(jax.random.PRNGKey(0))
+    by_rid = {r.rid: r for r in done}
+    assert set(by_rid) == set(rids)       # cancelled requests are reported
+    assert by_rid[rids[1]].cancelled and by_rid[rids[1]].out == []
+    assert len(by_rid[rids[0]].out) == 4 and len(by_rid[rids[2]].out) == 4
+    assert cb.cancelled_count == 1
+    assert len(cb.free_pages) == cb.total_pages - 1
+    assert not cb.cancel(rids[1])         # unknown/finished rid -> False
+
+
+def test_cancel_active_request_frees_pages_mid_flight(dbm_params):
+    dbm, params = dbm_params
+    cb = ContinuousBatcher(dbm, params, num_slots=2, max_prompt=8,
+                           max_len=16, seg_len=4, page_size=4)
+    rs = np.random.RandomState(22)
+    rid_a = cb.submit(rs.randint(0, TINY.vocab_size, size=6), max_new=8)
+    rid_b = cb.submit(rs.randint(0, TINY.vocab_size, size=6), max_new=8)
+    rng = jax.random.PRNGKey(1)
+    rng, fin = cb.step(rng)               # admit both + first decode segment
+    assert not fin and int(cb.active.sum()) == 2
+    assert cb.cancel(rid_a)
+    rng, fin = cb.step(rng)               # cancel applies BEFORE the segment
+    cancelled = [r for r in fin if r.rid == rid_a]
+    assert cancelled and cancelled[0].cancelled
+    assert 0 < len(cancelled[0].out) < 8  # aborted mid-generation
+    assert not cancelled[0].pages         # its pages went back to the pool
+    finished = list(fin)
+    while cb.has_work():
+        rng, fin = cb.step(rng)
+        finished.extend(fin)
+    b = [r for r in finished if r.rid == rid_b][0]
+    assert not b.cancelled and len(b.out) == 8   # neighbor unaffected
+    assert len(cb.free_pages) == cb.total_pages - 1
+    assert not cb.active.any() and not cb.page_refs
+
+
+def test_cancel_respects_prefix_cache_refcounts(dbm_params):
+    """Cancelling a request that maps shared prefix pages must only drop the
+    SLOT's refs: the cache-retained chain survives and still serves later
+    requests."""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(23)
+    sys_p = rs.randint(0, TINY.vocab_size, size=16)    # 4 full pages of 4
+    u1 = rs.randint(0, TINY.vocab_size, size=4)
+    u2 = rs.randint(0, TINY.vocab_size, size=4)
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=24,
+                           max_len=32, seg_len=4, page_size=4,
+                           chunk_size=8, prefix_cache=True,
+                           precision="fp32")
+    cb.submit(np.concatenate([sys_p, u1]), max_new=4)
+    cb.run(jax.random.PRNGKey(0))
+    retained = set(cb.page_refs)          # prefix pages held by the cache
+    rid = cb.submit(np.concatenate([sys_p, u2]), max_new=8)
+    rng = jax.random.PRNGKey(1)
+    rng, fin = cb.step(rng)
+    req = cb.slot_req[0]
+    assert req is not None and req.shared_tokens == 16
+    assert any(cb.page_refs.get(p, 0) > 1 for p in req.pages)  # truly shared
+    assert cb.cancel(rid)
+    rng, fin = cb.step(rng)
+    assert fin and fin[0].cancelled
+    # slot refs dropped, cache refs intact, nothing double-freed
+    assert all(v == 1 for v in cb.page_refs.values())
+    assert retained <= set(cb.page_refs)
+    assert len(cb.free_pages) + len(cb.page_refs) == cb.total_pages - 1
+    # the surviving chain still serves a later request end to end
+    cb.submit(np.concatenate([sys_p, u2]), max_new=4)
+    done = cb.run(jax.random.PRNGKey(2))
+    assert done[0].shared_tokens >= 16 and len(done[0].out) == 4
+
+
+def test_recycled_slot_after_cancel_no_leak(dbm_params):
+    """The PR 3/4 leak property under cancellation: a slot recycled from a
+    CANCELLED occupant must serve its next request identically regardless of
+    what the cancelled request was."""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(24)
+    p1 = rs.randint(0, TINY.vocab_size, size=8)
+    p1_alt = (p1 + 7) % TINY.vocab_size
+    p2 = rs.randint(0, TINY.vocab_size, size=8)
+
+    def serve(first):
+        cb = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=12,
+                               max_len=20, seg_len=4, page_size=4,
+                               chunk_size=4, precision="fp32")
+        rid1 = cb.submit(first, max_new=8)
+        rng = jax.random.PRNGKey(9)
+        rng, _ = cb.step(rng)             # chunk 1 of the prompt
+        rng, _ = cb.step(rng)             # chunk 2 + first decode segment
+        assert len(cb.slot_req[0].out) == 4   # mid-generation
+        cb.cancel(rid1)
+        rng, fin = cb.step(rng)
+        assert fin[0].cancelled
+        cb.submit(p2, max_new=5)
+        out = []
+        while cb.has_work():
+            rng, fin = cb.step(rng)
+            out.extend(fin)
+        assert len(cb.free_pages) == cb.total_pages - 1
+        return out[0].out
+
+    assert serve(p1) == serve(p1_alt)
+
+
+# ---------------------------------------------------------------------------
 # Compile-cache behavior (static steps_per_block / sampler config)
 # ---------------------------------------------------------------------------
 

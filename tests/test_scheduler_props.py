@@ -1,7 +1,8 @@
 """Property-test suite for the continuous-batching scheduler and the
 conditioning-aware shared-prefix page cache.
 
-Randomized admit / decode / retire traces drive a REAL ``ContinuousBatcher``
+Randomized admit / decode / CANCEL / retire traces drive a REAL
+``ContinuousBatcher``
 (real page allocator, prefix trie, copy-on-write, slot recycling, admission-
 time conditioning writes) while the two heavy jitted dispatch programs are
 replaced by numpy fakes with identical scheduling semantics — so hundreds of
@@ -22,7 +23,12 @@ Invariants checked on every trace:
     (the INIT state), conditioned slots a freshly written one;
   * no cross-conditioning sharing — a request only ever shares prefix pages
     registered under ITS OWN conditioning fingerprint (identical text under
-    a different image/audio input shares nothing).
+    a different image/audio input shares nothing);
+  * cancellation accounting — random ``cancel(rid)`` calls between steps
+    (hitting queued, admitted, and already-finished requests) keep all of
+    the above true: a cancelled request ends with no pages, every
+    acknowledged cancel is eventually reported exactly once, and shared
+    pages only lose the cancelled slot's ref.
 
 The seeded driver runs >= 200 traces deterministically (no hypothesis
 needed); when hypothesis is installed (the dev extra — CI fast lane), the
@@ -227,6 +233,10 @@ def run_trace(dbm, params, seed: int):
     cb._admit = admit_checked
 
     submitted = []              # (prompt, cond_idx, req)
+    acked_cancels = set()       # rids whose cancel() returned True
+    reported = []               # finished/cancelled requests, in order
+    rng = jax.random.PRNGKey(seed)
+    pool_errors = 0
     for _ in range(int(rs.randint(1, 4))):      # submission waves
         for _ in range(int(rs.randint(1, 5))):
             pre = prefixes[rs.randint(len(prefixes))]
@@ -240,12 +250,45 @@ def run_trace(dbm, params, seed: int):
             req = cb.queue[-1]
             assert req.rid == rid
             submitted.append((prompt, ci, req))
-        try:
-            done = cb.run(jax.random.PRNGKey(seed))
-        except RuntimeError as e:               # pool too small to admit
-            assert "page pool" in str(e)
-            cb.queue.clear()
+        # drain this wave step by step, firing random cancels in between —
+        # victims may be queued, admitted, finished, or already cancelled
+        while cb.has_work():
+            if submitted and rs.rand() < 0.25:
+                victim = submitted[int(rs.randint(len(submitted)))][2]
+                if cb.cancel(victim.rid):
+                    acked_cancels.add(victim.rid)
+            try:
+                rng, fin = cb.step(rng)
+            except RuntimeError as e:           # pool too small to admit
+                assert "page pool" in str(e)
+                cb.queue.clear()                # drop the stuck wave
+                pool_errors += 1
+                fin = []
+            reported.extend(fin)
+            check_invariants(cb)
         check_invariants(cb)
+
+    # -- cancellation accounting (a RuntimeError step discards its finished
+    # list and queue.clear() can drop an acked-but-unapplied victim, so the
+    # exact-counting claims hold only on traces without pool errors)
+    by_rid = {}
+    for r in reported:
+        assert r.rid not in by_rid, f"request {r.rid} reported twice"
+        by_rid[r.rid] = r
+    assert cb.cancelled_count <= len(acked_cancels)
+    for _, _, req in submitted:
+        if req.cancelled:
+            assert req.rid in acked_cancels, \
+                f"request {req.rid} cancelled without an acked cancel()"
+            assert not req.pages, \
+                f"cancelled request {req.rid} still holds pages"
+    if not pool_errors:
+        assert cb.cancelled_count == len(acked_cancels)
+        for rid in acked_cancels:       # every acked cancel reported, marked
+            assert by_rid[rid].cancelled
+        for _, _, req in submitted:
+            if req.rid in by_rid and req.rid not in acked_cancels:
+                assert not by_rid[req.rid].cancelled
 
     # -- no cross-conditioning prefix sharing: a request may share at most
     # the longest common prefix it has with OTHER requests under the SAME

@@ -1,0 +1,364 @@
+"""HTTP/SSE serving frontend tests: stream reassembly is bit-identical to
+the direct engine paths (static ``generate`` and a direct ``step()`` loop),
+mid-stream cancellation frees pages (allocator stats), slow-consumer
+backpressure pauses the slot without corrupting output, concurrent ragged
+clients, request validation, and drain-on-shutdown semantics.
+
+Bit-parity discipline: greedy decoding starts each denoise from rng-drawn
+noise of shape ``(num_slots, 1, d)``, so outputs depend on the rng stream
+AND the slot geometry. Parity tests therefore use ``num_slots=1`` servers,
+ONE request in flight at a time, and pass the SAME ``PRNGKey`` to the
+server's engine thread and the reference path (idle engine steps consume no
+rng, so sequential requests stay deterministic). Tests with concurrent
+clients assert completeness and accounting, not token equality.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core import DiffusionBlocksModel
+from repro.launch.serve import ContinuousBatcher, generate
+from repro.launch.server import (EngineRunner, InferenceServer, TokenStream,
+                                 request_json, stream_generate)
+
+TINY = ModelConfig(name="tiny-server", family="dense", n_layers=4,
+                   d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                   vocab_size=32)
+
+# one static engine config for the whole module (memoized on the dbm):
+# fp32 so host/float comparisons are exact, small pages/segments so the
+# scheduler actually schedules
+CB_KW = dict(max_prompt=12, max_len=24, seg_len=3, page_size=4,
+             chunk_size=4, precision="fp32")
+GEN_KW = dict(precision="fp32", page_size=4, chunk_size=4)
+
+
+@pytest.fixture(scope="module")
+def dbm_params():
+    dbm = DiffusionBlocksModel(TINY, DBConfig(num_blocks=2,
+                                              overlap_gamma=0.1))
+    return dbm, dbm.init(jax.random.PRNGKey(0))
+
+
+def make_prompts(seed, n, lo=3, hi=10):
+    rs = np.random.RandomState(seed)
+    return [rs.randint(0, TINY.vocab_size, size=rs.randint(lo, hi))
+            for _ in range(n)]
+
+
+async def serve_env(dbm, params, *, num_slots=1, rng_seed=7,
+                    queue_cap=256, **kw):
+    cb = ContinuousBatcher(dbm, params, num_slots=num_slots,
+                           **{**CB_KW, **kw})
+    server = InferenceServer(cb, queue_cap=queue_cap,
+                             rng=jax.random.PRNGKey(rng_seed))
+    await server.start()
+    return cb, server
+
+
+def direct_sequential(dbm, params, prompts, max_new, rng_seed, *,
+                      num_slots=1):
+    """Reference: the same requests through a direct ``step()`` loop, one at
+    a time, threading ONE rng — exactly what a sequential-client server
+    does."""
+    cb = ContinuousBatcher(dbm, params, num_slots=num_slots, **CB_KW)
+    rng = jax.random.PRNGKey(rng_seed)
+    outs = {}
+    for p in prompts:
+        rid = cb.submit(p, max_new)
+        while cb.has_work():
+            rng, fin = cb.step(rng)
+            outs.update({r.rid: list(r.out) for r in fin})
+        assert rid in outs
+    return [outs[i] for i in sorted(outs)]
+
+
+# ---------------------------------------------------------------------------
+# Bit-parity: SSE reassembly == static generate == non-streaming response
+# ---------------------------------------------------------------------------
+
+def test_sse_stream_matches_direct_generate(dbm_params):
+    """ONE streamed request on a single-slot server reassembles to exactly
+    the static ``generate()`` output for the same PRNGKey."""
+    dbm, params = dbm_params
+    prompt = make_prompts(0, 1)[0]
+    max_new = 7
+
+    async def main():
+        cb, server = await serve_env(dbm, params, rng_seed=7)
+        try:
+            return await stream_generate("127.0.0.1", server.port, prompt,
+                                         max_new)
+        finally:
+            await server.aclose()
+
+    r = asyncio.run(main())
+    assert r["status"] == 200 and r["final"]["cancelled"] is False
+    direct = np.asarray(generate(dbm, params, np.asarray(prompt)[None],
+                                 max_new, rng=jax.random.PRNGKey(7),
+                                 **GEN_KW))[0, len(prompt):]
+    assert r["ids"] == [int(t) for t in direct]
+    assert r["final"]["ids"] == r["ids"] and r["final"]["n"] == max_new
+    # streamed per-segment: more than one token event for 7 tokens at seg 3
+    assert len(r["token_counts"]) >= 2
+    assert "ttft_ms" in r["final"] and r["final"]["ttft_ms"] >= 0
+
+
+def test_sse_sequential_matches_direct_step_loop(dbm_params):
+    """Ragged sequential streams reassemble bit-identically to the direct
+    batcher step loop threading the same rng."""
+    dbm, params = dbm_params
+    prompts = make_prompts(1, 4)
+    max_new = 6
+
+    async def main():
+        cb, server = await serve_env(dbm, params, rng_seed=11)
+        try:
+            out = []
+            for p in prompts:           # sequential: one in flight at a time
+                r = await stream_generate("127.0.0.1", server.port, p,
+                                          max_new)
+                assert r["status"] == 200
+                out.append(r["ids"])
+            return out
+        finally:
+            await server.aclose()
+
+    got = asyncio.run(main())
+    want = direct_sequential(dbm, params, prompts, max_new, 11)
+    assert got == want
+
+
+def test_nonstreaming_response_matches_sse(dbm_params):
+    """``"stream": false`` returns one JSON body whose ids equal the SSE
+    reassembly for the same seed (two fresh servers, same rng)."""
+    dbm, params = dbm_params
+    prompt = make_prompts(2, 1)[0]
+
+    async def once(stream):
+        cb, server = await serve_env(dbm, params, rng_seed=13)
+        try:
+            if stream:
+                r = await stream_generate("127.0.0.1", server.port, prompt, 6)
+                assert r["status"] == 200
+                return r["ids"]
+            code, obj = await request_json(
+                "127.0.0.1", server.port, "POST", "/v1/generate",
+                {"prompt": [int(t) for t in prompt], "max_new": 6,
+                 "stream": False})
+            assert code == 200 and obj["cancelled"] is False
+            return obj["ids"]
+        finally:
+            await server.aclose()
+
+    assert asyncio.run(once(True)) == asyncio.run(once(False))
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancellation_frees_pages(dbm_params):
+    """Mid-stream POST /v1/cancel retires the slot: the stream ends early
+    with ``cancelled: true`` and every page returns to the pool."""
+    dbm, params = dbm_params
+    prompt = make_prompts(3, 1)[0]
+
+    async def main():
+        cb, server = await serve_env(dbm, params, num_slots=2)
+        try:
+            r = await stream_generate("127.0.0.1", server.port, prompt, 18,
+                                      cancel_after=2)
+            code, health = await request_json("127.0.0.1", server.port,
+                                              "GET", "/v1/health")
+            return cb, r, health
+        finally:
+            await server.aclose()
+
+    cb, r, health = asyncio.run(main())
+    assert r["final"]["cancelled"] is True
+    assert 2 <= len(r["ids"]) < 18
+    assert r["final"]["ids"] == r["ids"]
+    assert len(cb.free_pages) == cb.total_pages - 1     # allocator stats
+    assert not cb.page_refs and not cb.active.any()
+    assert health["cancelled"] == 1 and health["active_slots"] == 0
+
+
+def test_cancel_unknown_rid_reports_false(dbm_params):
+    dbm, params = dbm_params
+
+    async def main():
+        cb, server = await serve_env(dbm, params)
+        try:
+            code, obj = await request_json("127.0.0.1", server.port, "POST",
+                                           "/v1/cancel/999")
+            assert code == 200 and obj["cancelled"] is False
+            code, obj = await request_json("127.0.0.1", server.port, "POST",
+                                           "/v1/cancel/bogus")
+            assert code == 400
+        finally:
+            await server.aclose()
+
+    asyncio.run(main())
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+def test_slow_consumer_backpressure_pauses_without_corruption(dbm_params):
+    """A consumer slower than the engine trips the bounded bridge queue: the
+    slot is PAUSED (engine stops decoding it) until the consumer drains, yet
+    the reassembled stream is still bit-identical to static ``generate`` —
+    paused steps dispatch nothing, so no rng is consumed while waiting.
+
+    Drives the production bridge (``EngineRunner`` + ``TokenStream`` +
+    ``pause``/``resume``) with a deliberately slow ``next_batch`` consumer —
+    over a socket the server drains the bridge into the OS send buffer, so
+    only a stalled bridge consumer exercises this path deterministically."""
+    dbm, params = dbm_params
+    prompt = make_prompts(4, 1)[0]
+    max_new = 15
+
+    async def main():
+        cb = ContinuousBatcher(dbm, params, num_slots=1, **CB_KW)
+        runner = EngineRunner(cb, rng=jax.random.PRNGKey(17))
+        runner.start()
+        pauses = []
+
+        def on_pause(r):
+            pauses.append(r)
+            cb.pause(r)
+
+        rid = cb.submit(np.asarray(prompt, np.int32), max_new)
+        stream = TokenStream(
+            asyncio.get_running_loop(), rid, cap=4, on_pause=on_pause,
+            on_resume=lambda r: (cb.resume(r), runner.wake()))
+        runner.attach(rid, stream)
+        ids, done = [], False
+        while not done:
+            toks, done = await stream.next_batch()
+            ids.extend(toks)
+            await asyncio.sleep(0.1)        # slow consumer
+        runner.stop(timeout=10)
+        return ids, pauses, stream.pauses
+
+    ids, pauses, n_pauses = asyncio.run(main())
+    assert len(ids) == max_new
+    assert pauses and n_pauses >= 1         # backpressure actually engaged
+    direct = np.asarray(generate(dbm, params, np.asarray(prompt)[None],
+                                 max_new, rng=jax.random.PRNGKey(17),
+                                 **GEN_KW))[0, len(prompt):]
+    assert ids == [int(t) for t in direct]
+
+
+# ---------------------------------------------------------------------------
+# Concurrency, validation, drain
+# ---------------------------------------------------------------------------
+
+def test_concurrent_ragged_clients_complete(dbm_params):
+    """More ragged clients than slots, all streaming at once: every request
+    completes with its full token budget, ids are unique, and the page pool
+    is whole afterwards. (No token-equality assertion: concurrent admission
+    interleaves segments, which legitimately changes the rng stream.)"""
+    dbm, params = dbm_params
+    prompts = make_prompts(5, 5)
+    news = [4, 7, 3, 6, 5]
+
+    async def main():
+        cb, server = await serve_env(dbm, params, num_slots=2)
+        try:
+            rets = await asyncio.gather(*[
+                stream_generate("127.0.0.1", server.port, p, n)
+                for p, n in zip(prompts, news)])
+            return cb, rets, server.stats()
+        finally:
+            await server.aclose()
+
+    cb, rets, stats = asyncio.run(main())
+    assert [r["status"] for r in rets] == [200] * 5
+    for r, n in zip(rets, news):
+        assert len(r["ids"]) == n and r["final"]["cancelled"] is False
+        assert all(0 <= t < TINY.vocab_size for t in r["ids"])
+    assert len({r["request_id"] for r in rets}) == 5
+    assert stats["served"] == 5 and stats["active_slots"] == 0
+    assert len(cb.free_pages) == cb.total_pages - 1
+
+
+def test_request_validation(dbm_params):
+    dbm, params = dbm_params
+
+    async def post(server, payload):
+        return await request_json("127.0.0.1", server.port, "POST",
+                                  "/v1/generate", payload)
+
+    async def main():
+        cb, server = await serve_env(dbm, params)
+        try:
+            bad = [
+                {"prompt": [], "max_new": 4},                 # empty
+                {"prompt": [1, "a"], "max_new": 4},           # non-int
+                {"prompt": [1, 99], "max_new": 4},            # out of vocab
+                {"prompt": [1] * 13, "max_new": 4},           # > max_prompt
+                {"prompt": [1, 2], "max_new": 0},             # bad max_new
+                {"prompt": [1, 2], "max_new": 23},            # > max_len
+                {"prompt": [1, 2], "max_new": 4,
+                 "temperature": 0.9},                         # engine-static
+                {"prompt": [1, 2], "max_new": 4, "top_k": 5},
+                {"prompt": [1, 2], "max_new": 4, "aux": "nope"},
+                [1, 2, 3],                                    # not an object
+            ]
+            for payload in bad:
+                code, obj = await post(server, payload)
+                assert code == 400 and "error" in obj, payload
+            code, _ = await request_json("127.0.0.1", server.port, "GET",
+                                         "/v1/nope")
+            assert code == 404
+            # matching engine-static sampler values are accepted
+            code, obj = await post(server, {"prompt": [1, 2], "max_new": 2,
+                                            "temperature": 0.0, "top_k": 0,
+                                            "stream": False})
+            assert code == 200
+        finally:
+            await server.aclose()
+
+    asyncio.run(main())
+
+
+def test_drain_completes_in_flight_and_rejects_new(dbm_params):
+    """``drain()`` lets in-flight streams run to completion (full token
+    budgets delivered) while new generate calls get 503."""
+    dbm, params = dbm_params
+    prompts = make_prompts(6, 2)
+
+    async def main():
+        cb, server = await serve_env(dbm, params, num_slots=2)
+        tasks = [asyncio.ensure_future(
+            stream_generate("127.0.0.1", server.port, p, 10))
+            for p in prompts]
+        # wait until both requests are actually inside the engine
+        for _ in range(200):
+            _, h = await request_json("127.0.0.1", server.port, "GET",
+                                      "/v1/health")
+            if h["active_slots"] + h["queued"] >= 2:
+                break
+            await asyncio.sleep(0.02)
+        await server.drain()
+        rets = await asyncio.gather(*tasks)
+        code, obj = await request_json(
+            "127.0.0.1", server.port, "POST", "/v1/generate",
+            {"prompt": [1, 2], "max_new": 2})
+        await server.aclose()
+        return cb, rets, code, obj, server.stats()
+
+    cb, rets, code, obj, stats = asyncio.run(main())
+    for r in rets:
+        assert r["status"] == 200 and len(r["ids"]) == 10
+        assert r["final"]["cancelled"] is False
+    assert code == 503 and "drain" in obj["error"]
+    assert stats["draining"] and stats["served"] == 2
+    assert len(cb.free_pages) == cb.total_pages - 1

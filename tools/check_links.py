@@ -1,0 +1,79 @@
+"""Dead-link checker for the docs tree (stdlib-only; runs in the lint job).
+
+Validates every relative markdown link in ``docs/*.md`` and ``README.md``:
+the target file must exist, and a ``#fragment`` must match a heading's
+GitHub-style anchor in the target. Skipped on purpose: absolute URLs
+(``http``/``https``/``mailto``) and links that escape the repository root
+(the CI badge's ``../../actions/...`` resolves on github.com, not in the
+checkout).
+
+    python tools/check_links.py            # exit 1 on any dead link
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_anchor(heading: str) -> str:
+    """GitHub's heading -> anchor slug: strip markup, lowercase, drop
+    punctuation, spaces to hyphens."""
+    text = re.sub(r"[*_`]|\[|\]|\([^)]*\)", "", heading).strip()
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def anchors_of(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    return {github_anchor(h) for h in HEADING_RE.findall(body)}
+
+
+def check_file(md_path: str) -> list:
+    errors = []
+    with open(md_path, encoding="utf-8") as f:
+        body = CODE_FENCE_RE.sub("", f.read())
+    for target in LINK_RE.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path, _, frag = target.partition("#")
+        dest = (os.path.normpath(os.path.join(os.path.dirname(md_path),
+                                              path))
+                if path else md_path)
+        if not (dest + os.sep).startswith(ROOT + os.sep):
+            continue                     # escapes the repo (e.g. CI badge)
+        rel = os.path.relpath(md_path, ROOT)
+        if not os.path.exists(dest):
+            errors.append(f"{rel}: dead link -> {target}")
+            continue
+        if frag and dest.endswith(".md"):
+            if github_anchor(frag) not in anchors_of(dest):
+                errors.append(f"{rel}: missing anchor -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e)
+    print(f"checked {len(files)} files: "
+          + ("FAILED" if errors else "all links ok"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
