@@ -59,13 +59,22 @@ def synth_workload(rs, n: int, *, arrival: str = "poisson", rate: float = 4.0,
                    prompt_med: float = 8.0, prompt_sigma: float = 0.6,
                    new_med: float = 6.0, new_sigma: float = 0.5,
                    sys_population: int = 3, sys_frac: float = 0.5,
-                   sys_len: int = 8, cond_names=(), cond_frac: float = 0.0
-                   ) -> List[Dict]:
-    """One trace: n items of ``{"t", "prompt", "max_new", "aux"}`` with
-    arrival offsets in seconds from trace start."""
+                   sys_len: int = 8, cond_names=(), cond_frac: float = 0.0,
+                   classes: Optional[List[Dict]] = None) -> List[Dict]:
+    """One trace: n items of ``{"t", "prompt", "max_new", "aux", "cls",
+    "priority", "ttft_slo_ms", "tpot_slo_ms"}`` with arrival offsets in
+    seconds from trace start.
+
+    ``classes``: optional priority-class mix — a list of
+    ``{"name", "frac", "priority", "ttft_slo_ms"?, "tpot_slo_ms"?}`` dicts
+    (fracs need not sum to 1; they are normalized). Default: every request
+    is standard priority with no SLO."""
     t = _arrival_times(rs, n, arrival, rate, burst_mean)
     sys_prompts = [rs.randint(0, vocab, size=sys_len)
                    for _ in range(sys_population)]
+    if classes:
+        fracs = np.asarray([c["frac"] for c in classes], float)
+        fracs = fracs / fracs.sum()
     items = []
     for i in range(n):
         plen = int(np.clip(rs.lognormal(np.log(prompt_med), prompt_sigma),
@@ -80,8 +89,14 @@ def synth_workload(rs, n: int, *, arrival: str = "poisson", rate: float = 4.0,
                               1, max_new_cap))
         aux = (cond_names[int(rs.randint(len(cond_names)))]
                if len(cond_names) and rs.rand() < cond_frac else None)
+        cls = (classes[int(rs.choice(len(classes), p=fracs))]
+               if classes else None)
         items.append({"t": float(t[i]), "prompt": prompt,
-                      "max_new": max_new, "aux": aux})
+                      "max_new": max_new, "aux": aux,
+                      "cls": cls["name"] if cls else "standard",
+                      "priority": cls["priority"] if cls else "standard",
+                      "ttft_slo_ms": cls.get("ttft_slo_ms") if cls else None,
+                      "tpot_slo_ms": cls.get("tpot_slo_ms") if cls else None})
     return items
 
 
@@ -119,14 +134,36 @@ def replay_inproc(cb, items: List[Dict], *, aux_registry=None, rng=None,
     cb.token_cb = on_tokens
     t0 = time.time()
 
+    shed: List[Dict] = []
+    rid_cls: Dict[int, str] = {}
+
     def submitter():
+        from repro.launch.serve import AdmissionError
         for it in items:
             dt = t0 + it["t"] / speed - time.time()
             if dt > 0:
                 time.sleep(dt)
             aux = aux_registry.get(it["aux"]) if it.get("aux") else None
-            cb.submit(np.asarray(it["prompt"], np.int32), it["max_new"],
-                      aux_inputs=aux)
+            slo_kw = {}
+            if it.get("ttft_slo_ms") is not None:
+                slo_kw["ttft_slo_s"] = it["ttft_slo_ms"] / 1e3
+            if it.get("tpot_slo_ms") is not None:
+                slo_kw["tpot_slo_s"] = it["tpot_slo_ms"] / 1e3
+            try:
+                rid = cb.submit(np.asarray(it["prompt"], np.int32),
+                                it["max_new"], aux_inputs=aux,
+                                priority=it.get("priority", "standard"),
+                                **slo_kw)
+            except AdmissionError as e:
+                # shed requests STAY in the record set (survivorship fix:
+                # summaries report a shed rate, not quietly rosier TTFTs)
+                shed.append({"submit": time.time(), "times": [],
+                             "counts": [], "n": 0, "shared_tokens": 0,
+                             "error": None, "shed": True,
+                             "retry_after": e.retry_after,
+                             "cls": it.get("cls", "standard")})
+                continue
+            rid_cls[rid] = it.get("cls", "standard")
 
     th = threading.Thread(target=submitter, name="loadgen-submit")
     th.start()
@@ -146,8 +183,11 @@ def replay_inproc(cb, items: List[Dict], *, aux_registry=None, rng=None,
         out.append({"submit": req.submit_t, "times": r["times"],
                     "counts": r["counts"], "n": len(req.out),
                     "shared_tokens": req.shared_tokens,
-                    "error": req.error})
-    return out
+                    "error": req.error, "shed": False,
+                    "cls": rid_cls.get(req.rid, "standard"),
+                    "deadline_blown": req.deadline_blown,
+                    "preempted": req.preempt_count})
+    return out + shed
 
 
 async def replay_http(host: str, port: int, items: List[Dict], *,
@@ -159,11 +199,22 @@ async def replay_http(host: str, port: int, items: List[Dict], *,
     async def one(it):
         await asyncio.sleep(it["t"] / speed)
         r = await stream_generate(host, port, it["prompt"], it["max_new"],
-                                  aux=it.get("aux"))
+                                  aux=it.get("aux"),
+                                  priority=it.get("priority"),
+                                  ttft_slo_ms=it.get("ttft_slo_ms"),
+                                  tpot_slo_ms=it.get("tpot_slo_ms"))
+        if r["status"] in (429, 503):     # shed: reported, never dropped
+            return {"submit": r["submit_t"], "times": [], "counts": [],
+                    "n": 0, "error": None, "shed": True,
+                    "retry_after": r["retry_after"],
+                    "cls": it.get("cls", "standard")}
         ok = (r["status"] == 200 and r["final"] is not None
               and "error" not in r["final"])
         return {"submit": r["submit_t"], "times": r["token_times"],
                 "counts": r["token_counts"], "n": len(r["ids"]),
+                "shed": False, "cls": it.get("cls", "standard"),
+                "deadline_blown": bool((r["final"] or {}).get(
+                    "deadline_blown")),
                 "error": None if ok else f"status={r['status']} "
                                          f"final={r['final']}"}
 
@@ -184,8 +235,16 @@ def summarize(records: List[Dict], *, offered_rps: Optional[float] = None
 
     TTFT: submit -> first delivered segment. TPOT: (last - first segment
     arrival) / tokens delivered after the first segment — the steady-state
-    per-token pace a streaming consumer experiences."""
-    ok = [r for r in records if not r.get("error") and r["times"]]
+    per-token pace a streaming consumer experiences.
+
+    SHED requests (admission control 429s) never produce tokens, so they
+    cannot enter the latency percentiles — but they are counted and
+    reported as ``shed`` / ``shed_rate`` so an over-capacity sweep cannot
+    quietly report survivor-only TTFTs as if the whole offered load was
+    served."""
+    sheds = [r for r in records if r.get("shed")]
+    ok = [r for r in records if not r.get("shed") and not r.get("error")
+          and r["times"]]
     ttft = [r["times"][0] - r["submit"] for r in ok]
     tpot = [(r["times"][-1] - r["times"][0]) / (r["n"] - r["counts"][0])
             for r in ok if r["n"] > r["counts"][0]]
@@ -195,7 +254,9 @@ def summarize(records: List[Dict], *, offered_rps: Optional[float] = None
     return {
         "n": len(records),
         "completed": len(ok),
-        "errors": len(records) - len(ok),
+        "shed": len(sheds),
+        "shed_rate": round(len(sheds) / len(records), 4) if records else None,
+        "errors": len(records) - len(ok) - len(sheds),
         "offered_rps": None if offered_rps is None else round(offered_rps, 3),
         "p50_ttft_ms": _pct_ms(ttft, 50),
         "p99_ttft_ms": _pct_ms(ttft, 99),
@@ -204,6 +265,44 @@ def summarize(records: List[Dict], *, offered_rps: Optional[float] = None
         "tok_s": round(toks / span, 2) if span > 0 else None,
         "makespan_s": round(span, 3),
     }
+
+
+def slo_summary(records: List[Dict], classes: List[Dict]) -> Dict:
+    """Per-priority-class SLO attainment and goodput for one replayed trace.
+
+    For each class: shed rate, TTFT percentiles over served requests, the
+    fraction of NON-shed requests whose TTFT met the class SLO
+    (``slo_attainment`` — shed requests are excluded from attainment but
+    reported beside it), and goodput (SLO-meeting completions per second
+    over the trace makespan)."""
+    span_all = [r for r in records if r.get("times")]
+    span = (max(r["times"][-1] for r in span_all)
+            - min(r["submit"] for r in records)) if span_all else 0.0
+    out = {}
+    for cls in classes:
+        name, slo = cls["name"], cls.get("ttft_slo_ms")
+        rs = [r for r in records if r.get("cls") == name]
+        sheds = [r for r in rs if r.get("shed")]
+        served = [r for r in rs if not r.get("shed") and r["times"]]
+        ttft = [r["times"][0] - r["submit"] for r in served]
+        met = (ttft if slo is None
+               else [t for t in ttft if t * 1e3 <= slo])
+        out[name] = {
+            "n": len(rs),
+            "shed": len(sheds),
+            "shed_rate": round(len(sheds) / len(rs), 4) if rs else None,
+            "served": len(served),
+            "deadline_blown": sum(bool(r.get("deadline_blown"))
+                                  for r in served),
+            "preempted": sum(int(r.get("preempted") or 0) for r in served),
+            "p50_ttft_ms": _pct_ms(ttft, 50),
+            "p99_ttft_ms": _pct_ms(ttft, 99),
+            "ttft_slo_ms": slo,
+            "slo_attainment": (round(len(met) / len(served), 4)
+                               if served else None),
+            "goodput_rps": round(len(met) / span, 3) if span > 0 else None,
+        }
+    return out
 
 
 def find_knee(points: List[Dict], factor: float = 3.0) -> Dict:

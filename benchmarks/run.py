@@ -28,7 +28,7 @@ def main() -> None:
                             table12_walltime, table13_blockparallel,
                             table14_kernel_grads, table15_decode,
                             table16_prefill, table17_conditioned,
-                            table18_load)
+                            table18_load, table19_slo)
     from benchmarks.common import emit
 
     tables = {
@@ -47,6 +47,7 @@ def main() -> None:
         "table16_prefill": table16_prefill.run_rows,
         "table17_conditioned": table17_conditioned.run_rows,
         "table18_load": table18_load.run_rows,
+        "table19_slo": table19_slo.run_rows,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

@@ -3,7 +3,8 @@ in-process ``InferenceServer`` on a tiny model, then exercise the whole
 endpoint surface: stream a request token-by-token (asserting the SSE
 reassembly equals the ``done`` event), cancel a long request mid-stream
 (pages return to the pool immediately), run a non-streaming request,
-and read ``/v1/health`` before and after a graceful drain.
+ride out admission-control sheds with a backoff-and-retry helper, and
+read ``/v1/health`` before and after a graceful drain.
 
     PYTHONPATH=src python examples/serve_client.py
 
@@ -19,22 +20,49 @@ import numpy as np
 from repro.configs import DBConfig
 from repro.configs.base import ModelConfig
 from repro.core import DiffusionBlocksModel
+from repro.launch.faults import FaultInjector
 from repro.launch.serve import ContinuousBatcher
 from repro.launch.server import (InferenceServer, request_json,
                                  stream_generate)
 
 
-def build_server():
+def build_server(*, num_slots=2, faults=None, **cb_kw):
     cfg = ModelConfig(name="client-ex", family="dense", n_layers=4,
                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
                       vocab_size=32)
     dbm = DiffusionBlocksModel(cfg, DBConfig(num_blocks=2,
                                              overlap_gamma=0.1))
     params = dbm.init(jax.random.PRNGKey(0))
-    cb = ContinuousBatcher(dbm, params, num_slots=2, max_prompt=12,
+    cb = ContinuousBatcher(dbm, params, num_slots=num_slots, max_prompt=12,
                            max_len=40, seg_len=3, page_size=4,
-                           chunk_size=4, precision="fp32")
+                           chunk_size=4, precision="fp32", faults=faults,
+                           **cb_kw)
     return InferenceServer(cb, rng=jax.random.PRNGKey(7))
+
+
+async def generate_with_retry(host, port, payload, *, max_attempts=8,
+                              base_delay=0.05):
+    """POST ``/v1/generate`` and retry on 429/503 with exponential backoff.
+
+    The server's ``Retry-After`` header (seconds, from its service-time
+    EWMA) overrides the local backoff when present — honoring it keeps a
+    shed client from hammering an overloaded server. Returns
+    ``(code, obj, attempts)`` with the first non-shed response.
+    """
+    delay = base_delay
+    for attempt in range(1, max_attempts + 1):
+        code, obj, hdrs = await request_json(
+            host, port, "POST", "/v1/generate", payload,
+            return_headers=True)
+        if code not in (429, 503):
+            return code, obj, attempt
+        hint = hdrs.get("retry-after")
+        wait = float(hint) if hint is not None else delay
+        print(f"  attempt {attempt}: {code} ({obj.get('error')}), "
+              f"retrying in {wait:.2f}s")
+        await asyncio.sleep(wait)
+        delay = min(delay * 2, 2.0)
+    return code, obj, max_attempts
 
 
 async def main():
@@ -65,6 +93,37 @@ async def main():
                                     "stream": False})
     assert code == 200 and len(out["ids"]) == 8
     print(f"request {out['request_id']}: non-streaming ids={out['ids']}")
+
+    # ---- admission control: shed + backoff-and-retry ---------------------
+    # A deliberately overloaded server (1 slot, queue depth 1, and a chaos
+    # hook stalling token delivery) sheds the probe with 429 + Retry-After;
+    # `generate_with_retry` backs off and lands once the queue drains.
+    crowded = build_server(
+        num_slots=1, max_queue=1,
+        faults=FaultInjector({"token_stall": {"every": 1, "sleep": 0.1}}))
+    await crowded.start()
+    streams = [asyncio.ensure_future(
+        stream_generate(crowded.host, crowded.port, prompt, max_new=10))]
+    while True:                                # first request must be ACTIVE
+        _, h = await request_json(crowded.host, crowded.port, "GET",
+                                  "/v1/health")
+        if h["active_slots"] >= 1 and h["queued"] == 0:
+            break
+        await asyncio.sleep(0.005)
+    streams.append(asyncio.ensure_future(     # second fills the queue
+        stream_generate(crowded.host, crowded.port, prompt, max_new=10)))
+    while (await request_json(crowded.host, crowded.port, "GET",
+                              "/v1/health"))[1]["queued"] < 1:
+        await asyncio.sleep(0.005)
+    print("overloaded server: probing with retry-on-shed")
+    code, out, attempts = await generate_with_retry(
+        crowded.host, crowded.port,
+        {"prompt": prompt, "max_new": 4, "stream": False})
+    assert code == 200 and len(out["ids"]) == 4
+    print(f"request {out['request_id']}: admitted after {attempts} "
+          f"attempt(s), ids={out['ids']}")
+    assert all(r["status"] == 200 for r in await asyncio.gather(*streams))
+    await crowded.aclose()
 
     # ---- health + graceful drain -----------------------------------------
     _, health = await request_json(host, port, "GET", "/v1/health")

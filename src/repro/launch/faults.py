@@ -1,0 +1,103 @@
+"""Deterministic fault injection for the serving engine.
+
+Chaos hooks let tests and the load harness force the engine down its rare
+paths — allocator exhaustion, engine-thread crashes, token-stream stalls —
+on a SEEDED schedule, so every failure a test provokes is reproducible
+bit-for-bit. The engine never imports randomness for this itself: a
+``FaultInjector`` is handed to ``ContinuousBatcher(faults=...)`` /
+``EngineRunner`` and consulted at named hook points; with no injector (the
+default) every hook is a no-op costing one attribute check.
+
+Hook names used by the serving stack:
+
+  ``alloc_exhaust``   ``ContinuousBatcher._alloc_page`` pretends the pool is
+                      empty (returns no page) — exercises preemption and the
+                      CoW-failure paths without actually shrinking the pool.
+  ``engine_crash``    raises ``InjectedFault`` at the top of
+                      ``ContinuousBatcher.step`` — exercises the
+                      ``EngineRunner`` supervisor restart + in-flight
+                      requeue.
+  ``token_stall``     sleeps inside token delivery — exercises client
+                      timeout / slow-stream handling in the load harness.
+
+Each hook is configured with ONE trigger spec:
+
+  {"p": 0.05}            fire independently with probability p per call
+  {"every": 40}          fire on every 40th call (1-indexed)
+  {"at": [3, 7]}         fire on exactly these call indices (1-indexed)
+
+plus optional ``{"start": a, "stop": b}`` bounds on the call index window
+(half-open: fires only while ``start <= index < stop``) and, for
+``token_stall``, ``{"sleep": seconds}``. Per-hook call counters and a
+per-hook ``RandomState`` stream make schedules independent: adding a spec
+for one hook never shifts another hook's schedule.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a chaos hook; distinguishable from organic failures so the
+    supervisor and the tests can tell injected crashes from real bugs."""
+
+
+class FaultInjector:
+    """Seeded chaos-hook scheduler. ``fire(hook)`` advances that hook's call
+    counter and reports whether the fault triggers this call; ``maybe_raise``
+    and ``maybe_sleep`` are the common consumption patterns."""
+
+    def __init__(self, specs: Dict[str, dict], seed: int = 0):
+        for name, spec in specs.items():
+            keys = {"p", "every", "at"} & set(spec)
+            if len(keys) != 1:
+                raise ValueError(
+                    f"hook {name!r} needs exactly one of p/every/at, got "
+                    f"{sorted(spec)}")
+        self.specs = {k: dict(v) for k, v in specs.items()}
+        self.seed = seed
+        self.calls: Dict[str, int] = {k: 0 for k in specs}
+        self.fired: Dict[str, int] = {k: 0 for k in specs}
+        self._rs = {k: np.random.RandomState((seed * 9176 + i) % (2**31 - 1))
+                    for i, k in enumerate(sorted(specs))}
+
+    def fire(self, hook: str) -> bool:
+        """Advance ``hook``'s schedule by one call; True when the fault
+        triggers now. Unknown hooks never fire (and aren't counted)."""
+        spec = self.specs.get(hook)
+        if spec is None:
+            return False
+        self.calls[hook] = idx = self.calls[hook] + 1
+        if not (spec.get("start", 0) <= idx < spec.get("stop", float("inf"))):
+            return False
+        if "p" in spec:
+            hit = bool(self._rs[hook].rand() < spec["p"])
+        elif "every" in spec:
+            hit = idx % spec["every"] == 0
+        else:
+            hit = idx in spec["at"]
+        if hit:
+            self.fired[hook] += 1
+        return hit
+
+    def maybe_raise(self, hook: str) -> None:
+        if self.fire(hook):
+            raise InjectedFault(
+                f"injected fault {hook!r} (call {self.calls[hook]})")
+
+    def maybe_sleep(self, hook: str, default: float = 0.05) -> None:
+        if self.fire(hook):
+            time.sleep(float(self.specs[hook].get("sleep", default)))
+
+    def stats(self) -> Dict[str, dict]:
+        return {k: {"calls": self.calls[k], "fired": self.fired[k]}
+                for k in self.specs}
+
+
+def make_injector(specs: Optional[Dict[str, dict]], seed: int = 0):
+    """None-tolerant constructor: ``make_injector(None)`` returns None so the
+    engine's hot path stays a plain ``if self.faults`` check."""
+    return FaultInjector(specs, seed) if specs else None

@@ -349,6 +349,24 @@ def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
 # Continuous batching
 # ---------------------------------------------------------------------------
 
+# Priority classes for SLO-aware scheduling: higher wins. Admission picks the
+# best (priority, earliest TTFT deadline, oldest) queued request; preemption
+# only ever spills STRICTLY lower-priority work for an admission, so classes
+# are a total preorder, not advisory hints.
+PRIORITY_CLASSES = {"batch": 0, "standard": 1, "interactive": 2}
+
+
+class AdmissionError(RuntimeError):
+    """Raised by ``submit`` when admission control sheds the request (queue
+    depth or pool pressure over threshold). ``retry_after`` is the engine's
+    service-time-based backoff hint in seconds (the HTTP frontend surfaces
+    it as a ``Retry-After`` header on the 429)."""
+
+    def __init__(self, msg: str, retry_after: float):
+        super().__init__(msg)
+        self.retry_after = float(retry_after)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -364,6 +382,15 @@ class Request:
     first_token_t: Optional[float] = None
     cancelled: bool = False       # retired early via ``cancel(rid)``
     error: Optional[str] = None   # rejection reason (non-strict scheduling)
+    # --- SLO-aware scheduling ---
+    priority: int = PRIORITY_CLASSES["standard"]
+    ttft_deadline: Optional[float] = None   # absolute wall-clock deadline
+    tpot_deadline_s: Optional[float] = None  # max seconds per output token
+    deadline_blown: bool = False  # retired by the deadline enforcer
+    # --- preemption (page spill / restore) ---
+    spilled: Optional[KVC.SpilledSlot] = None  # host snapshot while queued
+    spill_meta: Optional[dict] = None          # lengths/cond row to restore
+    preempt_count: int = 0
 
     @property
     def done(self) -> bool:
@@ -445,7 +472,10 @@ class ContinuousBatcher:
                  top_k: int = 0, precision="bf16", impl: str = "auto",
                  prefill: str = "chunked",
                  chunk_size: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 max_queue: Optional[int] = None,
+                 shed_below_pages: int = 0,
+                 faults=None):
         self.dbm, self.params = dbm, params
         chunk_size = (min(DEFAULT_CHUNK, max_prompt) if chunk_size is None
                       else chunk_size)
@@ -494,13 +524,41 @@ class ContinuousBatcher:
         self._paused: set = set()            # rids excluded from decode
         self.cancelled_count = 0
         self.token_cb: Optional[Callable[[Request, List[int]], None]] = None
+        # --- SLO scheduling / preemption / admission control / chaos ---
+        self._axes = dbm.model.paged_state_axes  # dense per-slot slot axes
+        self.max_queue = max_queue           # class-aware queue-depth shed
+        self.shed_below_pages = shed_below_pages  # pool-pressure shed (prio 0)
+        self.faults = faults                 # repro.launch.faults injector
+        self._preempt_pending: set = set()   # rids to spill at next step
+        self.preemptions = 0                 # slots spilled to host
+        self.restores = 0                    # spilled requests re-admitted
+        self.deadline_cancels = 0            # requests retired by SLO misses
+        self.shed_count = 0                  # submissions refused (429)
+        self._svc_ewma: Optional[float] = None  # submit->finish seconds
 
-    def submit(self, prompt, max_new: int, aux_inputs=None) -> int:
+    def submit(self, prompt, max_new: int, aux_inputs=None, *,
+               priority="standard", ttft_slo_s: Optional[float] = None,
+               tpot_slo_s: Optional[float] = None) -> int:
         """Queue a request. ``aux_inputs``: optional per-request conditioning
         — {"image_embs": (Sk, d)} / {"audio_embs": (Sk, d)} numpy/jax arrays
         WITHOUT a batch dim. The fingerprint for conditioning-aware prefix
         sharing is taken here (content hash); the encoder itself runs at
-        admission."""
+        admission.
+
+        ``priority`` (a ``PRIORITY_CLASSES`` name or an int) orders admission
+        and selects preemption victims; ``ttft_slo_s`` / ``tpot_slo_s`` are
+        relative SLOs — a request that blows one is retired with its partial
+        output and ``error`` set, never silently served late. Admission
+        control (``max_queue`` / ``shed_below_pages``) raises
+        ``AdmissionError`` instead of queueing; the backlog check only counts
+        queued work at >= this request's priority, so under mixed overload
+        the low classes shed first while the high classes still admit."""
+        if isinstance(priority, str):
+            if priority not in PRIORITY_CLASSES:
+                raise ValueError(f"unknown priority class {priority!r}: "
+                                 f"expected {sorted(PRIORITY_CLASSES)}")
+            priority = PRIORITY_CLASSES[priority]
+        priority = int(priority)
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert prompt.size <= self.max_prompt, "prompt exceeds max_prompt"
         assert prompt.size + max_new <= self.max_len, "request exceeds max_len"
@@ -519,11 +577,29 @@ class ContinuousBatcher:
                     f"{k}: {v.shape[0]} tokens exceed the conditioning " \
                     f"block capacity {cap}"
         with self._lock:
+            if self.max_queue is not None:
+                backlog = sum(1 for r in self.queue if r.priority >= priority)
+                if backlog >= self.max_queue:
+                    self.shed_count += 1
+                    raise AdmissionError(
+                        f"queue depth {backlog} at priority >= {priority} "
+                        f"over threshold {self.max_queue}",
+                        self.retry_after_hint())
+            if (self.shed_below_pages and priority <= 0
+                    and len(self.free_pages) < self.shed_below_pages):
+                self.shed_count += 1
+                raise AdmissionError(
+                    f"pool pressure: {len(self.free_pages)} free pages below "
+                    f"threshold {self.shed_below_pages} (batch class shed)",
+                    self.retry_after_hint())
             rid = self._next_rid
             self._next_rid += 1
         req = Request(rid, prompt, max_new, aux_inputs=aux_inputs or None,
-                      cond_fp=KVC.conditioning_fingerprint(aux_inputs))
+                      cond_fp=KVC.conditioning_fingerprint(aux_inputs),
+                      priority=priority, tpot_deadline_s=tpot_slo_s)
         req.submit_t = time.time()
+        if ttft_slo_s is not None:
+            req.ttft_deadline = req.submit_t + float(ttft_slo_s)
         with self._lock:
             self.queue.append(req)
         return rid
@@ -554,9 +630,34 @@ class ContinuousBatcher:
         with self._lock:
             self._paused.discard(rid)
 
+    def preempt(self, rid: int) -> bool:
+        """Force-preempt an ADMITTED request (thread-safe, applied at the
+        next ``step`` boundary): its slot state spills to host memory, its
+        pages and slot free, and it re-queues for restore when capacity
+        allows. The scheduler invokes the same mechanism automatically under
+        pool pressure; this entry point exists for tests and operators.
+        Returns False when ``rid`` is not currently in a slot."""
+        with self._lock:
+            known = any(r is not None and r.rid == rid for r in self.slot_req)
+            if known:
+                self._preempt_pending.add(rid)
+        return known
+
+    def retry_after_hint(self) -> float:
+        """Backoff hint for shed requests: the smoothed submit→finish
+        service time, clipped to [0.1s, 5s] (0.5s before any completion)."""
+        return float(min(5.0, max(0.1, self._svc_ewma or 0.5)))
+
+    def _note_service(self, dt: float):
+        a = 0.2
+        self._svc_ewma = (dt if self._svc_ewma is None
+                          else a * dt + (1 - a) * self._svc_ewma)
+
     # ---- page accounting ---------------------------------------------
     def _alloc_page(self) -> Optional[int]:
         """Pop a free page, evicting prefix-cache entries under pressure."""
+        if self.faults is not None and self.faults.fire("alloc_exhaust"):
+            return None              # injected exhaustion: pretend pool empty
         if not self.free_pages and self.prefix is not None:
             self.prefix.evict(self.page_refs, self.free_pages, need=1)
         if not self.free_pages:
@@ -631,15 +732,45 @@ class ContinuousBatcher:
         self.kv = fn(self.params, self.kv, aux, jnp.asarray(slot, jnp.int32))
         self.cond_lengths[slot] = next(iter(req.aux_inputs.values())).shape[0]
 
+    def _order_key(self, r: Request):
+        return (-r.priority,
+                r.ttft_deadline if r.ttft_deadline is not None
+                else float("inf"),
+                r.rid)
+
+    def _pop_best(self) -> Optional[Request]:
+        """Pop the best queued candidate: highest priority class first, then
+        earliest TTFT deadline, then oldest rid (FIFO within a class —
+        preempted requests keep their original rid, so a restore naturally
+        goes ahead of newer peers)."""
+        with self._lock:
+            if not self.queue:
+                return None
+            i = min(range(len(self.queue)),
+                    key=lambda i: self._order_key(self.queue[i]))
+            req = self.queue[i]
+            del self.queue[i]
+        return req
+
+    def _requeue(self, req: Request):
+        with self._lock:
+            self.queue.appendleft(req)
+
     def _admit(self) -> int:
         new_slots = np.zeros(self.num_slots, bool)
         admitted = []
+        budget = self.num_slots     # preemptions allowed per admission pass
         for s in range(self.num_slots):
-            if self.active[s] or not self.queue:
+            if self.active[s]:
                 continue
-            req = self.queue[0]
+            req = self._pop_best()
+            if req is None:
+                break
+            # a spilled request restores into PRIVATE pages — its snapshot
+            # already holds the prefix content, so no prefix matching
+            restoring = req.spilled is not None
             match = (self.prefix.match(req.prompt, req.cond_fp)
-                     if self.prefix is not None
+                     if self.prefix is not None and not restoring
                      else KVC.PrefixMatch([], 0, 0))
             # PIN every matched page before any eviction can run: under pool
             # pressure evict() drops cache-held refs deepest-first, and
@@ -655,24 +786,56 @@ class ContinuousBatcher:
             need = total - len(match.pages) + (1 if match.tail_tokens else 0)
             if need > len(self.free_pages) and self.prefix is not None:
                 self.prefix.evict(self.page_refs, self.free_pages, need)
+            # preempt STRICTLY lower-priority running work for the shortfall.
+            # Victims never outrank the candidate, so a preempted request can
+            # never preempt its preemptor back; the per-pass budget bounds
+            # the spill churn a single admission wave can cause.
+            while need > len(self.free_pages) and budget > 0:
+                victims = [v for v in range(self.num_slots) if self.active[v]
+                           and self.slot_req[v].priority < req.priority]
+                if not victims:
+                    break
+                v = min(victims, key=lambda v: (self.slot_req[v].priority,
+                                                -self.slot_req[v].rid))
+                self._preempt_slot(v)
+                budget -= 1
             if need > len(self.free_pages):
                 self._release_pages(match.pages)   # unpin; retry next round
+                self._requeue(req)
                 break                      # wait for retirements
-            self.queue.popleft()
             row: List[int] = []
+            ok = True
+            pinned_tail = [match.pages[-1]] if match.tail_tokens else []
             shared_full = (match.pages[:-1] if match.tail_tokens
                            else match.pages)
             row.extend(shared_full)        # pin becomes the slot's map ref
             if match.tail_tokens:          # copy-on-write the boundary page
                 dst = self._alloc_page()
-                self.kv = KVC.copy_pool_pages(self.kv, match.pages[-1], dst)
-                self.cow_copies += 1
-                self._release_pages([match.pages[-1]])   # unpin the source
-                row.append(dst)
-            while len(row) < total:
-                row.append(self._alloc_page())
+                if dst is None:
+                    ok = False
+                else:
+                    self.kv = KVC.copy_pool_pages(self.kv, match.pages[-1],
+                                                  dst)
+                    self.cow_copies += 1
+                    self._release_pages(pinned_tail)   # unpin the source
+                    pinned_tail = []
+                    row.append(dst)
+            while ok and len(row) < total:
+                p = self._alloc_page()
+                if p is None:
+                    ok = False
+                else:
+                    row.append(p)
+            if not ok:
+                # the allocator refused mid-build (fault injection, or a
+                # racing eviction): unwind every ref this admission took and
+                # retry next step — never leave a half-mapped slot
+                self._release_pages(row + pinned_tail)
+                self._requeue(req)
+                break
             req.pages = row
-            req.shared_tokens = match.n_tokens
+            if not restoring:
+                req.shared_tokens = match.n_tokens
             if self.prefix is not None and match.n_tokens > 0:
                 self.prefix.hits += 1
                 self.prefix.tokens_shared += match.n_tokens
@@ -686,15 +849,18 @@ class ContinuousBatcher:
             self.slot_req[s] = req
             self.active[s] = True
             new_slots[s] = True
-            admitted.append((s, req))
+            admitted.append((s, req, restoring))
         if new_slots.any():
             # recycled slots must not inherit the previous occupant's
             # per-slot state (recurrent mamba/xLSTM, cross blocks); paged KV
             # needs no reset — length masking hides stale pages.
             self.kv = self.dbm.model.reset_paged_slots(
                 self.kv, jnp.asarray(new_slots))
-        for s, req in admitted:      # AFTER the reset: encode-once-per-request
-            self._write_conditioning(s, req)
+        for s, req, restoring in admitted:   # AFTER the reset:
+            if restoring:                    # scatter the spill snapshot back
+                self._restore_into_slot(s, req)
+            else:                            # encode-once-per-request
+                self._write_conditioning(s, req)
         return int(new_slots.sum())
 
     def _register_prefixes(self):
@@ -712,6 +878,151 @@ class ContinuousBatcher:
                                [int(self.table[s, i]) for i in range(npg)],
                                self.page_refs, req.cond_fp)
             req.registered = True
+
+    # ---- preemption: page spill / restore ----------------------------
+    def _preempt_slot(self, s: int) -> Request:
+        """Spill slot ``s`` to host memory and free it: the content of its
+        USED pages (``pages_for(lengths[s])`` — later pages are scratch
+        hidden by length-aware masking) and its dense per-slot rows
+        (recurrent / cross state, ``model.paged_state_axes``) snapshot to
+        numpy, its page refs release, and the request re-queues at the FRONT
+        with its original rid, partial output intact. Restore happens at a
+        later admission (``_restore_into_slot``); the round trip is
+        rng-neutral — no dispatch runs for a spilled slot, so nothing
+        perturbs the decode rng stream (same discipline as ``pause``)."""
+        req = self.slot_req[s]
+        n_used = KVC.pages_for(int(self.lengths[s]), self.page_size)
+        used = [int(self.table[s, i]) for i in range(n_used)]
+        req.spilled = KVC.spill_slot(self.kv, s, used, self._axes)
+        req.spill_meta = dict(length=int(self.lengths[s]),
+                              cond_length=int(self.cond_lengths[s]))
+        req.preempt_count += 1
+        self.preemptions += 1
+        self._release_pages(req.pages)
+        req.pages = []
+        self.table[s, :] = KVC.TRASH_PAGE
+        self.active[s] = False
+        self.cond_lengths[s] = 0
+        self.lengths[s] = self.plens[s] = self.stop_at[s] = 0
+        self.slot_req[s] = None
+        self._requeue(req)
+        return req
+
+    def _restore_into_slot(self, s: int, req: Request):
+        """Scatter a spilled request's snapshot into its freshly mapped slot
+        (after ``reset_paged_slots`` zeroed the row): page content lands in
+        the slot's new private pages, dense rows overwrite the reset state,
+        and the scheduling row resumes at the spilled length. The physical
+        page ids usually differ from the spill-time ones — only the logical
+        order matters."""
+        meta, n = req.spill_meta, req.spilled.n_pages
+        self.kv = KVC.restore_slot(self.kv, s, req.pages[:n], req.spilled,
+                                   self._axes)
+        self.lengths[s] = meta["length"]
+        self.cond_lengths[s] = meta["cond_length"]
+        req.spilled = req.spill_meta = None
+        self.restores += 1
+
+    def _apply_preemptions(self):
+        """Apply pending ``preempt`` calls (scheduling thread, between
+        dispatches) — the forced-preemption twin of
+        ``_apply_cancellations``."""
+        with self._lock:
+            pre, self._preempt_pending = self._preempt_pending, set()
+        if not pre:
+            return
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is not None and self.active[s] and req.rid in pre:
+                self._preempt_slot(s)
+
+    def _make_writable_or_preempt(self, s: int, lo: int, hi: int) -> bool:
+        """Copy-on-write with a preemption fallback — the no-deadlock
+        replacement for raising on pool exhaustion. On CoW failure the
+        lowest-priority active peer at <= this slot's priority spills
+        (freeing its pages) and the CoW retries; when no peer is eligible,
+        ``s`` ITSELF spills — spilling needs no allocation, so this always
+        terminates with the pool whole. Returns False when ``s`` was
+        spilled (the caller excludes it from the dispatch)."""
+        while True:
+            if self._make_writable(s, lo, hi):
+                return True
+            me = self.slot_req[s]
+            victims = [v for v in range(self.num_slots)
+                       if v != s and self.active[v]
+                       and self.slot_req[v].priority <= me.priority]
+            if not victims:
+                self._preempt_slot(s)
+                return False
+            v = min(victims, key=lambda v: (self.slot_req[v].priority,
+                                            -self.slot_req[v].rid))
+            self._preempt_slot(v)
+
+    # ---- SLO deadlines -----------------------------------------------
+    def _enforce_deadlines(self) -> List[Request]:
+        """Retire deadline-blown requests with their partial output: queued
+        requests past their TTFT deadline are dropped before wasting
+        admission; active slots are retired when the first token is late
+        (TTFT) or the output pace falls behind ``tpot_deadline_s`` (measured
+        over emitted tokens; paused slots are the CONSUMER's stall, not
+        ours, and are exempt while paused)."""
+        now = time.time()
+        out: List[Request] = []
+        with self._lock:
+            kept: collections.deque = collections.deque()
+            for r in self.queue:
+                if (r.ttft_deadline is not None and r.first_token_t is None
+                        and now > r.ttft_deadline):
+                    r.deadline_blown = True
+                    r.error = "ttft deadline exceeded"
+                    out.append(r)
+                else:
+                    kept.append(r)
+            self.queue = kept
+            paused = set(self._paused)
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None or not self.active[s] or req.rid in paused:
+                continue
+            blown = None
+            if (req.ttft_deadline is not None and req.first_token_t is None
+                    and now > req.ttft_deadline):
+                blown = "ttft deadline exceeded"
+            elif (req.tpot_deadline_s is not None and len(req.out) >= 2
+                  and ((now - req.first_token_t) / (len(req.out) - 1)
+                       > req.tpot_deadline_s)):
+                blown = "tpot deadline exceeded"
+            if blown:
+                req.deadline_blown = True
+                req.error = blown
+                out.append(self._retire_slot(s))
+        self.deadline_cancels += len(out)
+        return out
+
+    def recover(self):
+        """Crash recovery (the ``EngineRunner`` supervisor calls this before
+        restarting the engine thread): spill every active slot back to the
+        queue, so the fresh loop re-admits and resumes them with no token
+        loss or duplication — ``req.out`` persists and ``_collect`` only
+        appends newly emitted tokens."""
+        for s in range(self.num_slots):
+            if self.active[s]:
+                self._preempt_slot(s)
+
+    def abort_all(self, msg: str) -> List[Request]:
+        """Error out every queued and active request (the supervisor giving
+        up after repeated crashes): slots retire, pages return to the pool,
+        and each request carries ``error=msg`` so its stream can finish
+        cleanly instead of hanging. Returns the aborted requests."""
+        with self._lock:
+            reqs = list(self.queue)
+            self.queue.clear()
+        for s in range(self.num_slots):
+            if self.slot_req[s] is not None and self.active[s]:
+                reqs.append(self._retire_slot(s))
+        for r in reqs:
+            r.error = r.error or msg
+        return reqs
 
     def _retire_slot(self, s: int) -> Request:
         """Free slot ``s``: release its request's page refs (shared pages
@@ -739,6 +1050,7 @@ class ContinuousBatcher:
             if req is None or not self.active[s]:
                 continue
             if self.lengths[s] >= self.stop_at[s]:
+                self._note_service(time.time() - req.submit_t)
                 out.append(self._retire_slot(s))
         return out
 
@@ -778,6 +1090,8 @@ class ContinuousBatcher:
             if toks and req.first_token_t is None:
                 req.first_token_t = now
             req.out.extend(toks)
+            if toks and self.faults is not None:
+                self.faults.maybe_sleep("token_stall")
             if toks and self.token_cb is not None:
                 self.token_cb(req, toks)
 
@@ -808,17 +1122,39 @@ class ContinuousBatcher:
         queue can never be admitted (pool too small and nothing running);
         ``strict=False`` — the serving frontend — instead pops that request
         with ``req.error`` set so one impossible request cannot wedge the
-        engine loop."""
+        engine loop.
+
+        Copy-on-write exhaustion no longer raises in EITHER mode: the
+        scheduler spills the lowest-priority active slot to host memory
+        instead (``_make_writable_or_preempt``), so pool pressure degrades
+        to preemption latency, never a deadlock or a lost request."""
+        if self.faults is not None:
+            # injected BEFORE any bookkeeping mutates, so a crash at this
+            # hook leaves the batcher consistent for recover()
+            self.faults.maybe_raise("engine_crash")
         finished = self._apply_cancellations()
+        self._apply_preemptions()
+        finished.extend(self._enforce_deadlines())
         if not (self.queue or self.active.any()):
             return rng, finished
         if not self._admit() and not self.active.any():
+            # nothing running and nothing admitted: IMPOSSIBLE only when the
+            # head request needs more pages than the pool can ever hold — a
+            # transient allocator refusal (fault injection, racing eviction)
+            # just retries next step
+            req = self._pop_best()
+            if req is None:
+                return rng, finished
+            need = KVC.pages_for(len(req.prompt) + req.max_new,
+                                 self.page_size)
+            if need <= self.total_pages - 1:
+                self._requeue(req)
+                return rng, finished
             msg = ("page pool too small for the next queued request "
-                   f"(free={len(self.free_pages)} pages)")
+                   f"(needs {need} of {self.total_pages - 1} pages)")
             if strict:
+                self._requeue(req)
                 raise RuntimeError(msg)
-            with self._lock:
-                req = self.queue.popleft()
             req.error = msg
             finished.append(req)
             return rng, finished
@@ -828,11 +1164,13 @@ class ContinuousBatcher:
             # chunk_size tokens at its own offset; decode-only slots see
             # n_valid == 0 inside the program.
             for s in np.nonzero(in_prompt)[0]:
+                if not self.active[s]:
+                    continue        # spilled by an earlier slot's CoW relief
                 lo = int(self.lengths[s])
                 hi = min(lo + self.chunk_size, int(self.plens[s]))
-                if not self._make_writable(s, lo, hi):
-                    raise RuntimeError("page pool exhausted during "
-                                       "copy-on-write (prefill)")
+                self._make_writable_or_preempt(s, lo, hi)
+            in_prompt = self.active & (self.lengths < self.plens)
+        if self.chunked and in_prompt.any():
             self.kv, lengths = self.eng._prefill_chunk1(
                 self.params, self.kv, jnp.asarray(self.table),
                 jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),
@@ -846,11 +1184,13 @@ class ContinuousBatcher:
         decode_ready = decode_ready & ~self._paused_mask()
         if decode_ready.any():
             for s in np.nonzero(decode_ready)[0]:
+                if not self.active[s]:
+                    continue        # spilled by an earlier slot's CoW relief
                 lo = int(self.lengths[s])
                 hi = min(lo + self.seg_len, int(self.stop_at[s]))
-                if not self._make_writable(s, lo, hi):
-                    raise RuntimeError("page pool exhausted during "
-                                       "copy-on-write (decode)")
+                self._make_writable_or_preempt(s, lo, hi)
+            decode_ready = decode_ready & self.active
+        if decode_ready.any():
             self.kv, lengths, rng, emitted = self.eng._serve(
                 self.params, self.kv, jnp.asarray(self.table),
                 jnp.asarray(self.lengths), jnp.asarray(self.prompt_buf),

@@ -22,6 +22,15 @@ module puts an asyncio server in front of the batcher:
     forces the engine to buffer unboundedly or stall neighbors.
   * graceful drain: ``InferenceServer.drain()`` rejects new work with 503,
     completes everything in flight, then stops the engine thread.
+  * SLO-aware scheduling: requests carry ``priority`` (batch / standard /
+    interactive) and ``ttft_slo_ms`` / ``tpot_slo_ms`` deadlines; admission
+    control sheds over-threshold load with 429 + ``Retry-After`` and the
+    scheduler preempts (page spill/restore) low-priority work under pool
+    pressure — see ``repro.launch.serve``.
+  * supervised engine thread: an exception escaping ``step()`` spills every
+    active slot and restarts the loop (bounded by ``max_restarts``); past
+    the budget all in-flight streams finish with a terminal error instead
+    of hanging. ``GET /v1/health`` exposes the full robustness picture.
 
 Threading model: the batcher loop runs in ONE dedicated engine thread
 (``EngineRunner``) — jitted dispatches never run on the event loop. The
@@ -47,7 +56,8 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.launch.serve import ContinuousBatcher, Request
+from repro.launch.serve import (AdmissionError, ContinuousBatcher,
+                                PRIORITY_CLASSES, Request)
 
 DEFAULT_QUEUE_CAP = 256      # tokens a consumer may fall behind before pause
 
@@ -127,11 +137,22 @@ class EngineRunner:
     """Owns the dedicated engine thread: a loop of ``batcher.step()`` calls
     that routes each request's tokens into its ``TokenStream`` and finishes
     streams as requests retire. Idles on an event when there is no work;
-    ``stop()`` drains everything in flight before the thread exits."""
+    ``stop()`` drains everything in flight before the thread exits.
 
-    def __init__(self, batcher: ContinuousBatcher, rng=None):
+    SUPERVISION: an exception escaping ``step()`` (a real bug, or an
+    injected ``engine_crash``) no longer strands every in-flight stream.
+    The loop catches it, spills every active slot back to the queue
+    (``cb.recover()`` — partial output intact, no token duplication) and
+    restarts stepping, up to ``max_restarts`` times. Past that the engine
+    gives up: every queued/active request is errored and its stream
+    finished (``cb.abort_all``), so clients get a terminal ``error`` event
+    instead of a hung connection."""
+
+    def __init__(self, batcher: ContinuousBatcher, rng=None,
+                 max_restarts: int = 3):
         self.cb = batcher
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.max_restarts = max_restarts
         self._streams: Dict[int, TokenStream] = {}
         self._orphans: Dict[int, List[List[int]]] = {}
         self._slock = threading.Lock()
@@ -140,6 +161,10 @@ class EngineRunner:
         self._thread = threading.Thread(target=self._main,
                                         name="engine", daemon=True)
         self.served = 0
+        self.crashes = 0             # engine-thread exceptions caught
+        self.restarts = 0            # successful supervisor recoveries
+        self.last_error: Optional[str] = None
+        self.gave_up = False         # crash budget exhausted; engine dead
         batcher.token_cb = self._on_tokens
 
     def start(self):
@@ -188,6 +213,22 @@ class EngineRunner:
         if stream is not None:
             stream.finish(req)
 
+    def _fail_inflight(self, msg: str):
+        """Terminal failure: error + finish every request the engine will
+        never serve, including streams attached for requests the batcher no
+        longer knows (nothing may hang waiting on a dead engine)."""
+        self.gave_up = True
+        for req in self.cb.abort_all(msg):
+            self._finish(req)
+        with self._slock:
+            leftover = list(self._streams.items())
+            self._streams.clear()
+            self._orphans.clear()
+        for rid, stream in leftover:
+            req = Request(rid, np.zeros(0, np.int32), 0)
+            req.error = msg
+            stream.finish(req)
+
     def _main(self):
         while True:
             if not self.cb.has_work():
@@ -197,7 +238,19 @@ class EngineRunner:
                 self._work.clear()
                 continue
             d0 = self.cb.eng.dispatches
-            self.rng, finished = self.cb.step(self.rng, strict=False)
+            try:
+                self.rng, finished = self.cb.step(self.rng, strict=False)
+            except Exception as e:      # noqa: BLE001 — supervisor boundary
+                self.crashes += 1
+                self.last_error = f"{type(e).__name__}: {e}"
+                if self.crashes > self.max_restarts:
+                    self._fail_inflight(
+                        f"engine failed after {self.crashes} crashes "
+                        f"(last: {self.last_error})")
+                    break
+                self.cb.recover()       # spill + requeue every active slot
+                self.restarts += 1
+                continue
             for req in finished:
                 self._finish(req)
             if not finished and self.cb.eng.dispatches == d0:
@@ -267,9 +320,11 @@ class InferenceServer:
 
     def __init__(self, batcher: ContinuousBatcher, *, host: str = "127.0.0.1",
                  port: int = 0, queue_cap: int = DEFAULT_QUEUE_CAP,
-                 aux_registry: Optional[dict] = None, rng=None):
+                 aux_registry: Optional[dict] = None, rng=None,
+                 max_restarts: int = 3):
         self.cb = batcher
-        self.runner = EngineRunner(batcher, rng=rng)
+        self.runner = EngineRunner(batcher, rng=rng,
+                                   max_restarts=max_restarts)
         self.host, self._want_port = host, port
         self.queue_cap = queue_cap
         self.aux_registry = dict(aux_registry or {})
@@ -339,9 +394,15 @@ class InferenceServer:
                 pass
 
     def stats(self) -> dict:
+        """``GET /v1/health`` payload: everything an external load balancer
+        needs for shed/route decisions — live queue depth, slot and page
+        headroom, drain state — plus the robustness counters (preemptions,
+        SLO cancels, sheds, supervisor crash/restart tallies)."""
         cb = self.cb
+        active = int(cb.active.sum())
         return {
-            "active_slots": int(cb.active.sum()),
+            "active_slots": active,
+            "free_slots": cb.num_slots - active,
             "num_slots": cb.num_slots,
             "queued": len(cb.queue),
             "free_pages": len(cb.free_pages),
@@ -350,6 +411,15 @@ class InferenceServer:
             "cancelled": cb.cancelled_count,
             "backpressure_pauses": self.backpressure_pauses,
             "draining": self.draining,
+            "max_queue": cb.max_queue,
+            "shed": cb.shed_count,
+            "preemptions": cb.preemptions,
+            "restores": cb.restores,
+            "deadline_cancels": cb.deadline_cancels,
+            "engine_crashes": self.runner.crashes,
+            "engine_restarts": self.runner.restarts,
+            "engine_alive": (self.runner._thread.is_alive()
+                             and not self.runner.gave_up),
         }
 
     def _on_pause(self, rid: int):
@@ -388,12 +458,27 @@ class InferenceServer:
         if aux is not None and aux not in self.aux_registry:
             known = sorted(self.aux_registry)
             return f"unknown aux reference {aux!r} (registered: {known})"
+        prio = payload.get("priority")
+        if prio is not None and not (
+                isinstance(prio, int) and not isinstance(prio, bool)
+                or prio in PRIORITY_CLASSES):
+            return (f"priority must be an int or one of "
+                    f"{sorted(PRIORITY_CLASSES)}, got {prio!r}")
+        for k in ("ttft_slo_ms", "tpot_slo_ms"):
+            v = payload.get(k)
+            if v is not None and not (isinstance(v, (int, float))
+                                      and not isinstance(v, bool) and v > 0):
+                return f"{k} must be a positive number, got {v!r}"
         return None
 
     async def _generate(self, reader, writer, body):
-        if self.draining:
+        retry = f"{self.cb.retry_after_hint():.1f}"
+        if self.draining or self.runner.gave_up:
+            why = "server draining" if self.draining else "engine failed"
             writer.write(_response("503 Service Unavailable",
-                                   {"error": "server draining"}))
+                                   {"error": why,
+                                    "retry_after_s": float(retry)},
+                                   extra=[("retry-after", retry)]))
             await writer.drain()
             return
         try:
@@ -408,9 +493,24 @@ class InferenceServer:
         max_new = payload.get("max_new", 16)
         aux = (self.aux_registry[payload["aux"]]
                if payload.get("aux") is not None else None)
+        ttft = payload.get("ttft_slo_ms")
+        tpot = payload.get("tpot_slo_ms")
         try:
             rid = self.cb.submit(np.asarray(payload["prompt"], np.int32),
-                                 max_new, aux_inputs=aux)
+                                 max_new, aux_inputs=aux,
+                                 priority=payload.get("priority", "standard"),
+                                 ttft_slo_s=(ttft / 1e3
+                                             if ttft is not None else None),
+                                 tpot_slo_s=(tpot / 1e3
+                                             if tpot is not None else None))
+        except AdmissionError as e:
+            retry = f"{e.retry_after:.1f}"
+            writer.write(_response("429 Too Many Requests",
+                                   {"error": str(e),
+                                    "retry_after_s": float(retry)},
+                                   extra=[("retry-after", retry)]))
+            await writer.drain()
+            return
         except (ValueError, AssertionError) as e:
             writer.write(_response("400 Bad Request", {"error": str(e)}))
             await writer.drain()
@@ -430,6 +530,9 @@ class InferenceServer:
                "cancelled": bool(req.cancelled)}
         if req.ttft is not None:
             out["ttft_ms"] = round(req.ttft * 1e3, 3)
+        out["preempted"] = req.preempt_count
+        if req.deadline_blown:
+            out["deadline_blown"] = True
         return out
 
     async def _respond_once(self, writer, rid: int, stream: TokenStream):
@@ -438,8 +541,10 @@ class InferenceServer:
             _, done = await stream.next_batch()
         req = stream.req
         if req.error:
-            writer.write(_response("503 Service Unavailable",
-                                   {"request_id": rid, "error": req.error}))
+            # deadline-blown / failed requests still deliver their partial
+            # output alongside the error
+            payload = dict(self._final_payload(rid, req), error=req.error)
+            writer.write(_response("503 Service Unavailable", payload))
         else:
             writer.write(_response("200 OK", self._final_payload(rid, req)))
         await writer.drain()
@@ -480,8 +585,8 @@ class InferenceServer:
             req = stream.req
             if not disconnected:
                 if req.error:
-                    writer.write(_sse_event("error", {
-                        "request_id": rid, "error": req.error}))
+                    writer.write(_sse_event("error", dict(
+                        self._final_payload(rid, req), error=req.error)))
                 else:
                     writer.write(_sse_event("done",
                                             self._final_payload(rid, req)))
@@ -508,8 +613,10 @@ async def _read_status_headers(reader):
 
 
 async def request_json(host: str, port: int, method: str, path: str,
-                       payload=None):
-    """One JSON request/response roundtrip -> (status_code, object)."""
+                       payload=None, *, return_headers: bool = False):
+    """One JSON request/response roundtrip -> (status_code, object), plus
+    the response-header dict when ``return_headers`` is set (Retry-After
+    inspection)."""
     reader, writer = await asyncio.open_connection(host, port)
     try:
         body = b"" if payload is None else json.dumps(payload).encode()
@@ -520,7 +627,8 @@ async def request_json(host: str, port: int, method: str, path: str,
         code, headers = await _read_status_headers(reader)
         n = int(headers.get("content-length", 0) or 0)
         raw = await reader.readexactly(n) if n else await reader.read()
-        return code, (json.loads(raw) if raw else None)
+        obj = json.loads(raw) if raw else None
+        return (code, obj, headers) if return_headers else (code, obj)
     finally:
         writer.close()
         try:
@@ -549,25 +657,37 @@ async def sse_events(reader):
 async def stream_generate(host: str, port: int, prompt, max_new: int, *,
                           aux: Optional[str] = None,
                           cancel_after: Optional[int] = None,
-                          slow_consumer_s: float = 0.0) -> dict:
+                          slow_consumer_s: float = 0.0,
+                          priority=None, ttft_slo_ms=None, tpot_slo_ms=None,
+                          abort_after: Optional[int] = None) -> dict:
     """Stream one request; returns reassembled output + timing.
 
     ``cancel_after=N`` issues ``POST /v1/cancel/<rid>`` once >= N tokens
-    have arrived (exercises mid-stream cancellation). ``slow_consumer_s``
-    sleeps between event reads (exercises backpressure). Returns a dict:
-    ids, request_id, events (count), token_times (monotonic stamps per
-    token event), final (the done/error payload), status.
+    have arrived (exercises mid-stream cancellation); ``abort_after=N``
+    instead closes the connection abruptly with NO cancel RPC — the
+    server's disconnect monitor must notice (disconnect-storm chaos).
+    ``slow_consumer_s`` sleeps between event reads (exercises
+    backpressure). ``priority`` / ``ttft_slo_ms`` / ``tpot_slo_ms`` pass
+    through to the scheduler. Returns a dict: ids, request_id, events
+    (count), token_times (monotonic stamps per token event), final (the
+    done/error payload), status, retry_after (seconds, on 429/503).
     """
     t0 = time.monotonic()
     payload = {"prompt": [int(t) for t in prompt], "max_new": int(max_new),
                "stream": True}
     if aux is not None:
         payload["aux"] = aux
+    if priority is not None:
+        payload["priority"] = priority
+    if ttft_slo_ms is not None:
+        payload["ttft_slo_ms"] = ttft_slo_ms
+    if tpot_slo_ms is not None:
+        payload["tpot_slo_ms"] = tpot_slo_ms
     body = json.dumps(payload).encode()
     reader, writer = await asyncio.open_connection(host, port)
     result = {"ids": [], "request_id": None, "events": 0, "final": None,
               "token_times": [], "token_counts": [], "status": None,
-              "submit_t": t0}
+              "submit_t": t0, "retry_after": None, "aborted": False}
     try:
         writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: {host}\r\n"
                       f"content-type: application/json\r\n"
@@ -576,6 +696,8 @@ async def stream_generate(host: str, port: int, prompt, max_new: int, *,
         code, headers = await _read_status_headers(reader)
         result["status"] = code
         if code != 200:
+            if "retry-after" in headers:
+                result["retry_after"] = float(headers["retry-after"])
             n = int(headers.get("content-length", 0) or 0)
             raw = await reader.readexactly(n) if n else b""
             result["final"] = json.loads(raw) if raw else None
@@ -590,6 +712,10 @@ async def stream_generate(host: str, port: int, prompt, max_new: int, *,
                 result["ids"].extend(data["ids"])
                 result["token_times"].append(time.monotonic())
                 result["token_counts"].append(len(data["ids"]))
+                if (abort_after is not None
+                        and len(result["ids"]) >= abort_after):
+                    result["aborted"] = True   # hard disconnect, no RPC
+                    return result
                 if (cancel_after is not None and not cancelled_sent
                         and len(result["ids"]) >= cancel_after):
                     cancelled_sent = True
@@ -643,7 +769,9 @@ def build_batcher_from_args(args):
         top_k=args.top_k, precision=args.precision, impl=args.impl,
         prefill=args.prefill,
         chunk_size=min(args.chunk_size, max(args.prompt_len, 1)),
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache,
+        max_queue=getattr(args, "max_queue", None),
+        shed_below_pages=getattr(args, "shed_below_pages", 0))
     return dbm, params, cb, aux_registry
 
 
@@ -671,6 +799,13 @@ def add_server_args(ap: argparse.ArgumentParser):
     ap.add_argument("--queue-cap", type=int, default=DEFAULT_QUEUE_CAP,
                     help="tokens a slow consumer may fall behind before "
                          "its slot is paused (backpressure)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission control: shed (429 + Retry-After) when "
+                         "the backlog at >= the request's priority reaches "
+                         "this depth (default: unbounded)")
+    ap.add_argument("--shed-below-pages", type=int, default=0,
+                    help="admission control: shed batch-class requests "
+                         "while free pages are below this threshold")
 
 
 async def _serve_forever(args):

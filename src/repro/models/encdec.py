@@ -291,6 +291,11 @@ class EncDecModel(BaseModel):
         return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
                                                  slot_mask, 1))
 
+    @property
+    def paged_state_axes(self) -> dict:
+        # cross (encoder) blocks are (units, B, frames, ...): batch axis 1
+        return {"cross": 1}
+
     # ---- conditioning (stubbed mel/conv frontend + real encoder stack) ---
     @property
     def max_cond_tokens(self) -> int:

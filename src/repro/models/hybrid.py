@@ -195,6 +195,11 @@ class HybridModel(BaseModel):
         return dict(cache, mamba=KVC.reset_slots(cache["mamba"], init,
                                                  slot_mask, 2))
 
+    @property
+    def paged_state_axes(self) -> dict:
+        # mamba state leaves are (units, inner, B, ...): batch axis 2
+        return {"mamba": 2}
+
     def init_paged_cache(self, num_slots, n_pages, page_size, policy=None):
         """Shared-attention KV is paged (bf16 under the serving policy); the
         mamba states are O(1) per slot and follow the family's fp32-state

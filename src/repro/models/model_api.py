@@ -80,6 +80,16 @@ class BaseModel:
         cross blocks override."""
         return cache
 
+    @property
+    def paged_state_axes(self) -> dict:
+        """Slot axis of every DENSE (non-paged) per-slot subtree in the
+        family's paged cache, keyed by top-level cache key — what
+        ``repro.nn.cache.spill_slot``/``restore_slot`` need to snapshot a
+        slot for preemption. Purely-paged families (bare PagedKV trees)
+        return {}; families with recurrent state or fixed cross blocks
+        override to name where the per-slot rows live."""
+        return {}
+
     # ---- conditioning (aux image/audio inputs) ---------------------------
     # One code path for every consumer: the training losses and the dense
     # dry-run shapes (via blocks.make_ctx), AND the batched serving engine

@@ -169,3 +169,8 @@ class XLSTMModel(BaseModel):
         from repro.nn import cache as KVC
         init = self.init_cache(int(slot_mask.shape[0]), 1)
         return KVC.reset_slots(cache, init, slot_mask, 1)
+
+    @property
+    def paged_state_axes(self) -> dict:
+        # state leaves are (units, B, ...): batch axis 1
+        return {"slstm": 1, "mlstm": 1}

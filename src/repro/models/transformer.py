@@ -253,6 +253,11 @@ class VLMModel(BaseModel):
         return dict(cache, cross=KVC.reset_slots(cache["cross"], init,
                                                  slot_mask, 1))
 
+    @property
+    def paged_state_axes(self) -> dict:
+        # cross (image) blocks are (units, B, n_image_tokens, ...): axis 1
+        return {"cross": 1}
+
     # ---- conditioning (stubbed vision frontend) --------------------------
     @property
     def max_cond_tokens(self) -> int:

@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.nn import attention as A
 from repro.nn.layers import apply_rope
@@ -152,16 +153,34 @@ def append_paged_chunk(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
     )
 
 
+# the page axis of a PagedKV leaf counted from the END: leaves are
+# (*units, P, psz, KV, hd) with a VARIABLE number of leading unit axes
+# (VLM stacks (n_units, k_self, P, ...)), so only trailing-axis indexing
+# names the page axis reliably.
+PAGE_AXIS = -4
+
+
+def _page_index(ids):
+    """Index tuple selecting physical pages ``ids`` at ``PAGE_AXIS`` for
+    ``.at[...]`` updates, whatever the number of leading unit axes."""
+    return (Ellipsis, ids, slice(None), slice(None), slice(None))
+
+
 def copy_pool_pages(cache, src, dst):
     """Copy physical page ``src`` onto ``dst`` in every PagedKV leaf of a
-    model cache (leaves are (units, P, psz, KV, hd) — the page table is
-    shared across units, so one physical id names the same slot everywhere).
-    Dense per-slot leaves (recurrent states, cross blocks) pass through
-    untouched. This is the device half of copy-on-write prefix sharing."""
+    model cache (leaves are (*units, P, psz, KV, hd) — the page table is
+    shared across units, so one physical id names the same page everywhere).
+    Pages are addressed at ``PAGE_AXIS`` from the end: families stack a
+    VARIABLE number of leading unit axes (VLM's self leaves carry an extra
+    k_self axis), so positional ``[:, page]`` indexing would silently hit
+    the wrong axis. Dense per-slot leaves (recurrent states, cross blocks)
+    pass through untouched. This is the device half of copy-on-write prefix
+    sharing."""
     def one(x):
         if isinstance(x, PagedKV):
-            return PagedKV(x.k.at[:, dst].set(x.k[:, src]),
-                           x.v.at[:, dst].set(x.v[:, src]))
+            idx = _page_index(dst)
+            return PagedKV(x.k.at[idx].set(jnp.take(x.k, src, axis=PAGE_AXIS)),
+                           x.v.at[idx].set(jnp.take(x.v, src, axis=PAGE_AXIS)))
         return x
     return jax.tree_util.tree_map(one, cache,
                                   is_leaf=lambda x: isinstance(x, PagedKV))
@@ -183,6 +202,104 @@ def dense_to_paged(k: jax.Array, v: jax.Array, page_size: int
                     v.reshape(B * npg, psz, KV, hd))
     table = jnp.arange(B * npg, dtype=jnp.int32).reshape(B, npg)
     return pages, table
+
+
+# ---------------------------------------------------------------------------
+# Slot spill / restore (host-side preemption store)
+# ---------------------------------------------------------------------------
+#
+# Preemption needs a slot's ENTIRE sequence state to survive losing its slot
+# and pages: the committed KV pages (paged leaves) plus the per-slot DENSE
+# state the families keep outside the pool — recurrent mamba/xLSTM states and
+# the fixed cross-attention conditioning blocks. DiffusionBlocks makes this
+# snapshot unusually small and clean: every block is an independently trained
+# denoiser over the same hidden stream, so there are no cross-block
+# activations to capture — the cache pytree IS the whole state.
+#
+# ``spill_slot`` gathers to HOST numpy (the spill store lives off-device, so
+# a preempted request costs no pool memory); ``restore_slot`` scatters the
+# snapshot back into freshly allocated pages (possibly different physical
+# ids — the page table is rewritten by the scheduler) and the same slot-axis
+# rows. Both walk the cache with one flatten, so the leaf order is identical
+# between spill and restore by construction.
+#
+# ``dense_axes`` maps top-level cache keys of dense (non-paged) subtrees to
+# their slot axis (``model.paged_state_axes``): VLM/encdec cross blocks sit
+# at axis 1, hybrid mamba states at axis 2 (an extra inner-layer axis).
+
+
+@dataclasses.dataclass
+class SpilledSlot:
+    """Host-side snapshot of one slot's cache state: ``data[i]`` corresponds
+    to flattened leaf i — an ``(k, v)`` numpy pair of gathered pages for a
+    PagedKV leaf, a numpy slot-row for a dense leaf. ``n_pages`` is the
+    number of (used) pages the snapshot covers."""
+    data: list
+    n_pages: int
+
+
+def _is_pkv(x) -> bool:
+    return isinstance(x, PagedKV)
+
+
+def _dense_slot_axis(path, dense_axes) -> int:
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey) and p.key in dense_axes:
+            return dense_axes[p.key]
+    raise KeyError(
+        f"dense cache leaf at {jax.tree_util.keystr(path)} has no slot axis "
+        f"in paged_state_axes {dense_axes} — the family must declare where "
+        "its per-slot state lives before it can be spilled")
+
+
+def spill_slot(cache, slot: int, page_ids, dense_axes=None) -> SpilledSlot:
+    """Snapshot slot ``slot``'s state to host memory: the content of its
+    ``page_ids`` physical pages from every PagedKV leaf (gathered at
+    ``PAGE_AXIS``) and its row of every dense per-slot leaf (at the axis
+    ``dense_axes`` names). The cache itself is NOT modified — the scheduler
+    frees the pages separately."""
+    dense_axes = dense_axes or {}
+    ids = jnp.asarray(np.asarray(page_ids, np.int32))
+    leaves = jax.tree_util.tree_flatten_with_path(cache, is_leaf=_is_pkv)[0]
+    data = []
+    for path, leaf in leaves:
+        if _is_pkv(leaf):
+            data.append((np.asarray(jnp.take(leaf.k, ids, axis=PAGE_AXIS)),
+                         np.asarray(jnp.take(leaf.v, ids, axis=PAGE_AXIS))))
+        else:
+            ax = _dense_slot_axis(path, dense_axes)
+            data.append(np.asarray(jnp.take(leaf, slot, axis=ax)))
+    return SpilledSlot(data=data, n_pages=len(page_ids))
+
+
+def restore_slot(cache, slot: int, page_ids, spilled: SpilledSlot,
+                 dense_axes=None):
+    """Write a ``spill_slot`` snapshot back: page content lands in the
+    freshly allocated ``page_ids`` (``len(page_ids) == spilled.n_pages``;
+    the ids may differ from the spill-time ones — logical order is what
+    matters) and dense rows overwrite slot ``slot``. Returns the updated
+    cache; the scheduler then rewrites the page table to ``page_ids``."""
+    dense_axes = dense_axes or {}
+    assert len(page_ids) == spilled.n_pages, \
+        f"restore got {len(page_ids)} pages for a {spilled.n_pages}-page spill"
+    ids = jnp.asarray(np.asarray(page_ids, np.int32))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache,
+                                                           is_leaf=_is_pkv)
+    assert len(leaves) == len(spilled.data), \
+        "cache structure changed between spill and restore"
+    new = []
+    for (path, leaf), saved in zip(leaves, spilled.data):
+        if _is_pkv(leaf):
+            idx = _page_index(ids)
+            k_s, v_s = saved
+            new.append(PagedKV(leaf.k.at[idx].set(jnp.asarray(k_s)),
+                               leaf.v.at[idx].set(jnp.asarray(v_s))))
+        else:
+            ax = _dense_slot_axis(path, dense_axes)
+            idx = (slice(None),) * ax + (slot,)
+            new.append(leaf.at[idx].set(
+                jnp.asarray(saved).astype(leaf.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, new)
 
 
 # ---------------------------------------------------------------------------

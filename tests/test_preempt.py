@@ -1,0 +1,342 @@
+"""Preemption, page spill/restore, SLO deadlines, and admission control —
+engine-level tests against the REAL jitted dispatch programs.
+
+The core acceptance gate is DIFFERENTIAL BIT-PARITY: a request force-
+preempted mid-prefill or mid-decode (its KV pages and per-slot cross state
+spilled to host numpy, its slot and pages returned to the pool, then
+restored into different physical pages at re-admission) must produce
+exactly the token sequence of an uninterrupted run with the same PRNGKey.
+The spill round trip is rng-neutral — no dispatch runs for a spilled slot —
+so greedy outputs must match token for token, for an unconditioned (dense)
+AND a conditioned (VLM cross-attention) request.
+
+Also covered here: the spill/restore primitives round-tripping exactly
+through DIFFERENT physical pages, priority preemption under genuine pool
+pressure (an interactive arrival spills a batch slot and both still
+complete), TTFT/TPOT deadline enforcement retiring requests with partial
+output, queue-depth and pool-pressure admission control (429 semantics at
+the engine layer), and allocator-exhaustion fault injection never
+deadlocking or leaking pages.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig
+from repro.core import DiffusionBlocksModel
+from repro.launch.faults import FaultInjector
+from repro.launch.serve import AdmissionError, ContinuousBatcher
+from repro.nn import cache as KVC
+
+TINY = ModelConfig(name="tiny-preempt", family="dense", n_layers=4,
+                   d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                   vocab_size=32)
+TINY_VLM = ModelConfig(name="tiny-preempt-vlm", family="vlm", n_layers=4,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=32, cross_attn_every=2, n_image_tokens=4)
+
+CB_KW = dict(max_prompt=12, max_len=24, seg_len=3, page_size=4,
+             chunk_size=4, precision="fp32")
+
+
+@pytest.fixture(scope="module")
+def dense_env():
+    dbm = DiffusionBlocksModel(TINY, DBConfig(num_blocks=2,
+                                              overlap_gamma=0.1))
+    return dbm, dbm.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def vlm_env():
+    import jax.numpy as jnp
+    dbm = DiffusionBlocksModel(TINY_VLM, DBConfig(num_blocks=2,
+                                                  overlap_gamma=0.1))
+    params = dbm.init(jax.random.PRNGKey(0))
+    # open the zero-init cross-attention gate so conditioning measurably
+    # changes the greedy output (same trick as tests/test_prefill.py)
+    params["units"]["cross"]["xgate"] = 2.0 * jnp.ones_like(
+        params["units"]["cross"]["xgate"])
+    return dbm, params
+
+
+def pool_whole(cb):
+    return (len(cb.free_pages) == cb.total_pages - 1
+            and not cb.page_refs and not cb.active.any())
+
+
+def run_with_preempt(dbm, params, prompt, max_new, *, aux=None,
+                     preempt_at=None, seed=11, **kw):
+    """One request through a single-slot batcher, optionally force-preempted
+    before step ``preempt_at``; returns (tokens, batcher)."""
+    cb = ContinuousBatcher(dbm, params, num_slots=1, **{**CB_KW, **kw})
+    rid = cb.submit(np.asarray(prompt, np.int32), max_new, aux_inputs=aux)
+    rng, fin, step = jax.random.PRNGKey(seed), [], 0
+    while cb.has_work():
+        if step == preempt_at:
+            cb.preempt(rid)
+        rng, f = cb.step(rng, strict=False)
+        fin.extend(f)
+        step += 1
+        assert step < 500, "engine failed to converge"
+    assert len(fin) == 1 and fin[0].rid == rid and fin[0].error is None
+    return fin[0].out, cb
+
+
+# ---------------------------------------------------------------------------
+# Differential bit-parity: preempted == uninterrupted
+# ---------------------------------------------------------------------------
+
+def test_preempt_bit_parity_unconditioned(dense_env):
+    """Force-preempting mid-prefill (step 1) and mid-decode (step 3) changes
+    nothing: the spill/restore round trip consumes no rng and restores the
+    exact KV content, so greedy output is bit-identical."""
+    dbm, params = dense_env
+    prompt = (np.arange(1, 9) * 3) % TINY.vocab_size
+    base, _ = run_with_preempt(dbm, params, prompt, 8)
+    for at in (1, 3):
+        got, cb = run_with_preempt(dbm, params, prompt, 8, preempt_at=at)
+        assert cb.preemptions >= 1 and cb.restores == cb.preemptions
+        assert got == base, (at, got, base)
+        assert pool_whole(cb)
+
+
+def test_preempt_bit_parity_conditioned(vlm_env):
+    """Same differential for a CONDITIONED request: the spill must carry the
+    per-slot cross-attention block (``paged_state_axes``) alongside the KV
+    pages, or the restored request silently decodes unconditioned."""
+    dbm, params = vlm_env
+    prompt = (np.arange(1, 9) * 5) % TINY_VLM.vocab_size
+    aux = {"image_embs": 4.0 * np.random.RandomState(3)
+           .randn(TINY_VLM.n_image_tokens, TINY_VLM.d_model)
+           .astype(np.float32)}
+    base, _ = run_with_preempt(dbm, params, prompt, 8, aux=aux)
+    uncond, _ = run_with_preempt(dbm, params, prompt, 8)
+    assert base != uncond, "conditioning must change the output"
+    for at in (1, 3):
+        got, cb = run_with_preempt(dbm, params, prompt, 8, aux=aux,
+                                   preempt_at=at)
+        assert cb.preemptions >= 1 and cb.restores == cb.preemptions
+        assert got == base, (at, got, base)
+        assert pool_whole(cb)
+
+
+def test_spill_restore_primitives_roundtrip_different_pages(vlm_env):
+    """``spill_slot``/``restore_slot`` round-trip EXACTLY through different
+    physical pages: page content lands at the new ids, dense per-slot rows
+    (cross state) are restored bit-for-bit, and untouched slots/pages are
+    unchanged."""
+    import jax.numpy as jnp
+
+    dbm, params = vlm_env
+    cb = ContinuousBatcher(dbm, params, num_slots=2, **CB_KW)
+    axes = dbm.model.paged_state_axes
+    assert axes == {"cross": 1}
+    rs = np.random.RandomState(7)
+    src, dst, slot = [1, 2, 3], [5, 7, 4], 1
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        cb.kv, is_leaf=lambda x: isinstance(x, KVC.PagedKV))
+    filled, want = [], []
+    for path, leaf in flat:
+        if isinstance(leaf, KVC.PagedKV):
+            shp = list(np.asarray(leaf.k.shape))
+            shp[KVC.PAGE_AXIS] = len(src)
+            k = rs.randn(*shp).astype(np.float32)
+            v = rs.randn(*shp).astype(np.float32)
+            idx = KVC._page_index(jnp.asarray(src))
+            filled.append(KVC.PagedKV(k=leaf.k.at[idx].set(k),
+                                      v=leaf.v.at[idx].set(v)))
+            want.append((k, v))
+        else:
+            ax = 1                       # cross k/v: slot axis 1
+            row_shp = list(leaf.shape)
+            del row_shp[ax]
+            row = rs.randn(*row_shp).astype(np.float32)
+            sel = (slice(None),) * ax + (slot,)
+            filled.append(leaf.at[sel].set(row))
+            want.append(row)
+    kv = jax.tree_util.tree_unflatten(treedef, filled)
+
+    spilled = KVC.spill_slot(kv, slot, src, axes)
+    assert spilled.n_pages == len(src)
+    # wipe the source pages and the slot row so a lazy restore can't pass
+    wiped = []
+    for (path, _), leaf in zip(flat, jax.tree_util.tree_flatten(
+            kv, is_leaf=lambda x: isinstance(x, KVC.PagedKV))[0]):
+        if isinstance(leaf, KVC.PagedKV):
+            idx = KVC._page_index(jnp.asarray(src))
+            wiped.append(KVC.PagedKV(k=leaf.k.at[idx].set(0),
+                                     v=leaf.v.at[idx].set(0)))
+        else:
+            sel = (slice(None),) + (slot,)
+            wiped.append(leaf.at[sel].set(0))
+    kv = jax.tree_util.tree_unflatten(treedef, wiped)
+
+    kv = KVC.restore_slot(kv, slot, dst, spilled, axes)
+    leaves = jax.tree_util.tree_flatten(
+        kv, is_leaf=lambda x: isinstance(x, KVC.PagedKV))[0]
+    for leaf, w in zip(leaves, want):
+        if isinstance(leaf, KVC.PagedKV):
+            k, v = w
+            got_k = np.asarray(jnp.take(leaf.k, jnp.asarray(dst),
+                                        axis=KVC.PAGE_AXIS))
+            got_v = np.asarray(jnp.take(leaf.v, jnp.asarray(dst),
+                                        axis=KVC.PAGE_AXIS))
+            np.testing.assert_array_equal(got_k, k)
+            np.testing.assert_array_equal(got_v, v)
+        else:
+            np.testing.assert_array_equal(np.asarray(leaf)[:, slot], w)
+
+
+# ---------------------------------------------------------------------------
+# Priority preemption under pool pressure
+# ---------------------------------------------------------------------------
+
+def test_interactive_preempts_batch_for_pages(dense_env):
+    """A pool too small for both requests: the interactive arrival spills
+    the running batch slot (strictly lower priority), completes first, and
+    the batch request restores and still finishes — nobody starves, the
+    pool ends whole."""
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=2, total_pages=8,
+                           **CB_KW)   # 7 usable pages: 5 + 3 don't fit
+    rs = np.random.RandomState(0)
+    lo = cb.submit(rs.randint(0, 32, size=8), 12, priority="batch")   # 5 pg
+    rng = jax.random.PRNGKey(5)
+    for _ in range(2):                     # admit + start prefilling batch
+        rng, _ = cb.step(rng, strict=False)
+    hi = cb.submit(rs.randint(0, 32, size=8), 4, priority="interactive")
+    fin, order, steps = {}, [], 0
+    while cb.has_work():
+        rng, f = cb.step(rng, strict=False)
+        for r in f:
+            fin[r.rid] = r
+            order.append(r.rid)
+        steps += 1
+        assert steps < 500, "scheduler failed to converge"
+    assert order == [hi, lo], order
+    assert fin[hi].error is None and len(fin[hi].out) == 4
+    assert fin[lo].error is None and len(fin[lo].out) == 12
+    assert fin[lo].preempt_count >= 1 and fin[hi].preempt_count == 0
+    assert cb.preemptions >= 1 and cb.restores == cb.preemptions
+    assert pool_whole(cb)
+
+
+def test_alloc_exhaustion_fault_no_deadlock_no_leak(dense_env):
+    """A flaky allocator (fault-injected ``_alloc_page`` refusals at p=0.3)
+    forces the admission-unwind, CoW-relief, and self-preemption paths over
+    and over; every request must still complete and the pool partition
+    exactly."""
+    dbm, params = dense_env
+    faults = FaultInjector({"alloc_exhaust": {"p": 0.3}}, seed=1)
+    cb = ContinuousBatcher(dbm, params, num_slots=2, prefix_cache=True,
+                           faults=faults, **CB_KW)
+    rs = np.random.RandomState(1)
+    rids = [cb.submit(rs.randint(0, 32, size=int(rs.randint(3, 12))),
+                      int(rs.randint(2, 8)))
+            for _ in range(6)]
+    rng, fin, steps = jax.random.PRNGKey(2), [], 0
+    while cb.has_work():
+        rng, f = cb.step(rng, strict=False)
+        fin.extend(f)
+        steps += 1
+        assert steps < 2000, "allocator faults deadlocked the engine"
+    assert sorted(r.rid for r in fin) == sorted(rids)
+    assert all(r.error is None for r in fin)
+    assert faults.fired["alloc_exhaust"] > 0
+    assert len(cb.free_pages) + len(cb.page_refs) == cb.total_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# SLO deadlines
+# ---------------------------------------------------------------------------
+
+def test_ttft_deadline_drops_queued_request(dense_env):
+    """A queued request whose TTFT deadline passes while it waits is dropped
+    before admission: it finishes with a deadline error, empty output, and
+    no pages ever held."""
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=1, **CB_KW)
+    rs = np.random.RandomState(2)
+    a = cb.submit(rs.randint(0, 32, size=8), 10)
+    rng = jax.random.PRNGKey(3)
+    rng, _ = cb.step(rng)                      # admit A; B will queue behind
+    b = cb.submit(rs.randint(0, 32, size=8), 4, ttft_slo_s=0.001)
+    time.sleep(0.01)
+    fin = {}
+    while cb.has_work():
+        rng, f = cb.step(rng)
+        fin.update({r.rid: r for r in f})
+    assert fin[a].error is None and len(fin[a].out) == 10
+    assert fin[b].deadline_blown and "ttft" in fin[b].error
+    assert fin[b].out == [] and fin[b].pages == []
+    assert cb.deadline_cancels == 1
+    assert pool_whole(cb)
+
+
+def test_tpot_deadline_retires_active_with_partial_output(dense_env):
+    """An active request falling behind its TPOT pace is retired with the
+    tokens it already produced — partial output delivered, slot and pages
+    recycled."""
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=1, **CB_KW)
+    rid = cb.submit(np.arange(8, dtype=np.int32), 12, tpot_slo_s=1e-9)
+    rng, fin = jax.random.PRNGKey(4), []
+    while cb.has_work():
+        rng, f = cb.step(rng)
+        fin.extend(f)
+    (req,) = fin
+    assert req.rid == rid and req.deadline_blown
+    assert "tpot" in req.error
+    assert 2 <= len(req.out) < 12          # partial, not empty, not full
+    assert cb.deadline_cancels == 1
+    assert pool_whole(cb)
+
+
+# ---------------------------------------------------------------------------
+# Admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_depth_shed_is_class_aware(dense_env):
+    """``max_queue`` sheds by CLASS-AWARE backlog: a standard submit is
+    refused when enough equal-or-higher-priority work is queued, but an
+    interactive submit still gets in (only interactive+ backlog counts
+    against it). Shed carries a positive Retry-After hint."""
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=1, max_queue=1, **CB_KW)
+    rs = np.random.RandomState(3)
+    cb.submit(rs.randint(0, 32, size=6), 3)            # queued (no step yet)
+    with pytest.raises(AdmissionError) as ei:
+        cb.submit(rs.randint(0, 32, size=6), 3)
+    assert ei.value.retry_after > 0
+    hi = cb.submit(rs.randint(0, 32, size=6), 3, priority="interactive")
+    assert cb.shed_count == 1
+    rng, fin = jax.random.PRNGKey(6), []
+    while cb.has_work():
+        rng, f = cb.step(rng)
+        fin.extend(f)
+    assert fin[0].rid == hi                 # priority order held
+    assert len(fin) == 2 and all(r.error is None for r in fin)
+    assert pool_whole(cb)
+
+
+def test_pool_pressure_sheds_batch_only(dense_env):
+    """``shed_below_pages`` refuses BATCH work when the free pool is thin;
+    standard and interactive submissions are unaffected."""
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=1,
+                           shed_below_pages=10_000, **CB_KW)
+    with pytest.raises(AdmissionError):
+        cb.submit(np.arange(4, dtype=np.int32), 2, priority="batch")
+    cb.submit(np.arange(4, dtype=np.int32), 2)          # standard: accepted
+    assert cb.shed_count == 1 and len(cb.queue) == 1
+
+
+def test_unknown_priority_rejected(dense_env):
+    dbm, params = dense_env
+    cb = ContinuousBatcher(dbm, params, num_slots=1, **CB_KW)
+    with pytest.raises(ValueError):
+        cb.submit(np.arange(4, dtype=np.int32), 2, priority="vip")

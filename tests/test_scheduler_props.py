@@ -28,7 +28,12 @@ Invariants checked on every trace:
     (hitting queued, admitted, and already-finished requests) keep all of
     the above true: a cancelled request ends with no pages, every
     acknowledged cancel is eventually reported exactly once, and shared
-    pages only lose the cancelled slot's ref.
+    pages only lose the cancelled slot's ref;
+  * preemption (SPILL/RESTORE) accounting — random forced ``preempt(rid)``
+    calls interleave with everything above: a spilled request holds ZERO
+    pages while queued (its snapshot lives on the host), restores never
+    outnumber spills, and a restored conditioned slot sees its cross block
+    again (the admission-time conditioning check runs after restores too).
 
 The seeded driver runs >= 200 traces deterministically (no hypothesis
 needed); when hypothesis is installed (the dev extra — CI fast lane), the
@@ -183,6 +188,12 @@ def check_invariants(cb: ContinuousBatcher):
         if not cb.active[s]:
             assert cb.slot_req[s] is None
             assert cb.cond_lengths[s] == 0
+    # -- spilled requests wait on the HOST: no pages, snapshot + meta set
+    for r in list(cb.queue):
+        assert not r.pages, f"queued request {r.rid} still holds pages"
+        if r.spilled is not None:
+            assert r.spill_meta is not None
+    assert cb.restores <= cb.preemptions
 
 
 def check_conditioning_state(cb: ContinuousBatcher):
@@ -257,6 +268,10 @@ def run_trace(dbm, params, seed: int):
                 victim = submitted[int(rs.randint(len(submitted)))][2]
                 if cb.cancel(victim.rid):
                     acked_cancels.add(victim.rid)
+            if submitted and rs.rand() < 0.2:
+                # forced preemption: victims may be queued, active (spill +
+                # later restore), finished, or cancelled — all must be safe
+                cb.preempt(submitted[int(rs.randint(len(submitted)))][2].rid)
             try:
                 rng, fin = cb.step(rng)
             except RuntimeError as e:           # pool too small to admit
