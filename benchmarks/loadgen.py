@@ -100,6 +100,44 @@ def synth_workload(rs, n: int, *, arrival: str = "poisson", rate: float = 4.0,
     return items
 
 
+def at_time_zero(items: List[Dict]) -> List[Dict]:
+    """Copy of a trace with every arrival at t=0 — warmup and capacity
+    calibration points (the zero-queueing-slack throughput ceiling)."""
+    return [dict(it, t=0.0) for it in items]
+
+
+def mixed_trace(rs, n: int, *, rate: float, vocab: int = 32,
+                max_prompt: int = 24, max_new_cap: int = 12,
+                long_frac: float = 0.4, long_prompt: Optional[int] = None,
+                long_new: int = 2, short_prompt: int = 4,
+                arrival: str = "poisson", burst_mean: float = 4.0,
+                cond_names=(), cond_frac: float = 0.0) -> List[Dict]:
+    """Bimodal ingest-vs-decode trace for prefill/decode interference
+    studies: ``long_frac`` of the items are LONG-prompt, short-output
+    requests (``cls="ingest"`` — pure prefill load), the rest short-prompt,
+    long-output INTERACTIVE requests whose TPOT a co-scheduled ingest chunk
+    dispatch would visibly stretch. Same record shape as
+    ``synth_workload``."""
+    t = _arrival_times(rs, n, arrival, rate, burst_mean)
+    long_prompt = long_prompt if long_prompt is not None else max_prompt
+    items = []
+    for i in range(n):
+        is_long = rs.rand() < long_frac
+        plen = (long_prompt if is_long
+                else int(np.clip(short_prompt + rs.randint(-1, 2),
+                                 1, max_prompt)))
+        max_new = long_new if is_long else max_new_cap
+        aux = (cond_names[int(rs.randint(len(cond_names)))]
+               if len(cond_names) and rs.rand() < cond_frac else None)
+        items.append({"t": float(t[i]),
+                      "prompt": rs.randint(0, vocab, size=plen),
+                      "max_new": max_new, "aux": aux,
+                      "cls": "ingest" if is_long else "interactive",
+                      "priority": "standard",
+                      "ttft_slo_ms": None, "tpot_slo_ms": None})
+    return items
+
+
 def offered_rate(items: List[Dict]) -> float:
     """Mean offered load of a trace in requests/s."""
     span = max(it["t"] for it in items)
@@ -185,6 +223,108 @@ def replay_inproc(cb, items: List[Dict], *, aux_registry=None, rng=None,
                     "shared_tokens": req.shared_tokens,
                     "error": req.error, "shed": False,
                     "cls": rid_cls.get(req.rid, "standard"),
+                    "deadline_blown": req.deadline_blown,
+                    "preempted": req.preempt_count})
+    return out + shed
+
+
+def replay_threaded(engine, items: List[Dict], *, aux_registry=None,
+                    speed: float = 1.0, timeout_s: float = 600.0
+                    ) -> List[Dict]:
+    """Replay a trace against a SELF-RUNNING engine — a started
+    ``DisaggRouter`` (or anything exposing ``submit`` plus ``token_cb`` /
+    ``finish_cb`` hooks that steps itself on its own threads). The in-proc
+    analogue of ``replay_http`` for engines that own their threads; records
+    match ``replay_inproc``'s shape. Existing hooks are chained, not
+    clobbered, and restored on exit."""
+    aux_registry = aux_registry or {}
+    lock = threading.Lock()
+    recs: Dict[int, Dict] = {}
+    finished: Dict[int, object] = {}
+    done = threading.Event()
+    expect = {"n": None}
+
+    def rec(rid: int) -> Dict:
+        with lock:
+            return recs.setdefault(rid, {"times": [], "counts": []})
+
+    prev_tok, prev_fin = engine.token_cb, engine.finish_cb
+
+    def on_tokens(req, toks):
+        r = rec(req.rid)
+        r["times"].append(time.time())
+        r["counts"].append(len(toks))
+        if prev_tok is not None:
+            prev_tok(req, toks)
+
+    def on_finish(req):
+        with lock:
+            finished[req.rid] = req
+            n = expect["n"]
+        if n is not None and len(finished) >= n:
+            done.set()
+        if prev_fin is not None:
+            prev_fin(req)
+
+    engine.token_cb = on_tokens
+    engine.finish_cb = on_finish
+    t0 = time.time()
+    shed: List[Dict] = []
+    rid_cls: Dict[int, str] = {}
+    submitted: List[int] = []
+    from repro.launch.serve import AdmissionError
+    try:
+        for it in items:
+            dt = t0 + it["t"] / speed - time.time()
+            if dt > 0:
+                time.sleep(dt)
+            aux = aux_registry.get(it["aux"]) if it.get("aux") else None
+            slo_kw = {}
+            if it.get("ttft_slo_ms") is not None:
+                slo_kw["ttft_slo_s"] = it["ttft_slo_ms"] / 1e3
+            if it.get("tpot_slo_ms") is not None:
+                slo_kw["tpot_slo_s"] = it["tpot_slo_ms"] / 1e3
+            try:
+                rid = engine.submit(np.asarray(it["prompt"], np.int32),
+                                    it["max_new"], aux_inputs=aux,
+                                    priority=it.get("priority", "standard"),
+                                    **slo_kw)
+            except AdmissionError as e:
+                shed.append({"submit": time.time(), "times": [],
+                             "counts": [], "n": 0, "shared_tokens": 0,
+                             "error": None, "shed": True,
+                             "retry_after": e.retry_after,
+                             "cls": it.get("cls", "standard")})
+                continue
+            rid_cls[rid] = it.get("cls", "standard")
+            submitted.append(rid)
+        with lock:
+            expect["n"] = len(submitted)
+            all_done = len(finished) >= expect["n"]
+        if all_done:
+            done.set()
+        done.wait(timeout_s)
+    finally:
+        engine.token_cb = prev_tok
+        engine.finish_cb = prev_fin
+    out = []
+    for rid in submitted:
+        req = finished.get(rid)
+        r = rec(rid)
+        if req is None:
+            out.append({"submit": t0, "times": r["times"],
+                        "counts": r["counts"], "n": sum(r["counts"]),
+                        "shared_tokens": 0, "shed": False,
+                        "cls": rid_cls.get(rid, "standard"),
+                        "deadline_blown": False, "preempted": 0,
+                        "error": f"replay timeout: rid {rid} never "
+                                 f"finished within {timeout_s}s"})
+            continue
+        out.append({"submit": req.submit_t, "times": r["times"],
+                    "counts": r["counts"], "n": len(req.out),
+                    "shared_tokens": req.shared_tokens,
+                    "error": req.error, "shed": False,
+                    "cls": rid_cls.get(rid, "standard"),
                     "deadline_blown": req.deadline_blown,
                     "preempted": req.preempt_count})
     return out + shed

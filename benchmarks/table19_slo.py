@@ -39,11 +39,13 @@ import jax
 import numpy as np
 
 try:
-    from benchmarks.loadgen import (offered_rate, replay_http, replay_inproc,
-                                    slo_summary, summarize, synth_workload)
+    from benchmarks.loadgen import (at_time_zero, offered_rate, replay_http,
+                                    replay_inproc, slo_summary, summarize,
+                                    synth_workload)
 except ImportError:                      # run as a script: benchmarks/ on path
-    from loadgen import (offered_rate, replay_http, replay_inproc,
-                         slo_summary, summarize, synth_workload)
+    from loadgen import (at_time_zero, offered_rate, replay_http,
+                         replay_inproc, slo_summary, summarize,
+                         synth_workload)
 
 from repro.configs import DBConfig
 from repro.configs.base import ModelConfig
@@ -180,18 +182,15 @@ def run(quick: bool = True, out: str = None):
     parity = _preempt_parity(dbm, params, registry)
 
     # warm up the num_slots=4 engine (compiles the batched programs)
-    warm = synth_workload(rs, 6, arrival="poisson", rate=1000.0,
-                          cond_names=cond_names, **WL_KW)
-    for it in warm:
-        it["t"] = 0.0
+    warm = at_time_zero(synth_workload(rs, 6, arrival="poisson", rate=1000.0,
+                                       cond_names=cond_names, **WL_KW))
     _inproc_point(dbm, params, registry, warm, seed=0)
 
     # calibrate capacity: whole trace at t=0 -> zero-queueing-slack ceiling
     n_cal = 16 if quick else 32
-    calib = synth_workload(rs, n_cal, arrival="poisson", rate=1000.0,
-                           cond_names=cond_names, **WL_KW)
-    for it in calib:
-        it["t"] = 0.0
+    calib = at_time_zero(synth_workload(rs, n_cal, arrival="poisson",
+                                        rate=1000.0, cond_names=cond_names,
+                                        **WL_KW))
     cal = summarize(_inproc_point(dbm, params, registry, calib, seed=1)[0])
     assert cal["errors"] == 0 and cal["shed"] == 0, cal
     capacity_rps = cal["completed"] / cal["makespan_s"]

@@ -19,6 +19,17 @@ Hook names used by the serving stack:
                       requeue.
   ``token_stall``     sleeps inside token delivery — exercises client
                       timeout / slow-stream handling in the load harness.
+  ``worker_die``      raises ``WorkerDied`` at the top of
+                      ``ContinuousBatcher.step`` — unlike ``engine_crash``
+                      the supervisor treats it as FATAL (simulated process
+                      death, no restart); the disaggregation router must
+                      detect the dead worker by heartbeat and fail its
+                      in-flight requests over (``repro.launch.router``).
+  ``handoff_drop``    the router loses a prefill→decode migration payload
+                      in transit — exercises the re-prefill fallback.
+  ``handoff_stall``   sleeps inside the router's handoff send (pair with
+                      ``{"sleep": s}`` above the router's handoff timeout)
+                      — exercises the bounded retry/backoff path.
 
 Each hook is configured with ONE trigger spec:
 
@@ -43,6 +54,13 @@ import numpy as np
 class InjectedFault(RuntimeError):
     """Raised by a chaos hook; distinguishable from organic failures so the
     supervisor and the tests can tell injected crashes from real bugs."""
+
+
+class WorkerDied(InjectedFault):
+    """A ``worker_die`` hook fired: the worker process is (simulated) dead.
+    Supervisors must NOT restart on this — recovery is the router's job
+    (heartbeat detection → failover), which is exactly what the fault
+    exists to exercise."""
 
 
 class FaultInjector:

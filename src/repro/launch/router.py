@@ -1,0 +1,833 @@
+"""Disaggregated prefill/decode coordinator with fault-tolerant migration.
+
+``DisaggRouter`` fronts a fleet of supervised workers (``launch.workers``):
+prompts route to PREFILL workers, and the moment a prompt is fully
+committed the request MIGRATES — as a ``SpilledSlot`` byte-copy payload
+(``handoff="copy"``, separate pools) or a page-table handle
+(``handoff="pages"``, one ``SharedPagePool``) — to a DECODE worker, so
+long-prompt ingest never steals chunk dispatches from latency-sensitive
+decode segments. Migration is rng-neutral: the prefill side never runs a
+decode step for a migrating request, so the decode worker's greedy output
+is bit-identical to an uninterrupted unified run.
+
+Every seam is designed to fail:
+
+  handoff loss      the ``handoff_drop`` chaos hook loses the payload in
+                    transit → the router RE-PREFILLS: a fresh inner request
+                    whose prompt is the original prompt plus every token
+                    already delivered (greedy determinism makes the
+                    continuation exact), served from the prefix cache when
+                    one is configured.
+  handoff timeout   a send slower than ``handoff_timeout_s`` (the
+                    ``handoff_stall`` hook) retains the payload and retries
+                    with exponential backoff, ``handoff_max_retries`` times
+                    — then falls back to re-prefill.
+  worker death      ``WorkerDied`` (the ``worker_die`` hook) kills the
+                    engine thread with NO recovery and NO stream cleanup —
+                    a dead process cannot apologize. The router's sweep
+                    notices (thread dead / ``died`` flag), harvests the
+                    batcher (``extract_all``), and fails survivors over:
+                    payload-intact requests re-migrate (page handles still
+                    valid on a shared pool), the rest re-prefill from
+                    prompt + delivered tokens. Workers optionally restart
+                    after ``restart_dead_after_s``.
+  role wipe-out     all workers of one role down → DEGRADED UNIFIED mode:
+                    the survivors serve prefill AND decode
+                    (``PrefillBatcher.boundary_spill = False``) and pending
+                    handoffs land wherever there is life. When both roles
+                    have survivors again the router RE-SPLITS; requests
+                    caught mid-decode on a prefill worker simply hit the
+                    boundary condition next step and migrate out.
+
+Admission control mirrors the single-engine path (PR 7): ``max_queue``
+sheds by priority-aware backlog, ``shed_below_pages`` sheds batch-class
+work under decode-pool pressure, both with ``AdmissionError`` carrying a
+service-time ``retry_after`` hint.
+
+Threading: worker engine threads call ``_worker_tokens`` / ``_worker_finish``
+(router lock only); the router's tick thread owns handoffs, failover,
+mode flips and cancellation. The tick thread NEVER takes a batcher pool
+lock while holding the router lock (pool locks are taken by engine threads
+that then call back into the router lock — holding both the other way
+would deadlock).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.launch.faults import FaultInjector
+from repro.launch.serve import (AdmissionError, ContinuousBatcher,
+                                PRIORITY_CLASSES, Request, SharedPagePool)
+from repro.launch.server import EngineRunner
+from repro.launch.workers import PrefillBatcher, Worker
+from repro.nn import cache as KVC
+
+
+@dataclasses.dataclass
+class RoutedRequest:
+    """The router's client-facing request record. Worker-side ``Request``
+    objects (``inner``) come and go — migration moves one between workers,
+    failover may replace it entirely — but THIS object owns the delivered
+    token list and the terminal flags, and it quacks enough like a
+    ``Request`` (``out`` / ``ttft`` / ``cancelled`` / ``error`` /
+    ``preempt_count`` / ``deadline_blown``) for the HTTP frontend's
+    ``TokenStream`` + ``_final_payload`` path to use unchanged."""
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    aux_inputs: Optional[dict] = None
+    cond_fp: int = 0
+    priority: int = PRIORITY_CLASSES["standard"]
+    ttft_deadline: Optional[float] = None
+    tpot_deadline_s: Optional[float] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+    cancelled: bool = False
+    error: Optional[str] = None
+    deadline_blown: bool = False
+    preempt_count: int = 0
+    shared_tokens: int = 0
+    migrations: int = 0          # completed prefill->decode handoffs
+    failovers: int = 0           # re-routed off a dead worker
+    paused: bool = False         # consumer backpressure (survives migration)
+    phase: str = "prefill"       # prefill | handoff | decode | done
+    where: Optional[str] = None  # name of the worker currently holding it
+    inner: Optional[Request] = None
+    finished: bool = False
+    # rng stream adoption: a dead DECODE worker's engine rng, captured at
+    # failover (worker_die raises before the step consumes any rng, so this
+    # is exactly the resume state). An idle receiving decode engine adopts
+    # it, making the failed-over continuation bit-identical to the
+    # uninterrupted run; a busy receiver keeps its own stream (the
+    # continuation is then a different — still valid — sample).
+    resume_rng: Optional[object] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished
+
+    @property
+    def ttft(self) -> Optional[float]:
+        return (None if self.first_token_t is None
+                else self.first_token_t - self.submit_t)
+
+
+@dataclasses.dataclass
+class _Handoff:
+    """One in-transit prefill->decode migration owned by the router."""
+    inner: Request
+    routed: RoutedRequest
+    attempts: int = 0
+    due: float = 0.0             # earliest send time (backoff)
+
+
+class DisaggRouter:
+    """Coordinator over ``n_prefill`` + ``n_decode`` supervised workers.
+
+    Exposes enough of the ``ContinuousBatcher`` surface (``submit`` /
+    ``cancel`` / ``pause`` / ``resume`` / ``retry_after_hint`` / ``dbm`` /
+    ``max_prompt`` / ``max_len`` / ``eng`` / ``token_cb``) that
+    ``InferenceServer`` drives it through a thin ``RouterRunner`` facade;
+    ``is_router`` is the discriminator."""
+
+    is_router = True
+
+    def __init__(self, dbm, params, *, n_prefill: int = 1, n_decode: int = 1,
+                 handoff: str = "copy",
+                 shared_pages: Optional[int] = None,
+                 handoff_timeout_s: float = 0.5,
+                 handoff_max_retries: int = 3,
+                 handoff_backoff_s: float = 0.02,
+                 restart_dead_after_s: Optional[float] = None,
+                 tick_s: float = 0.002,
+                 max_queue: Optional[int] = None,
+                 shed_below_pages: int = 0,
+                 faults: Optional[FaultInjector] = None,
+                 rng=None, max_restarts: int = 3, **cb_kw):
+        if n_prefill < 1 or n_decode < 1:
+            raise ValueError("need at least one worker per role")
+        if handoff not in ("copy", "pages"):
+            raise ValueError(f"handoff must be 'copy' or 'pages', "
+                             f"got {handoff!r}")
+        self.dbm, self.params = dbm, params
+        self.handoff = handoff
+        self.handoff_timeout_s = float(handoff_timeout_s)
+        self.handoff_max_retries = int(handoff_max_retries)
+        self.handoff_backoff_s = float(handoff_backoff_s)
+        self.restart_dead_after_s = restart_dead_after_s
+        self.tick_s = float(tick_s)
+        self.max_queue = max_queue
+        self.shed_below_pages = int(shed_below_pages)
+        self.faults = faults
+        self.max_prompt = int(cb_kw.get("max_prompt", 64))
+        self.max_len = int(cb_kw.get("max_len", 128))
+        # worker batchers take prompts up to max_len: a failover re-prefill
+        # replays (original prompt + delivered tokens) as the new prompt
+        inner_kw = dict(cb_kw, max_prompt=self.max_len, faults=faults)
+        self.pool: Optional[SharedPagePool] = None
+        if handoff == "pages":
+            if shared_pages is None:
+                slots = int(cb_kw.get("num_slots", 8))
+                pps = KVC.pages_for(self.max_len,
+                                    int(cb_kw.get("page_size",
+                                                  KVC.DEFAULT_PAGE_SIZE)))
+                shared_pages = 1 + (n_prefill + n_decode) * slots * pps
+            self.pool = SharedPagePool(shared_pages)
+            inner_kw["shared_pool"] = self.pool
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        rngs = list(jax.random.split(rng, n_prefill + n_decode))
+        self.prefill_workers: List[Worker] = []
+        self.decode_workers: List[Worker] = []
+        for i in range(n_prefill):
+            cb = PrefillBatcher(dbm, params, handoff=handoff, **inner_kw)
+            self.prefill_workers.append(self._make_worker(
+                f"prefill{i}", "prefill", cb, rngs.pop(), max_restarts))
+        # decode workers never admit fresh prompts in split mode, so the
+        # prefix cache would only ever take refs without hits — disable it
+        dec_kw = dict(inner_kw, prefix_cache=False)
+        for i in range(n_decode):
+            cb = ContinuousBatcher(dbm, params, **dec_kw)
+            self.decode_workers.append(self._make_worker(
+                f"decode{i}", "decode", cb, rngs.pop(), max_restarts))
+        self.workers = self.prefill_workers + self.decode_workers
+        self._by_name = {w.name: w for w in self.workers}
+        # ---- router state (guarded by _lock) ----
+        self._lock = threading.RLock()
+        self.requests: Dict[int, RoutedRequest] = {}
+        self._handoffs: collections.deque = collections.deque()
+        self._pending_submit: collections.deque = collections.deque()
+        self._cancel_pending: set = set()
+        self._next_rid = 0
+        self.mode = "split"          # split | unified (degraded)
+        # ---- counters ----
+        self.migrations = 0
+        self.failovers = 0
+        self.handoff_retries = 0
+        self.handoff_drops = 0
+        self.re_prefills = 0
+        self.degradations = 0
+        self.resplits = 0
+        self.completed = 0
+        self.shed_count = 0
+        self._svc_ewma: Optional[float] = None
+        # ---- frontend hooks ----
+        self.token_cb: Optional[Callable] = None
+        self.finish_cb: Optional[Callable] = None
+        self._stopping = threading.Event()
+        self._thread = threading.Thread(target=self._main, name="router",
+                                        daemon=True)
+
+    def _make_worker(self, name, role, cb, rng, max_restarts) -> Worker:
+        w = Worker(name, role, cb, rng=rng, max_restarts=max_restarts)
+        w._on_tokens = lambda req, toks, w=w: self._worker_tokens(w, req,
+                                                                  toks)
+        w._on_finish = lambda req, w=w: self._worker_finish(w, req)
+        # rebind onto the already-built runner
+        w.runner._cb_tokens = w._on_tokens
+        w.runner._cb_finish = w._on_finish
+        return w
+
+    # ---- engine surface for InferenceServer ---------------------------
+    @property
+    def eng(self):
+        return self.prefill_workers[0].cb.eng
+
+    def retry_after_hint(self) -> float:
+        return float(min(5.0, max(0.1, self._svc_ewma or 0.5)))
+
+    def _note_service(self, dt: float):
+        a = 0.2
+        self._svc_ewma = (dt if self._svc_ewma is None
+                          else a * dt + (1 - a) * self._svc_ewma)
+
+    # ---- lifecycle -----------------------------------------------------
+    def start(self):
+        for w in self.workers:
+            w.start()
+        self._thread.start()
+
+    def wake(self):
+        for w in self.workers:
+            w.wake()
+
+    def stop(self, timeout: Optional[float] = 60.0):
+        """Drain: wait for every accepted request to finish (the tick
+        thread keeps migrating / failing over while we wait), force-error
+        stragglers past ``timeout`` so no stream ever hangs, then stop the
+        workers and the tick thread."""
+        deadline = time.time() + (timeout if timeout is not None else 60.0)
+        while time.time() < deadline:
+            with self._lock:
+                if all(r.finished for r in self.requests.values()):
+                    break
+            self.wake()
+            time.sleep(0.01)
+        stuck = []
+        with self._lock:
+            for r in self.requests.values():
+                if not r.finished:
+                    r.error = r.error or "router drain timeout"
+                    stuck.append(r)
+        for r in stuck:
+            if r.inner is not None:
+                self._drop_payload(r.inner)
+            self._finish_routed(r)
+        self._stopping.set()
+        for w in self.workers:
+            if w.runner._thread.is_alive():
+                w.stop(5.0)
+        if self._thread.is_alive():
+            self._thread.join(5.0)
+
+    # ---- submission ----------------------------------------------------
+    def submit(self, prompt, max_new: int, aux_inputs=None, *,
+               priority="standard", ttft_slo_s: Optional[float] = None,
+               tpot_slo_s: Optional[float] = None) -> int:
+        if isinstance(priority, str):
+            if priority not in PRIORITY_CLASSES:
+                raise ValueError(f"unknown priority class {priority!r}: "
+                                 f"expected {sorted(PRIORITY_CLASSES)}")
+            priority = PRIORITY_CLASSES[priority]
+        priority = int(priority)
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert prompt.size <= self.max_prompt, "prompt exceeds max_prompt"
+        assert prompt.size + max_new <= self.max_len, \
+            "request exceeds max_len"
+        if aux_inputs:
+            cap = self.dbm.model.max_cond_tokens
+            if cap == 0:
+                raise ValueError(f"family {self.dbm.cfg.family!r} takes no "
+                                 "aux conditioning inputs")
+            aux_inputs = {k: np.asarray(v, np.float32)
+                          for k, v in aux_inputs.items()}
+        with self._lock:
+            if self.max_queue is not None:
+                backlog = sum(1 for r in self.requests.values()
+                              if not r.finished and r.phase != "decode"
+                              and r.priority >= priority)
+                if backlog >= self.max_queue:
+                    self.shed_count += 1
+                    raise AdmissionError(
+                        f"pre-decode backlog {backlog} at priority >= "
+                        f"{priority} over threshold {self.max_queue}",
+                        self.retry_after_hint())
+            if self.shed_below_pages and priority <= 0:
+                free = self._decode_free_pages()
+                if free < self.shed_below_pages:
+                    self.shed_count += 1
+                    raise AdmissionError(
+                        f"decode pool pressure: {free} free pages below "
+                        f"threshold {self.shed_below_pages}",
+                        self.retry_after_hint())
+            rid = self._next_rid
+            self._next_rid += 1
+            routed = RoutedRequest(
+                rid, prompt, int(max_new), aux_inputs=aux_inputs or None,
+                cond_fp=KVC.conditioning_fingerprint(aux_inputs),
+                priority=priority, tpot_deadline_s=tpot_slo_s)
+            routed.submit_t = time.time()
+            if ttft_slo_s is not None:
+                routed.ttft_deadline = routed.submit_t + float(ttft_slo_s)
+            self.requests[rid] = routed
+            inner = self._make_inner(routed, prompt, int(max_new))
+            target = self._ingest_target()
+            if target is None:       # no life anywhere: park for restarts
+                self._pending_submit.append((inner, routed))
+            else:
+                self._place(inner, routed, target)
+        if target is not None:
+            target.wake()
+        return rid
+
+    def _make_inner(self, routed: RoutedRequest, prompt,
+                    max_new: int) -> Request:
+        inner = Request(routed.rid, np.asarray(prompt, np.int32), max_new,
+                        aux_inputs=routed.aux_inputs,
+                        cond_fp=routed.cond_fp, priority=routed.priority,
+                        tpot_deadline_s=routed.tpot_deadline_s)
+        inner.submit_t = routed.submit_t
+        # TTFT only binds until the first token was DELIVERED — a failover
+        # re-prefill after first-token must not re-arm the deadline
+        if routed.first_token_t is None:
+            inner.ttft_deadline = routed.ttft_deadline
+        routed.inner = inner
+        return inner
+
+    def _place(self, inner: Request, routed: RoutedRequest, target: Worker):
+        decode_ready = (inner.spilled is not None
+                        and inner.spill_meta["length"] >= len(inner.prompt))
+        routed.phase = "decode" if decode_ready else "prefill"
+        routed.where = target.name
+        if decode_ready:
+            self._maybe_adopt_rng(routed, target)
+        target.cb.submit_request(inner)
+        if routed.paused:
+            target.cb.pause(inner.rid)
+        target.wake()
+
+    # ---- target selection ---------------------------------------------
+    def _alive(self, workers: List[Worker]) -> List[Worker]:
+        return [w for w in workers if w.alive]
+
+    def _least_loaded(self, workers: List[Worker]) -> Optional[Worker]:
+        if not workers:
+            return None
+        return min(workers, key=lambda w: (len(w.cb.queue)
+                                           + int(w.cb.active.sum())))
+
+    def _ingest_target(self) -> Optional[Worker]:
+        cand = self._alive(self.prefill_workers)
+        if not cand or self.mode == "unified":
+            cand = cand or self._alive(self.workers)
+        return self._least_loaded(cand)
+
+    def _decode_target(self) -> Optional[Worker]:
+        cand = self._alive(self.decode_workers)
+        if not cand or self.mode == "unified":
+            cand = cand or self._alive(self.workers)
+        return self._least_loaded(cand)
+
+    def _decode_free_pages(self) -> int:
+        if self.pool is not None:
+            return len(self.pool.free_pages)
+        alive = self._alive(self.decode_workers) or self.decode_workers
+        return max(len(w.cb.free_pages) for w in alive)
+
+    # ---- flow control / cancellation ----------------------------------
+    def cancel(self, rid: int) -> bool:
+        with self._lock:
+            routed = self.requests.get(rid)
+            if routed is None or routed.finished:
+                return False
+            self._cancel_pending.add(rid)
+        self.wake()
+        return True
+
+    def pause(self, rid: int):
+        with self._lock:
+            routed = self.requests.get(rid)
+            if routed is None:
+                return
+            routed.paused = True
+            w = self._by_name.get(routed.where)
+        if w is not None:
+            w.cb.pause(rid)
+
+    def resume(self, rid: int):
+        with self._lock:
+            routed = self.requests.get(rid)
+            if routed is None:
+                return
+            routed.paused = False
+            w = self._by_name.get(routed.where)
+        if w is not None:
+            w.cb.resume(rid)
+            w.wake()
+
+    # ---- worker callbacks (engine threads) -----------------------------
+    def _worker_tokens(self, worker: Worker, req: Request, toks: List[int]):
+        with self._lock:
+            routed = self.requests.get(req.rid)
+            if routed is None or routed.finished:
+                return
+            if routed.first_token_t is None and toks:
+                routed.first_token_t = time.time()
+            routed.out.extend(toks)
+            cb = self.token_cb
+        if cb is not None:
+            cb(routed, toks)
+
+    def _worker_finish(self, worker: Worker, req: Request):
+        with self._lock:
+            routed = self.requests.get(req.rid)
+            if routed is None or routed.finished:
+                return
+            if routed.inner is not req:
+                return               # a superseded inner (failover race)
+            routed.cancelled = routed.cancelled or req.cancelled
+            routed.deadline_blown = routed.deadline_blown or \
+                req.deadline_blown
+            routed.error = routed.error or req.error
+            routed.preempt_count += req.preempt_count
+            routed.shared_tokens += req.shared_tokens
+            # an abort/cancel can finish an inner while its payload is
+            # still attached (it died in a worker queue) — nothing to free
+            # beyond what the worker already dropped
+            self._note_service(time.time() - routed.submit_t)
+            self._finish_routed(routed)
+
+    def _finish_routed(self, routed: RoutedRequest):
+        """Terminal bookkeeping + frontend notification. Callable from any
+        thread; idempotence is the caller's job (checked under _lock)."""
+        routed.finished = True
+        routed.phase = "done"
+        routed.inner = None
+        routed.where = None
+        self.completed += 1
+        cb = self.finish_cb
+        if cb is not None:
+            cb(routed)
+
+    # ---- payload plumbing (tick thread; pool locks, NOT router lock) ---
+    def _drop_payload(self, inner: Request):
+        """Release an in-router migration payload: page-handle refs return
+        to the shared pool, host snapshots drop."""
+        cb = self.workers[0].cb
+        with cb._pool_lock:
+            cb._drop_payload(inner)
+
+    def _re_prefill(self, routed: RoutedRequest, *, count_retry=False):
+        """Last-resort recovery: rebuild the request from its delivered
+        tokens. Greedy decoding makes the continuation exact: the new
+        prompt is (original prompt + delivered tokens), max_new is the
+        remainder — prefix caching turns the replay into a page-map when
+        configured. Called with NO locks held."""
+        with self._lock:
+            if routed.finished:
+                return
+            delivered = list(routed.out)
+            remaining = routed.max_new - len(delivered)
+            if remaining <= 0:
+                self._finish_routed(routed)
+                return
+            prompt = np.concatenate(
+                [routed.prompt, np.asarray(delivered, np.int32)]) \
+                if delivered else routed.prompt
+            inner = self._make_inner(routed, prompt, remaining)
+            self.re_prefills += 1
+            target = self._ingest_target()
+            if target is None:
+                routed.phase = "prefill"
+                routed.where = None
+                self._pending_submit.append((inner, routed))
+            else:
+                self._place(inner, routed, target)
+        if target is not None:
+            target.wake()
+
+    # ---- the tick loop --------------------------------------------------
+    def _main(self):
+        while not self._stopping.is_set():
+            try:
+                self._collect_ready()
+                self._send_handoffs()
+                self._check_workers()
+                self._update_mode()
+                self._apply_cancels()
+                self._flush_pending()
+            except Exception:        # noqa: BLE001 — the router must outlive
+                import traceback     # any single tick's surprise
+                traceback.print_exc()
+            time.sleep(self.tick_s)
+
+    def _collect_ready(self):
+        """Drain boundary-spilled requests off every prefill worker into
+        the handoff queue (dead requests drop their payload instead)."""
+        drops = []
+        for w in self.prefill_workers:
+            for inner in w.cb.drain_ready():
+                with self._lock:
+                    routed = self.requests.get(inner.rid)
+                    live = (routed is not None and not routed.finished
+                            and routed.inner is inner)
+                    if live:
+                        routed.phase = "handoff"
+                        routed.where = None
+                        self._handoffs.append(_Handoff(
+                            inner, routed, due=time.time()))
+                if not live:
+                    drops.append(inner)
+        for inner in drops:
+            self._drop_payload(inner)
+
+    def _send_handoffs(self):
+        """Deliver due handoffs to decode workers, with the three failure
+        modes: drop (payload lost -> re-prefill), stall past the timeout
+        (payload retained -> bounded backoff retry -> re-prefill), ok."""
+        now = time.time()
+        with self._lock:
+            due, keep = [], collections.deque()
+            while self._handoffs:
+                h = self._handoffs.popleft()
+                (due if h.due <= now else keep).append(h)
+            self._handoffs = keep
+        for h in due:
+            with self._lock:
+                if h.routed.finished or h.routed.inner is not h.inner:
+                    dead = True
+                else:
+                    dead = False
+            if dead:
+                self._drop_payload(h.inner)
+                continue
+            target = self._decode_target()
+            if target is None:       # nowhere to send: wait for a restart
+                with self._lock:
+                    self._handoffs.append(h)
+                continue
+            verdict = self._send(h, target)
+            if verdict == "ok":
+                with self._lock:
+                    self.migrations += 1
+                    h.inner.migrations += 1
+                    h.routed.migrations += 1
+                    h.routed.phase = "decode"
+                    h.routed.where = target.name
+                    paused = h.routed.paused
+                if paused:
+                    target.cb.pause(h.inner.rid)
+                target.wake()
+            elif verdict == "lost":
+                with self._lock:
+                    self.handoff_drops += 1
+                self._drop_payload(h.inner)
+                self._re_prefill(h.routed)
+            else:                    # timeout: payload retained
+                h.attempts += 1
+                with self._lock:
+                    self.handoff_retries += 1
+                if h.attempts > self.handoff_max_retries:
+                    self._drop_payload(h.inner)
+                    self._re_prefill(h.routed)
+                else:
+                    h.due = time.time() + (self.handoff_backoff_s
+                                           * 2 ** (h.attempts - 1))
+                    with self._lock:
+                        self._handoffs.append(h)
+
+    def _send(self, h: _Handoff, target: Worker) -> str:
+        if self.faults is not None and self.faults.fire("handoff_drop"):
+            return "lost"
+        t0 = time.time()
+        if self.faults is not None:
+            self.faults.maybe_sleep("handoff_stall")
+        if time.time() - t0 > self.handoff_timeout_s:
+            return "timeout"
+        with self._lock:             # adopt BEFORE the engine can step
+            self._maybe_adopt_rng(h.routed, target)
+        target.cb.submit_request(h.inner)
+        return "ok"
+
+    def _maybe_adopt_rng(self, routed: RoutedRequest, target: Worker):
+        """One-shot rng handover: an IDLE receiving engine adopts the dead
+        worker's decode stream so the failed-over continuation is exact; a
+        busy receiver keeps its own stream (adopting would perturb its
+        current tenants)."""
+        if routed.resume_rng is None:
+            return
+        cb = target.cb
+        if not cb.active.any() and not cb.queue:
+            target.runner.rng = routed.resume_rng
+        routed.resume_rng = None
+
+    def _check_workers(self):
+        """Heartbeat sweep: harvest dead workers and fail their in-flight
+        work over; restart them after ``restart_dead_after_s``."""
+        now = time.time()
+        for w in self.workers:
+            if not w.started or self._stopping.is_set():
+                continue
+            r = w.runner
+            dead = r.died or (not r._thread.is_alive())
+            if dead and not w.failed_over:
+                w.failed_over = True
+                if self.restart_dead_after_s is not None:
+                    w.restart_at = now + self.restart_dead_after_s
+                self._failover(w)
+            if (w.failed_over and w.restart_at is not None
+                    and now >= w.restart_at
+                    and not r._thread.is_alive()):
+                w.restart()
+
+    def _failover(self, worker: Worker):
+        """Harvest a dead worker's batcher and re-route every survivor.
+        Payload-intact requests (queued with an unrestored payload, or
+        detached page handles on a shared pool) re-migrate without replay;
+        requests whose device KV died with the worker re-prefill from
+        prompt + delivered tokens."""
+        worker.join_dead(2.0)
+        # worker_die raises at the top of _step, before the aborted step
+        # consumed any rng — the runner's rng IS the exact resume state of
+        # this worker's decode stream. Prefill-role streams in split mode
+        # were never consumed, so only decode/unified streams travel.
+        resume_rng = (worker.runner.rng
+                      if worker.role == "decode" or self.mode == "unified"
+                      else None)
+        # on a shared pool the KV physically survives the worker: detach
+        # active slots into page handles instead of discarding them
+        harvested = worker.cb.extract_all(detach=(self.handoff == "pages"))
+        if isinstance(worker.cb, PrefillBatcher):
+            harvested.extend(worker.cb.drain_ready())
+        replays = []
+        for inner in harvested:
+            with self._lock:
+                routed = self.requests.get(inner.rid)
+                if (routed is None or routed.finished
+                        or routed.inner is not inner):
+                    drop = True
+                else:
+                    drop = False
+                    self.failovers += 1
+                    routed.failovers += 1
+                    inner.failovers += 1
+                    routed.preempt_count += inner.preempt_count
+                    inner.preempt_count = 0
+                    routed.resume_rng = resume_rng
+                    if inner.spilled is not None:
+                        # payload intact: still mid-prefill -> back to a
+                        # prefill worker (restore + continue committing);
+                        # decode-ready -> the handoff queue
+                        if (inner.spill_meta["length"]
+                                >= len(inner.prompt)):
+                            routed.phase = "handoff"
+                            routed.where = None
+                            self._handoffs.append(_Handoff(
+                                inner, routed, due=time.time()))
+                        else:
+                            target = self._ingest_target()
+                            if target is None:
+                                self._pending_submit.append((inner, routed))
+                            else:
+                                self._place(inner, routed, target)
+                    else:
+                        replays.append(routed)
+            if drop:
+                self._drop_payload(inner)
+        for routed in replays:
+            self._re_prefill(routed)
+
+    def _update_mode(self):
+        """Degrade to unified when one role has no survivors; re-split when
+        both do. Mode flips only change where NEW work lands plus the
+        ``boundary_spill`` flag — requests in flight migrate themselves."""
+        p_alive = bool(self._alive(self.prefill_workers))
+        d_alive = bool(self._alive(self.decode_workers))
+        with self._lock:
+            if self.mode == "split" and p_alive != d_alive:
+                self.mode = "unified"
+                self.degradations += 1
+                flip = False
+            elif self.mode == "unified" and p_alive and d_alive:
+                self.mode = "split"
+                self.resplits += 1
+                flip = True
+            else:
+                return
+        for w in self.prefill_workers:
+            w.cb.boundary_spill = flip
+            w.wake()
+
+    def _apply_cancels(self):
+        with self._lock:
+            pending = list(self._cancel_pending)
+        for rid in pending:
+            drop_inner = None
+            with self._lock:
+                routed = self.requests.get(rid)
+                if routed is None or routed.finished:
+                    self._cancel_pending.discard(rid)
+                    continue
+                if routed.phase == "handoff":
+                    self._handoffs = collections.deque(
+                        h for h in self._handoffs if h.inner.rid != rid)
+                    drop_inner = routed.inner
+                    routed.cancelled = True
+                    self._finish_routed(routed)
+                    self._cancel_pending.discard(rid)
+                    w = None
+                elif routed.where is None:
+                    # parked while no worker was alive: cancel it here
+                    self._pending_submit = collections.deque(
+                        (i, r) for i, r in self._pending_submit
+                        if r.rid != rid)
+                    drop_inner = routed.inner
+                    routed.cancelled = True
+                    self._finish_routed(routed)
+                    self._cancel_pending.discard(rid)
+                    w = None
+                else:
+                    w = self._by_name.get(routed.where)
+            if drop_inner is not None:
+                self._drop_payload(drop_inner)
+            elif w is not None:
+                # retried every tick until the worker's finish lands (the
+                # request may be mid-migration when the cancel arrives)
+                w.cb.cancel(rid)
+                w.wake()
+
+    def _flush_pending(self):
+        """Re-route submissions parked while no worker was alive."""
+        with self._lock:
+            if not self._pending_submit:
+                return
+            parked, self._pending_submit = (list(self._pending_submit),
+                                            collections.deque())
+            for inner, routed in parked:
+                if routed.finished:
+                    continue
+                target = (self._ingest_target()
+                          if inner.spilled is None
+                          or inner.spill_meta["length"] < len(inner.prompt)
+                          else self._decode_target())
+                if target is None:
+                    self._pending_submit.append((inner, routed))
+                else:
+                    self._place(inner, routed, target)
+                    target.wake()
+
+    # ---- health ---------------------------------------------------------
+    def stats(self) -> dict:
+        with self._lock:
+            inflight = sum(1 for r in self.requests.values()
+                           if not r.finished)
+            pending_handoffs = len(self._handoffs)
+        return {
+            "router": True,
+            "mode": self.mode,
+            "handoff": self.handoff,
+            "inflight": inflight,
+            "completed": self.completed,
+            "pending_handoffs": pending_handoffs,
+            "migrations": self.migrations,
+            "failovers": self.failovers,
+            "handoff_retries": self.handoff_retries,
+            "handoff_drops": self.handoff_drops,
+            "re_prefills": self.re_prefills,
+            "degradations": self.degradations,
+            "resplits": self.resplits,
+            "shared_pool_free": (len(self.pool.free_pages)
+                                 if self.pool is not None else None),
+            "workers": [w.stats() for w in self.workers],
+        }
+
+
+class RouterRunner(EngineRunner):
+    """``EngineRunner``-shaped facade over a ``DisaggRouter`` for the HTTP
+    frontend: no engine thread of its own (the router runs its workers and
+    tick loop), but the same ``TokenStream`` attach/orphan bookkeeping —
+    ``EngineRunner.__init__`` wires ``router.token_cb`` to the inherited
+    ``_on_tokens`` and this subclass wires ``router.finish_cb`` to the
+    inherited ``_finish``."""
+
+    def __init__(self, router: DisaggRouter, rng=None,
+                 max_restarts: int = 3):
+        super().__init__(router, rng=rng, max_restarts=max_restarts,
+                         name="router-facade")
+        router.finish_cb = self._finish
+
+    def start(self):
+        self.cb.start()
+
+    def wake(self):
+        self.cb.wake()
+
+    def stop(self, timeout: Optional[float] = None):
+        self.cb.stop(timeout if timeout is not None else 60.0)

@@ -57,7 +57,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +68,7 @@ from repro.configs import DBConfig, get_config, reduced
 from repro.core import DiffusionBlocksModel
 from repro.checkpoint import load_blocks
 from repro.data import MarkovLM
+from repro.launch.faults import WorkerDied
 from repro.nn import cache as KVC
 
 DEFAULT_CHUNK = 64
@@ -391,6 +392,13 @@ class Request:
     spilled: Optional[KVC.SpilledSlot] = None  # host snapshot while queued
     spill_meta: Optional[dict] = None          # lengths/cond row to restore
     preempt_count: int = 0
+    # --- disaggregated prefill/decode migration (launch/router) ---
+    # page-handle handoff over a SHARED pool: the physical pages holding this
+    # request's committed KV, refs still held, travelling with the request —
+    # admission maps them instead of allocating + byte-copying
+    handoff_pages: Optional[List[int]] = None
+    migrations: int = 0           # completed prefill->decode handoffs
+    failovers: int = 0            # re-routed off a dead worker
 
     @property
     def done(self) -> bool:
@@ -400,6 +408,47 @@ class Request:
     def ttft(self) -> Optional[float]:
         return (None if self.first_token_t is None
                 else self.first_token_t - self.submit_t)
+
+
+def _paged_leaves(kv) -> list:
+    """The PagedKV leaves of a model cache, in flatten order (dense per-slot
+    leaves excluded) — the part of the cache a SharedPagePool makes common."""
+    return [x for x in jax.tree_util.tree_leaves(kv, is_leaf=KVC._is_pkv)
+            if KVC._is_pkv(x)]
+
+
+def _graft_paged(kv, leaves: list):
+    """Replace the PagedKV leaves of ``kv`` with ``leaves`` (same order),
+    leaving dense per-slot state untouched — a reference swap, no copy."""
+    it = iter(leaves)
+    return jax.tree_util.tree_map(
+        lambda x: next(it) if KVC._is_pkv(x) else x, kv,
+        is_leaf=KVC._is_pkv)
+
+
+class SharedPagePool:
+    """ONE physical page pool shared by several batchers (disaggregated
+    prefill/decode with page-handle migration): the free list, the refcount
+    map, and the canonical paged-KV leaves are common; each batcher keeps its
+    own dense per-slot state (recurrent rows, cross blocks) and its own page
+    table. Steps of every sharing batcher serialize under ``lock``; a
+    stepping batcher PULLS the canonical paged leaves before mutating and
+    PUBLISHES them after, so a page a prefill worker hands to a decode worker
+    is visible there without copying a byte — the request carries only the
+    physical page ids (``Request.handoff_pages``)."""
+
+    def __init__(self, total_pages: int):
+        self.total_pages = int(total_pages)
+        self.free_pages: List[int] = list(range(1, self.total_pages))
+        self.page_refs: Dict[int, int] = {}
+        self.lock = threading.RLock()
+        self.paged: Optional[list] = None    # canonical PagedKV leaves
+
+    def release(self, batcher: "ContinuousBatcher", pages) -> None:
+        """Return refs the ROUTER holds (a dropped in-transit handoff) to the
+        shared pool, serialized against every sharing batcher's step."""
+        with self.lock:
+            batcher._release_pages(pages)
 
 
 class ContinuousBatcher:
@@ -475,7 +524,8 @@ class ContinuousBatcher:
                  prefix_cache: bool = False,
                  max_queue: Optional[int] = None,
                  shed_below_pages: int = 0,
-                 faults=None):
+                 faults=None,
+                 shared_pool: Optional[SharedPagePool] = None):
         self.dbm, self.params = dbm, params
         chunk_size = (min(DEFAULT_CHUNK, max_prompt) if chunk_size is None
                       else chunk_size)
@@ -502,10 +552,34 @@ class ContinuousBatcher:
         cow_spare = num_slots if prefix_cache else 0
         self.total_pages = (1 + num_slots * pps + cow_spare
                             if total_pages is None else total_pages)
+        self._shared = shared_pool
+        if shared_pool is not None:
+            self.total_pages = shared_pool.total_pages
         self.kv = dbm.model.init_paged_cache(num_slots, self.total_pages,
                                              page_size, self.eng.pol)
-        self.free_pages = list(range(1, self.total_pages))
-        self.page_refs = {}          # phys page -> refcount (slots + cache)
+        if shared_pool is None:
+            self.free_pages = list(range(1, self.total_pages))
+            self.page_refs = {}      # phys page -> refcount (slots + cache)
+            self._pool_lock = threading.RLock()
+        else:
+            # shared pool: common free list / refcounts / paged leaves, one
+            # lock serializing every sharing batcher's step. The FIRST
+            # registrant's freshly-initialized paged leaves become canonical;
+            # later registrants drop their own and adopt (shapes must match
+            # — same model, page size and pool size).
+            self.free_pages = shared_pool.free_pages
+            self.page_refs = shared_pool.page_refs
+            self._pool_lock = shared_pool.lock
+            mine = _paged_leaves(self.kv)
+            if shared_pool.paged is None:
+                shared_pool.paged = mine
+            else:
+                assert len(shared_pool.paged) == len(mine) and all(
+                    a.k.shape == b.k.shape for a, b in
+                    zip(shared_pool.paged, mine)), \
+                    "batchers sharing a pool must serve the same model with " \
+                    "the same page_size/total_pages"
+                self.kv = _graft_paged(self.kv, shared_pool.paged)
         self.num_slots = num_slots
         self.table = np.zeros((num_slots, pps), np.int32)   # 0 = trash page
         self.lengths = np.zeros(num_slots, np.int32)
@@ -518,6 +592,8 @@ class ContinuousBatcher:
         self.queue: collections.deque = collections.deque()
         self._next_rid = 0
         self.steps = 0               # decode-segment scan steps (all slots)
+        self.ingest_dispatches = 0   # prefill-chunk calls THIS batcher made
+        self.decode_dispatches = 0   # decode-segment calls THIS batcher made
         self.cow_copies = 0          # copy-on-write page copies performed
         self._lock = threading.Lock()        # guards queue/cancel/pause sets
         self._cancel_pending: set = set()    # rids to abort at next step
@@ -603,6 +679,15 @@ class ContinuousBatcher:
         with self._lock:
             self.queue.append(req)
         return rid
+
+    def submit_request(self, req: Request) -> None:
+        """Enqueue a pre-built ``Request`` (thread-safe). The disaggregation
+        router hands work over this way: rids are allocated globally by the
+        router and admission control already ran there, so the request lands
+        in the queue untouched — including a migration payload
+        (``req.spilled`` / ``req.handoff_pages``) to restore at admission."""
+        with self._lock:
+            self.queue.append(req)
 
     def cancel(self, rid: int) -> bool:
         """Abort request ``rid`` (thread-safe). Applied at the next ``step``
@@ -780,10 +865,15 @@ class ContinuousBatcher:
                 self.page_refs[p] += 1
             total = KVC.pages_for(len(req.prompt) + req.max_new,
                                   self.page_size)
+            # page-handle migration (shared pool): the request arrives
+            # already holding refs on the physical pages with its committed
+            # KV — they map directly, only the scratch tail allocates
+            handed = req.handoff_pages or []
             # fresh pages: everything past the shared prefix, PLUS a copy
             # destination for a matched partial tail page (it is CoW'd at
             # admission — the slot's first write lands inside it)
-            need = total - len(match.pages) + (1 if match.tail_tokens else 0)
+            need = (total - len(match.pages) - len(handed)
+                    + (1 if match.tail_tokens else 0))
             if need > len(self.free_pages) and self.prefix is not None:
                 self.prefix.evict(self.page_refs, self.free_pages, need)
             # preempt STRICTLY lower-priority running work for the shortfall.
@@ -820,6 +910,7 @@ class ContinuousBatcher:
                     self._release_pages(pinned_tail)   # unpin the source
                     pinned_tail = []
                     row.append(dst)
+            row.extend(handed)         # page-handle: refs already travelled
             while ok and len(row) < total:
                 p = self._alloc_page()
                 if p is None:
@@ -828,9 +919,13 @@ class ContinuousBatcher:
                     row.append(p)
             if not ok:
                 # the allocator refused mid-build (fault injection, or a
-                # racing eviction): unwind every ref this admission took and
-                # retry next step — never leave a half-mapped slot
-                self._release_pages(row + pinned_tail)
+                # racing eviction): unwind every ref this admission took —
+                # NOT the handed migration pages, whose refs belong to the
+                # in-transit request — and retry next step; never leave a
+                # half-mapped slot
+                keep = set(handed)
+                self._release_pages([p for p in row if p not in keep]
+                                    + pinned_tail)
                 self._requeue(req)
                 break
             req.pages = row
@@ -879,39 +974,83 @@ class ContinuousBatcher:
                                self.page_refs, req.cond_fp)
             req.registered = True
 
-    # ---- preemption: page spill / restore ----------------------------
-    def _preempt_slot(self, s: int) -> Request:
+    # ---- preemption / migration: page spill, detach, restore ----------
+    def _clear_slot_row(self, s: int) -> None:
+        """Blank slot ``s``'s scheduling row after its request left (spill,
+        detach or retire) — the slot is recyclable afterwards."""
+        self.table[s, :] = KVC.TRASH_PAGE
+        self.active[s] = False
+        self.cond_lengths[s] = 0
+        self.lengths[s] = self.plens[s] = self.stop_at[s] = 0
+        self.slot_req[s] = None
+
+    def _spill_slot(self, s: int) -> Request:
         """Spill slot ``s`` to host memory and free it: the content of its
         USED pages (``pages_for(lengths[s])`` — later pages are scratch
         hidden by length-aware masking) and its dense per-slot rows
         (recurrent / cross state, ``model.paged_state_axes``) snapshot to
-        numpy, its page refs release, and the request re-queues at the FRONT
-        with its original rid, partial output intact. Restore happens at a
-        later admission (``_restore_into_slot``); the round trip is
-        rng-neutral — no dispatch runs for a spilled slot, so nothing
-        perturbs the decode rng stream (same discipline as ``pause``)."""
+        numpy, its page refs release, and the request pops with the snapshot
+        attached. Restore happens at a later admission — possibly into a
+        DIFFERENT batcher's pool (the disaggregation router migrates
+        finished-prefill requests this way) — via ``_restore_into_slot``;
+        the round trip is rng-neutral: no dispatch runs for a spilled slot,
+        so nothing perturbs the decode rng stream (same discipline as
+        ``pause``)."""
         req = self.slot_req[s]
         n_used = KVC.pages_for(int(self.lengths[s]), self.page_size)
         used = [int(self.table[s, i]) for i in range(n_used)]
         req.spilled = KVC.spill_slot(self.kv, s, used, self._axes)
         req.spill_meta = dict(length=int(self.lengths[s]),
                               cond_length=int(self.cond_lengths[s]))
-        req.preempt_count += 1
-        self.preemptions += 1
         self._release_pages(req.pages)
         req.pages = []
-        self.table[s, :] = KVC.TRASH_PAGE
-        self.active[s] = False
-        self.cond_lengths[s] = 0
-        self.lengths[s] = self.plens[s] = self.stop_at[s] = 0
-        self.slot_req[s] = None
+        self._clear_slot_row(s)
+        return req
+
+    def _detach_slot(self, s: int) -> Request:
+        """Page-handle variant of ``_spill_slot`` for batchers on a SHARED
+        pool: snapshot only the dense per-slot rows and hand the USED
+        physical pages themselves to the request (``handoff_pages`` — their
+        refs travel with it; scratch tail pages release). The receiving
+        batcher maps those pages instead of allocating + byte-copying, so
+        the migration moves the page table, not the KV bytes. Shared prefix
+        pages stay shared: their refcount rides along and the receiver's
+        copy-on-write machinery still guards divergent writes."""
+        req = self.slot_req[s]
+        n_used = KVC.pages_for(int(self.lengths[s]), self.page_size)
+        req.handoff_pages = [int(self.table[s, i]) for i in range(n_used)]
+        req.spilled = KVC.spill_slot(self.kv, s, [], self._axes)
+        req.spill_meta = dict(length=int(self.lengths[s]),
+                              cond_length=int(self.cond_lengths[s]))
+        self._release_pages(req.pages[n_used:])
+        req.pages = []
+        self._clear_slot_row(s)
+        return req
+
+    def _preempt_slot(self, s: int) -> Request:
+        """Spill slot ``s`` and re-queue its request at the FRONT with its
+        original rid, partial output intact (pool-pressure preemption)."""
+        req = self._spill_slot(s)
+        req.preempt_count += 1
+        self.preemptions += 1
         self._requeue(req)
         return req
+
+    def _drop_payload(self, req: Request) -> None:
+        """Discard an unrestored migration/preemption payload when its
+        request dies in the queue (cancel, deadline, abort): the host
+        snapshot drops, and page-handle refs return to the shared pool —
+        queued requests must never keep pages past their death."""
+        if req.handoff_pages:
+            self._release_pages(req.handoff_pages)
+        req.handoff_pages = None
+        req.spilled = req.spill_meta = None
 
     def _restore_into_slot(self, s: int, req: Request):
         """Scatter a spilled request's snapshot into its freshly mapped slot
         (after ``reset_paged_slots`` zeroed the row): page content lands in
-        the slot's new private pages, dense rows overwrite the reset state,
+        the slot's new private pages (none for a page-handle migration — the
+        handed pages already hold it), dense rows overwrite the reset state,
         and the scheduling row resumes at the spilled length. The physical
         page ids usually differ from the spill-time ones — only the logical
         order matters."""
@@ -921,6 +1060,7 @@ class ContinuousBatcher:
         self.lengths[s] = meta["length"]
         self.cond_lengths[s] = meta["cond_length"]
         req.spilled = req.spill_meta = None
+        req.handoff_pages = None
         self.restores += 1
 
     def _apply_preemptions(self):
@@ -975,6 +1115,7 @@ class ContinuousBatcher:
                         and now > r.ttft_deadline):
                     r.deadline_blown = True
                     r.error = "ttft deadline exceeded"
+                    self._drop_payload(r)
                     out.append(r)
                 else:
                     kept.append(r)
@@ -1005,23 +1146,48 @@ class ContinuousBatcher:
         queue, so the fresh loop re-admits and resumes them with no token
         loss or duplication — ``req.out`` persists and ``_collect`` only
         appends newly emitted tokens."""
-        for s in range(self.num_slots):
-            if self.active[s]:
-                self._preempt_slot(s)
+        with self._pool_lock:
+            for s in range(self.num_slots):
+                if self.active[s]:
+                    self._preempt_slot(s)
 
     def abort_all(self, msg: str) -> List[Request]:
         """Error out every queued and active request (the supervisor giving
         up after repeated crashes): slots retire, pages return to the pool,
         and each request carries ``error=msg`` so its stream can finish
         cleanly instead of hanging. Returns the aborted requests."""
-        with self._lock:
-            reqs = list(self.queue)
-            self.queue.clear()
-        for s in range(self.num_slots):
-            if self.slot_req[s] is not None and self.active[s]:
-                reqs.append(self._retire_slot(s))
+        with self._pool_lock:
+            with self._lock:
+                reqs = list(self.queue)
+                self.queue.clear()
+            for r in reqs:
+                self._drop_payload(r)
+            for s in range(self.num_slots):
+                if self.slot_req[s] is not None and self.active[s]:
+                    reqs.append(self._retire_slot(s))
         for r in reqs:
             r.error = r.error or msg
+        return reqs
+
+    def extract_all(self, detach: bool = False) -> List[Request]:
+        """Pop every queued and active request WITHOUT erroring them — the
+        failover harvest after this batcher's worker died. By default active
+        slots release their pages (their device KV died with the worker;
+        partial output and any unrestored migration payload survive on the
+        host, so the router re-prefills). ``detach=True`` — shared-pool
+        failover, where the KV physically survives in the common segment —
+        hands each active slot's used pages to its request
+        (``handoff_pages``) so the router can re-migrate without replay.
+        Queued requests pop as-is, payloads intact. The pool ends whole and
+        the router re-routes the survivors."""
+        with self._pool_lock:
+            with self._lock:
+                reqs = list(self.queue)
+                self.queue.clear()
+            for s in range(self.num_slots):
+                if self.slot_req[s] is not None and self.active[s]:
+                    reqs.append(self._detach_slot(s) if detach
+                                else self._retire_slot(s))
         return reqs
 
     def _retire_slot(self, s: int) -> Request:
@@ -1068,6 +1234,7 @@ class ContinuousBatcher:
             for r in self.queue:
                 if r.rid in cancels:
                     r.cancelled = True
+                    self._drop_payload(r)
                     out.append(r)
                 else:
                     kept.append(r)
@@ -1127,11 +1294,33 @@ class ContinuousBatcher:
         Copy-on-write exhaustion no longer raises in EITHER mode: the
         scheduler spills the lowest-priority active slot to host memory
         instead (``_make_writable_or_preempt``), so pool pressure degrades
-        to preemption latency, never a deadlock or a lost request."""
+        to preemption latency, never a deadlock or a lost request.
+
+        On a ``SharedPagePool`` the step serializes with every sharing
+        batcher under the pool lock, pulling the canonical paged leaves
+        before mutating and publishing them after — even when the body
+        raises (an injected crash), so the pool view other workers adopt is
+        never lost."""
+        with self._pool_lock:
+            if self._shared is not None:
+                self.kv = _graft_paged(self.kv, self._shared.paged)
+            try:
+                return self._step(rng, strict=strict)
+            finally:
+                if self._shared is not None:
+                    self._shared.paged = _paged_leaves(self.kv)
+
+    def _step(self, rng, *, strict: bool = True):
         if self.faults is not None:
             # injected BEFORE any bookkeeping mutates, so a crash at this
-            # hook leaves the batcher consistent for recover()
+            # hook leaves the batcher consistent for recover(); worker_die
+            # is the harder failure — the supervisor treats it as process
+            # death (no restart), the ROUTER must fail the work over
             self.faults.maybe_raise("engine_crash")
+            if self.faults.fire("worker_die"):
+                raise WorkerDied(
+                    f"injected worker_die "
+                    f"(call {self.faults.calls['worker_die']})")
         finished = self._apply_cancellations()
         self._apply_preemptions()
         finished.extend(self._enforce_deadlines())
@@ -1156,6 +1345,7 @@ class ContinuousBatcher:
                 self._requeue(req)
                 raise RuntimeError(msg)
             req.error = msg
+            self._drop_payload(req)
             finished.append(req)
             return rng, finished
         in_prompt = self.active & (self.lengths < self.plens)
@@ -1178,6 +1368,7 @@ class ContinuousBatcher:
             self.lengths = np.array(lengths)
             self.eng.dispatches += 1
             self.eng.prefill_steps += 1
+            self.ingest_dispatches += 1
             self._register_prefixes()
         decode_ready = (self.active & (self.lengths >= self.plens)
                         if self.chunked else self.active)
@@ -1198,6 +1389,7 @@ class ContinuousBatcher:
                 jnp.asarray(decode_ready), rng,
                 jnp.asarray(self.cond_lengths), n=self.seg_len)
             self.eng.dispatches += 1
+            self.decode_dispatches += 1
             self.steps += self.seg_len
             self.lengths = np.array(lengths)           # host copy
             self._collect(np.asarray(emitted))         # (slots, seg)

@@ -149,22 +149,26 @@ class EngineRunner:
     instead of a hung connection."""
 
     def __init__(self, batcher: ContinuousBatcher, rng=None,
-                 max_restarts: int = 3):
+                 max_restarts: int = 3, fatal_types: tuple = (),
+                 name: str = "engine"):
         self.cb = batcher
         self.rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.max_restarts = max_restarts
-        self._streams: Dict[int, TokenStream] = {}
-        self._orphans: Dict[int, List[List[int]]] = {}
+        self.fatal_types = fatal_types   # exceptions = process death: no
+        self._streams: Dict[int, TokenStream] = {}   # restart, no abort —
+        self._orphans: Dict[int, List[List[int]]] = {}   # router fails over
         self._slock = threading.Lock()
         self._work = threading.Event()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._main,
-                                        name="engine", daemon=True)
+                                        name=name, daemon=True)
         self.served = 0
         self.crashes = 0             # engine-thread exceptions caught
         self.restarts = 0            # successful supervisor recoveries
         self.last_error: Optional[str] = None
         self.gave_up = False         # crash budget exhausted; engine dead
+        self.died = False            # fatal exception hit: worker is dead
+        self.last_beat = time.time()  # heartbeat stamp (loop-top, each turn)
         batcher.token_cb = self._on_tokens
 
     def start(self):
@@ -231,6 +235,7 @@ class EngineRunner:
 
     def _main(self):
         while True:
+            self.last_beat = time.time()
             if not self.cb.has_work():
                 if self._stop.is_set():
                     break
@@ -243,6 +248,13 @@ class EngineRunner:
             except Exception as e:      # noqa: BLE001 — supervisor boundary
                 self.crashes += 1
                 self.last_error = f"{type(e).__name__}: {e}"
+                if isinstance(e, self.fatal_types):
+                    # simulated process death: the thread exits without
+                    # recovery OR failing streams — a dead process cannot
+                    # apologize to its clients. The router's heartbeat check
+                    # notices and fails the in-flight work over.
+                    self.died = True
+                    return
                 if self.crashes > self.max_restarts:
                     self._fail_inflight(
                         f"engine failed after {self.crashes} crashes "
@@ -323,8 +335,15 @@ class InferenceServer:
                  aux_registry: Optional[dict] = None, rng=None,
                  max_restarts: int = 3):
         self.cb = batcher
-        self.runner = EngineRunner(batcher, rng=rng,
-                                   max_restarts=max_restarts)
+        if getattr(batcher, "is_router", False):
+            # disaggregated fleet: the router runs its own workers + tick
+            # thread; RouterRunner is the stream-bookkeeping facade
+            from repro.launch.router import RouterRunner
+            self.runner = RouterRunner(batcher, rng=rng,
+                                       max_restarts=max_restarts)
+        else:
+            self.runner = EngineRunner(batcher, rng=rng,
+                                       max_restarts=max_restarts)
         self.host, self._want_port = host, port
         self.queue_cap = queue_cap
         self.aux_registry = dict(aux_registry or {})
@@ -397,8 +416,23 @@ class InferenceServer:
         """``GET /v1/health`` payload: everything an external load balancer
         needs for shed/route decisions — live queue depth, slot and page
         headroom, drain state — plus the robustness counters (preemptions,
-        SLO cancels, sheds, supervisor crash/restart tallies)."""
+        SLO cancels, sheds, supervisor crash/restart tallies).
+
+        Disaggregated servers report the router surface instead: mode,
+        migration/failover/handoff-retry counters, and a per-worker list
+        (role, alive, heartbeat age, pool headroom, inflight)."""
         cb = self.cb
+        if getattr(cb, "is_router", False):
+            out = cb.stats()
+            out.update({
+                "served": self.runner.served,
+                "shed": cb.shed_count,
+                "max_queue": cb.max_queue,
+                "backpressure_pauses": self.backpressure_pauses,
+                "draining": self.draining,
+                "engine_alive": any(w["alive"] for w in out["workers"]),
+            })
+            return out
         active = int(cb.active.sum())
         return {
             "active_slots": active,
@@ -762,16 +796,26 @@ def build_batcher_from_args(args):
         for i in range(args.cond_pool):
             aux_registry[f"cond{i}"] = {
                 aux_key: rs.randn(Sk, cfg.d_model).astype(np.float32)}
-    cb = ContinuousBatcher(
-        dbm, params, num_slots=args.num_slots, page_size=args.page_size,
+    cb_kw = dict(
+        num_slots=args.num_slots, page_size=args.page_size,
         max_prompt=args.prompt_len, max_len=args.prompt_len + args.max_new,
         seg_len=args.seg_len, temperature=args.temperature,
         top_k=args.top_k, precision=args.precision, impl=args.impl,
         prefill=args.prefill,
         chunk_size=min(args.chunk_size, max(args.prompt_len, 1)),
-        prefix_cache=args.prefix_cache,
-        max_queue=getattr(args, "max_queue", None),
-        shed_below_pages=getattr(args, "shed_below_pages", 0))
+        prefix_cache=args.prefix_cache)
+    if getattr(args, "disagg", False):
+        from repro.launch.router import DisaggRouter
+        cb = DisaggRouter(
+            dbm, params, n_prefill=args.prefill_workers,
+            n_decode=args.decode_workers, handoff=args.handoff,
+            restart_dead_after_s=getattr(args, "restart_dead_after", None),
+            max_queue=getattr(args, "max_queue", None),
+            shed_below_pages=getattr(args, "shed_below_pages", 0), **cb_kw)
+    else:
+        cb = ContinuousBatcher(
+            dbm, params, max_queue=getattr(args, "max_queue", None),
+            shed_below_pages=getattr(args, "shed_below_pages", 0), **cb_kw)
     return dbm, params, cb, aux_registry
 
 
@@ -806,6 +850,19 @@ def add_server_args(ap: argparse.ArgumentParser):
     ap.add_argument("--shed-below-pages", type=int, default=0,
                     help="admission control: shed batch-class requests "
                          "while free pages are below this threshold")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: prefill and decode on "
+                         "separate supervised workers behind a migrating "
+                         "router (see repro.launch.router)")
+    ap.add_argument("--prefill-workers", type=int, default=1)
+    ap.add_argument("--decode-workers", type=int, default=1)
+    ap.add_argument("--handoff", choices=("copy", "pages"), default="copy",
+                    help="migration payload: 'copy' snapshots KV to host "
+                         "and restores into the decode pool; 'pages' moves "
+                         "page-table handles on one shared pool")
+    ap.add_argument("--restart-dead-after", type=float, default=None,
+                    help="seconds before a dead worker is restarted "
+                         "(default: never — survivors absorb the load)")
 
 
 async def _serve_forever(args):
@@ -814,9 +871,13 @@ async def _serve_forever(args):
                              queue_cap=args.queue_cap,
                              aux_registry=aux_registry)
     await server.start()
+    if getattr(cb, "is_router", False):
+        shape = (f"disagg {len(cb.prefill_workers)}p+"
+                 f"{len(cb.decode_workers)}d, handoff={cb.handoff}")
+    else:
+        shape = f"slots={cb.num_slots}, pool={cb.total_pages} pages"
     print(f"serving on http://{server.host}:{server.port}  "
-          f"(slots={cb.num_slots}, pool={cb.total_pages} pages; "
-          f"POST /v1/generate, GET /v1/health)")
+          f"({shape}; POST /v1/generate, GET /v1/health)")
     try:
         while True:
             await asyncio.sleep(3600)

@@ -1,0 +1,241 @@
+"""Disaggregated serving workers: prefill-only batchers and the supervised
+worker wrapper the router manages.
+
+One ``ContinuousBatcher`` interleaves prompt ingest with decode on a single
+pool — a long prompt steals one chunk dispatch from every decode segment,
+and the whole engine is one point of failure. Disaggregation (Orca-style
+iteration scheduling split across roles) gives each concern its own engine:
+
+  PrefillBatcher  a ``ContinuousBatcher`` that stops at the prefill/decode
+                  BOUNDARY: the moment a slot's prompt is fully committed it
+                  spills to a migration payload (``Request.spilled`` host
+                  snapshot, or ``Request.handoff_pages`` page handles on a
+                  ``SharedPagePool``) and lands in ``ready`` for the router
+                  to move to a decode worker. The spilled slot never enters
+                  a decode segment, so migration is rng-neutral by
+                  construction — the decode worker's scan sees exactly the
+                  state an uninterrupted run would have had.
+  Worker          one supervised engine: a batcher + a ``WorkerRunner``
+                  thread (``EngineRunner`` with router callbacks instead of
+                  per-request ``TokenStream``s), a role tag, a heartbeat,
+                  and ``restart()`` for bringing a (simulated-)dead worker
+                  back over the same batcher.
+
+``WorkerDied`` (the ``worker_die`` chaos hook) is FATAL to a worker: the
+engine thread exits without recovery and without erroring its streams — a
+dead process cannot apologize. The router's heartbeat sweep notices the
+death, harvests the batcher (``extract_all``), and fails the survivors over
+(``repro.launch.router``).
+
+Degraded (unified) mode: flipping ``PrefillBatcher.boundary_spill`` off
+makes it a plain continuous batcher again — prefill AND decode on one
+engine — which is how the router keeps serving when one role has no
+survivors. Re-enabling it mid-flight is safe: slots already decoding simply
+hit the boundary condition (``lengths >= plens``) on the next step and
+migrate out like freshly-prefilled ones.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, List, Optional
+
+import jax
+
+from repro.launch.faults import WorkerDied
+from repro.launch.serve import ContinuousBatcher, Request
+from repro.launch.server import EngineRunner
+
+
+class PrefillBatcher(ContinuousBatcher):
+    """A ``ContinuousBatcher`` that spills requests at the prefill/decode
+    boundary instead of decoding them.
+
+    ``handoff="copy"``  boundary spill = ``_spill_slot``: USED page content
+                        + dense per-slot rows snapshot to host, pages return
+                        to THIS worker's pool; the decode worker restores
+                        into its own free pages (byte-copy migration —
+                        works across genuinely separate pools).
+    ``handoff="pages"`` boundary spill = ``_detach_slot``: only dense rows
+                        snapshot; the physical pages (and their refs) travel
+                        with the request. Requires every sharing batcher to
+                        sit on one ``SharedPagePool``.
+
+    Boundary-spilled requests are parked in ``ready`` (thread-safe deque);
+    the router drains it with ``drain_ready()``. They are excluded from
+    decode segments via the paused mask BEFORE the spill happens, so not a
+    single decode step ever runs on the prefill side — the migrated
+    request's greedy continuation is bit-identical to an uninterrupted run.
+    """
+
+    def __init__(self, dbm, params, *, handoff: str = "copy", **kw):
+        super().__init__(dbm, params, **kw)
+        if not self.chunked:
+            raise ValueError(
+                "PrefillBatcher requires prefill='chunked': per-token mode "
+                "commits prompt tokens inside decode segments, so there is "
+                "no clean prefill/decode boundary to spill at")
+        if handoff not in ("copy", "pages"):
+            raise ValueError(f"handoff must be 'copy' or 'pages', "
+                             f"got {handoff!r}")
+        if handoff == "pages" and self._shared is None:
+            raise ValueError("handoff='pages' moves page handles, which "
+                             "only mean something on a SharedPagePool — "
+                             "construct every worker with shared_pool=...")
+        self.handoff = handoff
+        self.boundary_spill = True     # False = degraded unified mode
+        self.ready: collections.deque = collections.deque()
+        self.migrated_out = 0          # boundary spills produced
+
+    def _paused_mask(self):
+        m = super()._paused_mask()
+        if self.boundary_spill:
+            # prefill-complete slots never decode here — they are about to
+            # spill out (this also keeps the boundary rng-neutral: no decode
+            # dispatch ever includes them)
+            m = m | (self.active & (self.lengths >= self.plens))
+        return m
+
+    def drain_ready(self) -> List[Request]:
+        """Pop every boundary-spilled request (router thread)."""
+        out = []
+        while True:
+            try:
+                out.append(self.ready.popleft())
+            except IndexError:
+                return out
+
+    def _step(self, rng, *, strict: bool = True):
+        rng, finished = super()._step(rng, strict=strict)
+        if self.boundary_spill:
+            for s in range(self.num_slots):
+                if (self.slot_req[s] is not None and self.active[s]
+                        and self.lengths[s] >= self.plens[s]):
+                    req = (self._detach_slot(s) if self.handoff == "pages"
+                           else self._spill_slot(s))
+                    self.migrated_out += 1
+                    self.ready.append(req)
+        return rng, finished
+
+
+class WorkerRunner(EngineRunner):
+    """``EngineRunner`` for a router-managed worker: per-request
+    ``TokenStream`` plumbing is replaced by two router callbacks
+    (``on_tokens`` / ``on_finish``) and ``WorkerDied`` is FATAL — the
+    thread exits without recovery or stream cleanup; the router's
+    heartbeat check owns what happens next."""
+
+    def __init__(self, batcher, *, rng=None, max_restarts: int = 3,
+                 name: str = "worker",
+                 on_tokens: Optional[Callable] = None,
+                 on_finish: Optional[Callable] = None):
+        self._cb_tokens = on_tokens
+        self._cb_finish = on_finish
+        super().__init__(batcher, rng=rng, max_restarts=max_restarts,
+                         fatal_types=(WorkerDied,), name=name)
+
+    def _on_tokens(self, req: Request, toks: List[int]):
+        if self._cb_tokens is not None:
+            self._cb_tokens(req, toks)
+
+    def _finish(self, req: Request):
+        self.served += 1
+        if self._cb_finish is not None:
+            self._cb_finish(req)
+
+
+class Worker:
+    """One supervised serving worker: a batcher, its engine thread, a role
+    tag and liveness surface for the router.
+
+    ``alive`` is the router's routing predicate: the engine thread is
+    running, has not hit a fatal fault (``died``) and has not exhausted its
+    crash budget (``gave_up``). ``restart()`` builds a FRESH supervised
+    thread over the same batcher — valid only after the old thread exited
+    and the router harvested the batcher, which is exactly the failover
+    sequence."""
+
+    def __init__(self, name: str, role: str, batcher: ContinuousBatcher, *,
+                 rng=None, max_restarts: int = 3,
+                 on_tokens: Optional[Callable] = None,
+                 on_finish: Optional[Callable] = None):
+        assert role in ("prefill", "decode")
+        self.name, self.role, self.cb = name, role, batcher
+        self._rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self._max_restarts = max_restarts
+        self._on_tokens, self._on_finish = on_tokens, on_finish
+        self.served_total = 0        # completed before the current runner
+        self.restarts = 0            # post-death worker restarts
+        self.started = False
+        self.restart_at: Optional[float] = None   # router's restart timer
+        self.failed_over = False     # current death already harvested
+        self.runner = self._make_runner()
+
+    def _make_runner(self) -> WorkerRunner:
+        return WorkerRunner(self.cb, rng=self._rng,
+                            max_restarts=self._max_restarts,
+                            name=f"{self.role}:{self.name}",
+                            on_tokens=self._on_tokens,
+                            on_finish=self._on_finish)
+
+    # ---- liveness ------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        r = self.runner
+        return (self.started and r._thread.is_alive()
+                and not r.died and not r.gave_up)
+
+    @property
+    def heartbeat_age(self) -> float:
+        return time.time() - self.runner.last_beat
+
+    # ---- lifecycle -----------------------------------------------------
+    def start(self):
+        self.runner.start()
+        self.started = True
+
+    def wake(self):
+        self.runner.wake()
+
+    def stop(self, timeout: Optional[float] = None):
+        self.runner.stop(timeout)
+
+    def join_dead(self, timeout: float = 1.0):
+        """Wait for a dying engine thread to fully exit before harvesting
+        its batcher (it may still be inside ``step``'s unwind)."""
+        if self.runner._thread.is_alive():
+            self.runner._thread.join(timeout)
+
+    def restart(self):
+        """Fresh supervised engine thread over the same batcher. The old
+        thread must be dead and the batcher harvested (``extract_all``) —
+        the new loop starts from an empty queue; the rng continues from the
+        old runner's last value so a restarted worker's sampling stream
+        stays deterministic."""
+        assert not self.runner._thread.is_alive(), \
+            "restart() on a live worker — stop or kill it first"
+        self.served_total += self.runner.served
+        self._rng = self.runner.rng
+        self.restarts += 1
+        self.restart_at = None
+        self.failed_over = False
+        self.runner = self._make_runner()
+        self.runner.start()
+        self.started = True
+
+    # ---- health --------------------------------------------------------
+    def stats(self) -> dict:
+        r = self.runner
+        return {
+            "name": self.name, "role": self.role, "alive": self.alive,
+            "heartbeat_age_s": round(self.heartbeat_age, 3),
+            "free_pages": len(self.cb.free_pages),
+            "total_pages": self.cb.total_pages,
+            "inflight": int(self.cb.active.sum()),
+            "queued": len(self.cb.queue),
+            "served": self.served_total + r.served,
+            "crashes": r.crashes,
+            "engine_restarts": r.restarts,
+            "worker_restarts": self.restarts,
+            "migrated_out": getattr(self.cb, "migrated_out", 0),
+        }

@@ -233,9 +233,51 @@ class SpilledSlot:
     """Host-side snapshot of one slot's cache state: ``data[i]`` corresponds
     to flattened leaf i — an ``(k, v)`` numpy pair of gathered pages for a
     PagedKV leaf, a numpy slot-row for a dense leaf. ``n_pages`` is the
-    number of (used) pages the snapshot covers."""
+    number of (used) pages the snapshot covers.
+
+    ``to_bytes``/``from_bytes`` give the snapshot a wire format (the
+    RDMA-copy stub for migrating requests between workers whose pools do
+    NOT share memory): a plain ``np.savez`` container, no pickle — the
+    receiving process needs only numpy to reconstruct it, and a snapshot
+    restores into ANY pool with matching per-page leaf shapes, regardless
+    of that pool's total page count or slot count."""
     data: list
     n_pages: int
+
+    def to_bytes(self) -> bytes:
+        import io
+        arrays = {"n_pages": np.asarray(self.n_pages, np.int64)}
+        kinds, dtypes = [], []
+        for i, entry in enumerate(self.data):
+            if isinstance(entry, tuple):        # PagedKV leaf: (k, v) pages
+                kinds.append(1)
+                dtypes.append(entry[0].dtype.name)
+                arrays[f"k{i}"], arrays[f"v{i}"] = entry
+            else:                               # dense per-slot row
+                kinds.append(0)
+                dtypes.append(entry.dtype.name)
+                arrays[f"d{i}"] = entry
+        arrays["kinds"] = np.asarray(kinds, np.int8)
+        # extension dtypes (bf16) serialize as raw void bytes — record the
+        # name so the receiver can view them back
+        arrays["dtypes"] = np.asarray(dtypes)
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        return buf.getvalue()
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "SpilledSlot":
+        import io
+        with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+            kinds, dtypes = z["kinds"], z["dtypes"]
+            data = []
+            for i, kind in enumerate(kinds):
+                dt = np.dtype(str(dtypes[i]))
+                if kind:
+                    data.append((z[f"k{i}"].view(dt), z[f"v{i}"].view(dt)))
+                else:
+                    data.append(z[f"d{i}"].view(dt))
+            return cls(data=data, n_pages=int(z["n_pages"]))
 
 
 def _is_pkv(x) -> bool:
@@ -290,6 +332,11 @@ def restore_slot(cache, slot: int, page_ids, spilled: SpilledSlot,
     new = []
     for (path, leaf), saved in zip(leaves, spilled.data):
         if _is_pkv(leaf):
+            if spilled.n_pages == 0:
+                # dense-rows-only snapshot (page-handle migration): the
+                # handed pages already hold the KV — no paged writes
+                new.append(leaf)
+                continue
             idx = _page_index(ids)
             k_s, v_s = saved
             new.append(PagedKV(leaf.k.at[idx].set(jnp.asarray(k_s)),

@@ -1,0 +1,384 @@
+"""Disaggregated prefill/decode serving: migration and failover bit-parity,
+the handoff fault seams (drop -> re-prefill, stall -> timeout -> bounded
+retry), role wipe-out degradation + automatic re-split, the router's
+``/v1/health`` worker surface, and cross-pool ``SpilledSlot`` wire
+round-trips for every cache-state family.
+
+Bit-parity discipline (same as tests/test_server.py): greedy decode draws
+per-step noise from the engine rng, so parity populations run ONE request
+at a time with the decode worker's rng pinned to the unified baseline's
+PRNGKey. Prefill consumes no rng and boundary-spilled slots never enter a
+decode segment on the prefill side, so migration — and a failover that
+adopts the dead decode worker's rng — must reproduce the uninterrupted
+token sequence exactly. Chaos-style concurrent coverage lives in
+``benchmarks/table20_disagg.py``; these are the deterministic seams.
+"""
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.core import DiffusionBlocksModel
+from repro.launch.faults import FaultInjector
+from repro.launch.router import DisaggRouter
+from repro.launch.serve import ContinuousBatcher
+from repro.launch.server import (InferenceServer, request_json,
+                                 stream_generate)
+from repro.nn.cache import SpilledSlot
+
+TINY = ModelConfig(name="tiny-disagg", family="dense", n_layers=4,
+                   d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                   vocab_size=32)
+TINY_VLM = ModelConfig(name="tiny-disagg-vlm", family="vlm", n_layers=4,
+                       d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                       vocab_size=32, cross_attn_every=2, n_image_tokens=4)
+
+CB_KW = dict(num_slots=2, max_prompt=12, max_len=24, seg_len=3, page_size=4,
+             chunk_size=4, precision="fp32")
+
+
+@pytest.fixture(scope="module")
+def dense_env():
+    dbm = DiffusionBlocksModel(TINY, DBConfig(num_blocks=2,
+                                              overlap_gamma=0.1))
+    return dbm, dbm.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def vlm_env():
+    dbm = DiffusionBlocksModel(TINY_VLM, DBConfig(num_blocks=2,
+                                                  overlap_gamma=0.1))
+    params = dbm.init(jax.random.PRNGKey(0))
+    # open the zero-init cross gate so conditioning moves the greedy argmax
+    params["units"]["cross"]["xgate"] = 2.0 * jnp.ones_like(
+        params["units"]["cross"]["xgate"])
+    return dbm, params
+
+
+def pool_whole(router):
+    """No leaked page anywhere: every non-trash page is free or mapped."""
+    if router.pool is not None:
+        free, refs, tot = (len(router.pool.free_pages),
+                           len(router.pool.page_refs),
+                           router.pool.total_pages)
+        assert free + refs == tot - 1, ("shared pool leak", free, refs, tot)
+    else:
+        for w in router.workers:
+            free, refs, tot = (len(w.cb.free_pages), len(w.cb.page_refs),
+                               w.cb.total_pages)
+            assert free + refs == tot - 1, (w.name, free, refs, tot)
+    assert not router._handoffs, "payload stranded in the handoff queue"
+
+
+def unified_seq(dbm, params, reqs, seed, **kw):
+    """Ground truth: each request alone on one unified batcher, one rng
+    stream carried across the whole sequence. NOTE: decode noise is drawn
+    per-step with shape ``(num_slots, 1, d)``, so every batcher in a
+    parity population must use the same ``num_slots``."""
+    cb = ContinuousBatcher(dbm, params, **{**CB_KW, **kw})
+    rng = jax.random.PRNGKey(seed)
+    outs = []
+    for prompt, max_new, aux in reqs:
+        cb.submit(prompt, max_new, aux_inputs=aux)
+        fin = []
+        while cb.has_work():
+            rng, f = cb.step(rng, strict=False)
+            fin.extend(f)
+        assert len(fin) == 1 and fin[0].error is None, fin
+        outs.append(list(fin[0].out))
+    return outs
+
+
+def router_seq(dbm, params, reqs, *, handoff, seed, die_at=None,
+               timeout_s=120.0, **router_kw):
+    """The same requests, one at a time, through a disaggregated router;
+    decode0's rng pinned to the baseline seed. ``die_at`` kills decode0 on
+    its ``die_at``-th engine step (requires n_decode=2 for a survivor)."""
+    router = DisaggRouter(dbm, params, n_prefill=1,
+                          n_decode=2 if die_at is not None else 1,
+                          handoff=handoff, **{**CB_KW, **router_kw})
+    done = {}
+    router.finish_cb = lambda r: done.setdefault(r.rid, r)
+    router.decode_workers[0].runner.rng = jax.random.PRNGKey(seed)
+    if die_at is not None:
+        router.decode_workers[0].cb.faults = FaultInjector(
+            {"worker_die": {"at": [die_at]}}, seed=0)
+    router.start()
+    outs = []
+    try:
+        for prompt, max_new, aux in reqs:
+            rid = router.submit(prompt, max_new, aux_inputs=aux)
+            t0 = time.time()
+            while rid not in done and time.time() - t0 < timeout_s:
+                time.sleep(0.005)
+            assert rid in done, ("router request never finished", rid)
+            r = done[rid]
+            assert r.error is None, r.error
+            outs.append(list(r.out))
+    finally:
+        router.stop(30)
+    pool_whole(router)
+    return outs, router.stats()
+
+
+def mk_reqs(vocab, aux=None, seed=7):
+    rs = np.random.RandomState(seed)
+    return [(rs.randint(0, vocab, size=n).astype(np.int32), 8, aux)
+            for n in (9, 6)]
+
+
+# ---------------------------------------------------------------------------
+# Migration / failover bit-parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("handoff", ["copy", "pages"])
+def test_migration_parity_unconditioned(dense_env, handoff):
+    """A request migrated prefill->decode (byte-copy or page handles) emits
+    exactly the tokens of an uninterrupted unified run."""
+    dbm, params = dense_env
+    reqs = mk_reqs(TINY.vocab_size)
+    base = unified_seq(dbm, params, reqs, seed=11)
+    got, stats = router_seq(dbm, params, reqs, handoff=handoff, seed=11)
+    assert got == base, (handoff, got, base)
+    assert stats["migrations"] >= len(reqs), stats
+    assert stats["failovers"] == 0 and stats["re_prefills"] == 0, stats
+
+
+def test_migration_parity_conditioned(vlm_env):
+    """Same gate for a CONDITIONED request: the payload must carry the
+    per-slot cross block or the migrated decode silently drops the image."""
+    dbm, params = vlm_env
+    aux = {"image_embs": 4.0 * np.random.RandomState(3)
+           .randn(TINY_VLM.n_image_tokens, TINY_VLM.d_model)
+           .astype(np.float32)}
+    reqs = mk_reqs(TINY_VLM.vocab_size, aux=aux)
+    base = unified_seq(dbm, params, reqs, seed=11)
+    uncond = unified_seq(dbm, params,
+                         [(p, n, None) for p, n, _ in reqs], seed=11)
+    assert base != uncond, "conditioning must change the output"
+    for handoff in ("copy", "pages"):
+        got, stats = router_seq(dbm, params, reqs, handoff=handoff, seed=11)
+        assert got == base, (handoff, got, base)
+        assert stats["migrations"] >= len(reqs), stats
+
+
+@pytest.mark.parametrize("handoff", ["copy", "pages"])
+def test_failover_parity_mid_decode(dense_env, handoff):
+    """decode0 dies on its 2nd engine step (one segment delivered); the
+    survivor adopts the dead worker's rng and the re-migrated (pages) or
+    re-prefilled (copy) request finishes bit-identically."""
+    dbm, params = dense_env
+    reqs = mk_reqs(TINY.vocab_size)
+    base = unified_seq(dbm, params, reqs, seed=11)
+    got, stats = router_seq(dbm, params, reqs, handoff=handoff, seed=11,
+                            die_at=2)
+    assert got == base, (handoff, got, base)
+    assert stats["failovers"] >= 1, stats
+
+
+# ---------------------------------------------------------------------------
+# Handoff fault seams
+# ---------------------------------------------------------------------------
+
+def test_handoff_drop_falls_back_to_reprefill(dense_env):
+    """A payload lost in transit re-prefills from the original prompt —
+    rng-neutral (no decode step had run), so parity still holds."""
+    dbm, params = dense_env
+    reqs = mk_reqs(TINY.vocab_size)
+    base = unified_seq(dbm, params, reqs, seed=11)
+    got, stats = router_seq(
+        dbm, params, reqs, handoff="copy", seed=11,
+        faults=FaultInjector({"handoff_drop": {"at": [1]}}, seed=0))
+    assert got == base, (got, base)
+    assert stats["handoff_drops"] >= 1, stats
+    assert stats["re_prefills"] >= 1, stats
+
+
+def test_handoff_stall_times_out_then_retries(dense_env):
+    """A stalled send exceeds the handoff timeout; the bounded-backoff
+    retry delivers the SAME payload on the next attempt (no re-prefill
+    needed) and output parity holds."""
+    dbm, params = dense_env
+    reqs = mk_reqs(TINY.vocab_size)
+    base = unified_seq(dbm, params, reqs, seed=11)
+    got, stats = router_seq(
+        dbm, params, reqs, handoff="copy", seed=11,
+        handoff_timeout_s=0.05, handoff_backoff_s=0.01,
+        faults=FaultInjector({"handoff_stall": {"at": [1], "sleep": 0.2}},
+                             seed=0))
+    assert got == base, (got, base)
+    assert stats["handoff_retries"] >= 1, stats
+    assert stats["re_prefills"] == 0, stats
+
+
+def test_decode_wipeout_degrades_then_resplits(dense_env):
+    """Killing the ONLY decode worker degrades the router to unified mode
+    (the prefill worker decodes everything itself); once the dead worker
+    restarts the router re-splits and later requests migrate again."""
+    dbm, params = dense_env
+    router = DisaggRouter(dbm, params, n_prefill=1, n_decode=1,
+                          handoff="copy", restart_dead_after_s=0.3,
+                          **CB_KW)
+    done = {}
+    router.finish_cb = lambda r: done.setdefault(r.rid, r)
+    router.decode_workers[0].cb.faults = FaultInjector(
+        {"worker_die": {"at": [1]}}, seed=0)
+    router.start()
+    try:
+        prompt = np.arange(1, 9, dtype=np.int32) % TINY.vocab_size
+        rid = router.submit(prompt, 8)
+        t0 = time.time()
+        while rid not in done and time.time() - t0 < 120:
+            time.sleep(0.005)
+        assert rid in done and done[rid].error is None
+        assert len(done[rid].out) == 8
+        assert router.degradations >= 1, router.stats()
+        # wait out the restart timer; the router re-splits automatically
+        t0 = time.time()
+        while router.mode != "split" and time.time() - t0 < 30:
+            time.sleep(0.01)
+        assert router.mode == "split" and router.resplits >= 1
+        m0 = router.migrations
+        rid = router.submit(prompt, 6)
+        t0 = time.time()
+        while rid not in done and time.time() - t0 < 120:
+            time.sleep(0.005)
+        assert rid in done and done[rid].error is None
+        assert len(done[rid].out) == 6
+        assert router.migrations > m0, "re-split router must migrate again"
+    finally:
+        router.stop(30)
+    pool_whole(router)
+
+
+# ---------------------------------------------------------------------------
+# /v1/health router surface (HTTP frontend over a DisaggRouter)
+# ---------------------------------------------------------------------------
+
+def test_router_health_endpoint(dense_env):
+    """The HTTP frontend drives a router transparently and ``/v1/health``
+    reports per-worker status plus the migration/failover counters."""
+    dbm, params = dense_env
+    prompt = (np.arange(2, 9) * 3) % TINY.vocab_size
+
+    async def main():
+        router = DisaggRouter(dbm, params, n_prefill=1, n_decode=1,
+                              handoff="copy", **CB_KW)
+        server = InferenceServer(router, rng=jax.random.PRNGKey(7))
+        await server.start()
+        try:
+            r = await stream_generate("127.0.0.1", server.port, prompt, 6)
+            assert r["status"] == 200 and len(r["ids"]) == 6
+            code, health = await request_json("127.0.0.1", server.port,
+                                              "GET", "/v1/health")
+            return code, health
+        finally:
+            await server.aclose()
+
+    code, health = asyncio.run(main())
+    assert code == 200
+    assert health["router"] is True and health["mode"] == "split"
+    assert health["served"] == 1 and health["engine_alive"] is True
+    for key in ("migrations", "failovers", "handoff_retries",
+                "handoff_drops", "re_prefills", "degradations", "resplits"):
+        assert isinstance(health[key], int), key
+    assert health["migrations"] >= 1
+    workers = {w["name"]: w for w in health["workers"]}
+    assert set(workers) == {"prefill0", "decode0"}
+    assert workers["prefill0"]["role"] == "prefill"
+    assert workers["decode0"]["role"] == "decode"
+    for w in workers.values():
+        assert w["alive"] is True
+        assert w["heartbeat_age_s"] >= 0.0
+        assert w["free_pages"] <= w["total_pages"]
+    assert workers["prefill0"]["migrated_out"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# SpilledSlot wire round-trip across pools, all cache-state families
+# ---------------------------------------------------------------------------
+
+TINY_HYBRID = ModelConfig(name="tiny-disagg-hybrid", family="hybrid",
+                          n_layers=4, d_model=32, n_heads=2, n_kv_heads=2,
+                          d_ff=64, vocab_size=32, attn_every=2,
+                          ssm=SSMConfig(d_state=8, d_conv=4, expand=2,
+                                        head_dim=16, chunk_size=8))
+TINY_AUDIO = ModelConfig(name="tiny-disagg-audio", family="audio",
+                         n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                         d_ff=64, vocab_size=32, n_encoder_layers=2,
+                         n_audio_frames=6, rope_theta=0.0, norm="layernorm",
+                         mlp="gelu", is_encoder_decoder=True)
+
+FAMILY_CFGS = {"dense": TINY, "hybrid": TINY_HYBRID, "vlm": TINY_VLM,
+               "audio": TINY_AUDIO}
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid", "vlm", "audio"])
+def test_spilled_slot_roundtrip_across_pools(family):
+    """spill -> ``to_bytes`` -> ``from_bytes`` -> restore into a DIFFERENT
+    pool's free pages is exact for every cache-state family: pure paged
+    attention (dense), paged KV + recurrent mamba rows (hybrid), and the
+    per-slot cross blocks (vlm, audio). The receiving batcher has a
+    different pool size and a rotated free list, so the snapshot lands in
+    physically different pages; the finished output must still be
+    bit-identical to an uninterrupted single-batcher run."""
+    cfg = FAMILY_CFGS[family]
+    dbm = DiffusionBlocksModel(cfg, DBConfig(num_blocks=2,
+                                             overlap_gamma=0.1))
+    params = dbm.init(jax.random.PRNGKey(0))
+    aux = None
+    if family == "vlm":
+        params["units"]["cross"]["xgate"] = 2.0 * jnp.ones_like(
+            params["units"]["cross"]["xgate"])
+        aux = {"image_embs": 4.0 * np.random.RandomState(3)
+               .randn(cfg.n_image_tokens, cfg.d_model).astype(np.float32)}
+    elif family == "audio":
+        aux = {"audio_embs": 4.0 * np.random.RandomState(3)
+               .randn(cfg.n_audio_frames, cfg.d_model).astype(np.float32)}
+    prompt = (np.arange(1, 9) * 5 % cfg.vocab_size).astype(np.int32)
+    max_new, seed = 8, 11
+    kw = dict(CB_KW, num_slots=1)
+
+    base = unified_seq(dbm, params, [(prompt, max_new, aux)], seed,
+                       num_slots=1)[0]
+
+    # interrupted run: 2 prefill chunks + 1 decode segment, then spill
+    src = ContinuousBatcher(dbm, params, **kw)
+    rid = src.submit(prompt, max_new, aux_inputs=aux)
+    rng = jax.random.PRNGKey(seed)
+    for _ in range(3):
+        rng, f = src.step(rng, strict=False)
+        assert not f
+    with src._pool_lock:
+        req = src._spill_slot(0)
+    assert req.rid == rid and 0 < len(req.out) < max_new, req.out
+    assert len(src.free_pages) == src.total_pages - 1, "pages leaked"
+    used_src = {e[0].shape[0] if isinstance(e, tuple) else None
+                for e in req.spilled.data}
+
+    # wire format: the payload crosses pools as numpy bytes, no pickle
+    raw = req.spilled.to_bytes()
+    assert isinstance(raw, bytes)
+    req.spilled = SpilledSlot.from_bytes(raw)
+    assert {e[0].shape[0] if isinstance(e, tuple) else None
+            for e in req.spilled.data} == used_src
+
+    # different pool (bigger, rotated free list) so the restore cannot
+    # land in the same physical ids; same num_slots (see unified_seq note)
+    dst = ContinuousBatcher(dbm, params,
+                            **dict(kw, total_pages=src.total_pages + 6))
+    dst.free_pages = dst.free_pages[5:] + dst.free_pages[:5]
+    dst.submit_request(req)
+    fin = []
+    while dst.has_work():
+        rng, f = dst.step(rng, strict=False)
+        fin.extend(f)
+    assert len(fin) == 1 and fin[0].error is None
+    assert dst.restores == 1
+    assert list(fin[0].out) == base, (family, fin[0].out, base)
+    assert len(dst.free_pages) == dst.total_pages - 1 and not dst.page_refs

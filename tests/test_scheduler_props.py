@@ -35,6 +35,16 @@ Invariants checked on every trace:
     outnumber spills, and a restored conditioned slot sees its cross block
     again (the admission-time conditioning check runs after restores too).
 
+  * MIGRATE/FAILOVER accounting (disaggregation) — a second seeded driver
+    runs a PrefillBatcher + decode-batcher pair through boundary-spill
+    migrations, in-transit payload holds/drops, and random whole-batcher
+    failover harvests (``extract_all``), in both handoff modes: per-pool
+    conservation holds on separate pools, and on a ``SharedPagePool`` the
+    shared refcounts decompose exactly into slot maps + trie holds +
+    off-slot payload handles (queued, boundary-ready, AND in-transit) —
+    so no migration seam can leak or double-own a page; every request
+    still completes with its full token budget.
+
 The seeded driver runs >= 200 traces deterministically (no hypothesis
 needed); when hypothesis is installed (the dev extra — CI fast lane), the
 same trace property is additionally explored by ``@given``.
@@ -53,7 +63,8 @@ import jax
 from repro.configs import DBConfig
 from repro.configs.base import ModelConfig
 from repro.core import DiffusionBlocksModel
-from repro.launch.serve import ContinuousBatcher
+from repro.launch.serve import ContinuousBatcher, Request, SharedPagePool
+from repro.launch.workers import PrefillBatcher
 from repro.nn import cache as KVC
 
 TINY_VLM = ModelConfig(name="tiny-sched-vlm", family="vlm", n_layers=4,
@@ -126,12 +137,12 @@ class FakeDispatch:
 
 
 def make_batcher(dbm, params, *, num_slots, total_pages=None,
-                 prefix_cache=True):
-    cb = ContinuousBatcher(dbm, params, num_slots=num_slots, page_size=PSZ,
-                           max_prompt=MAX_PROMPT, max_len=MAX_LEN,
-                           seg_len=3, chunk_size=CHUNK, precision="fp32",
-                           prefix_cache=prefix_cache,
-                           total_pages=total_pages)
+                 prefix_cache=True, cls=ContinuousBatcher, **extra):
+    cb = cls(dbm, params, num_slots=num_slots, page_size=PSZ,
+             max_prompt=MAX_PROMPT, max_len=MAX_LEN,
+             seg_len=3, chunk_size=CHUNK, precision="fp32",
+             prefix_cache=prefix_cache,
+             total_pages=total_pages, **extra)
     fake = FakeDispatch(cb)
     cb.eng = type(cb.eng).__new__(type(cb.eng))        # detached shell
     cb.eng.__dict__.update(dispatches=0, prefill_steps=0, pol=None,
@@ -162,7 +173,10 @@ def walk_trie_pages(prefix):
     return held
 
 
-def check_invariants(cb: ContinuousBatcher):
+def check_invariants(cb: ContinuousBatcher, *, cross_restores=False):
+    """``cross_restores=True``: this batcher restores payloads spilled by
+    ANOTHER batcher (migration), so restores may outnumber local
+    preemptions."""
     total = cb.total_pages
     free = list(cb.free_pages)
     refs = dict(cb.page_refs)
@@ -193,7 +207,8 @@ def check_invariants(cb: ContinuousBatcher):
         assert not r.pages, f"queued request {r.rid} still holds pages"
         if r.spilled is not None:
             assert r.spill_meta is not None
-    assert cb.restores <= cb.preemptions
+    if not cross_restores:
+        assert cb.restores <= cb.preemptions
 
 
 def check_conditioning_state(cb: ContinuousBatcher):
@@ -395,6 +410,197 @@ def test_fingerprint_distinguishes_content():
     # shape-sensitive even when bytes agree
     d = {"image_embs": np.ones((8, 4), np.float32)}
     assert KVC.conditioning_fingerprint(a) != KVC.conditioning_fingerprint(d)
+
+
+# ---------------------------------------------------------------------------
+# MIGRATE / FAILOVER traces: PrefillBatcher + decode batcher with the
+# migration seams driven by the test (no router threads) — leak/refcount
+# invariants across boundary spills, in-transit payloads, payload drops,
+# and whole-batcher failover harvests, in both handoff modes.
+# ---------------------------------------------------------------------------
+
+def check_shared_conservation(shared, batchers, in_transit):
+    """SharedPagePool conservation: free and referenced pages partition the
+    pool, and every ref is owned by exactly one of: a slot map, a prefix
+    trie hold, or an off-slot payload handle (queued / boundary-ready /
+    in-transit ``handoff_pages``)."""
+    free = list(shared.free_pages)
+    refs = dict(shared.page_refs)
+    assert KVC.TRASH_PAGE not in free and KVC.TRASH_PAGE not in refs
+    assert len(set(free)) == len(free), "shared free list holds duplicates"
+    assert not (set(free) & set(refs)), "page both free and referenced"
+    assert set(free) | set(refs) == set(range(1, shared.total_pages)), \
+        "shared pages leaked or invented"
+    expected = {}
+
+    def add(pages, k=1):
+        for p in pages:
+            expected[p] = expected.get(p, 0) + k
+
+    off_slot = list(in_transit)
+    for cb in batchers:
+        if cb.prefix is not None:
+            for p, c in walk_trie_pages(cb.prefix).items():
+                expected[p] = expected.get(p, 0) + c
+        for s in range(cb.num_slots):
+            req = cb.slot_req[s]
+            if req is not None:
+                add(req.pages)
+        off_slot.extend(list(cb.queue))
+        off_slot.extend(list(getattr(cb, "ready", ())))
+    for r in off_slot:
+        add(r.handoff_pages or [])
+        assert not r.pages, f"off-slot request {r.rid} holds mapped pages"
+    assert refs == expected, \
+        f"shared refcounts {refs} != slots+trie+payloads {expected}"
+
+
+def run_migration_trace(dbm, params, seed: int):
+    rs = np.random.RandomState(seed)
+    handoff = ("copy", "pages")[int(rs.randint(2))]
+    num_slots = int(rs.randint(1, 3))
+    pps = KVC.pages_for(MAX_LEN, PSZ)
+    extra, shared = {}, None
+    use_pc = bool(rs.rand() < 0.5)
+    if handoff == "pages":
+        # prefix-trie refs live in the SHARED pool but only their owning
+        # batcher can evict them, so when the cache is on the pool carries
+        # enough slack that the decode side can never starve behind them
+        slack = (5 * KVC.pages_for(MAX_LEN, PSZ) + 4 if use_pc
+                 else int(rs.randint(0, 5)))
+        shared = SharedPagePool(1 + 2 * num_slots * pps + slack)
+        extra["shared_pool"] = shared
+    pre = make_batcher(dbm, params, num_slots=num_slots,
+                       prefix_cache=use_pc,
+                       cls=PrefillBatcher, handoff=handoff, **extra)
+    dec = make_batcher(dbm, params, num_slots=num_slots,
+                       prefix_cache=False, **extra)
+
+    cond = rs.randn(4, TINY_VLM.d_model).astype(np.float32)
+    meta = {}                   # rid -> (orig prompt, max_new)
+    delivered = {}              # rid -> tokens already out of a dead inner
+    finished = {}               # rid -> total tokens at terminal finish
+    transit = []                # payloads the "router" holds in flight
+    rng = jax.random.PRNGKey(seed)
+    events = {"migrate": 0, "drop": 0, "failover": 0, "re_prefill": 0}
+
+    def checks():
+        if shared is None:
+            check_invariants(pre, cross_restores=True)
+            check_invariants(dec, cross_restores=True)
+        else:
+            check_shared_conservation(shared, (pre, dec), transit)
+
+    def finish(req):
+        assert req.rid not in finished, f"request {req.rid} finished twice"
+        finished[req.rid] = delivered.get(req.rid, 0) + len(req.out)
+
+    def re_prefill(r):
+        """Payload lost: rebuild from prompt + delivered tokens (router's
+        last-resort path)."""
+        events["re_prefill"] += 1
+        delivered[r.rid] = delivered.get(r.rid, 0) + len(r.out)
+        prompt, max_new = meta[r.rid]
+        remaining = max_new - delivered[r.rid]
+        if remaining <= 0:
+            finished.setdefault(r.rid, delivered[r.rid])
+            return
+        full = (np.concatenate([prompt,
+                                np.full(delivered[r.rid], 1, np.int32)])
+                if delivered[r.rid] else prompt)
+        nr = Request(r.rid, full, remaining, aux_inputs=r.aux_inputs,
+                     cond_fp=r.cond_fp)
+        pre.submit_request(nr)
+
+    def route_harvested(r):
+        if r.spilled is not None and r.spill_meta["length"] >= len(r.prompt):
+            transit.append(r)            # decode-ready: re-migrate
+        elif r.spilled is not None:
+            pre.submit_request(r)        # mid-prefill: back to prefill
+        else:
+            re_prefill(r)                # KV died with the worker
+
+    rid = 0
+    for _ in range(400):
+        if rid < 5 and rs.rand() < 0.5:
+            prompt = rs.randint(0, 32, size=int(rs.randint(3, MAX_PROMPT)))
+            max_new = int(rs.randint(1, MAX_NEW + 1))
+            aux = ({"image_embs": cond} if rs.rand() < 0.4 else None)
+            r = Request(rid, np.asarray(prompt, np.int32), max_new,
+                        aux_inputs=aux,
+                        cond_fp=KVC.conditioning_fingerprint(aux))
+            meta[rid] = (np.asarray(prompt, np.int32), max_new)
+            pre.submit_request(r)
+            rid += 1
+        if pre.has_work():
+            rng, fin = pre.step(rng, strict=False)
+            for r in fin:
+                finish(r)                # cancelled/errored only
+        for r in pre.drain_ready():
+            transit.append(r)
+        # the router's send: deliver, drop (lost in transit), or hold
+        still = []
+        for r in transit:
+            u = rs.rand()
+            if u < 0.5:
+                events["migrate"] += 1
+                dec.submit_request(r)
+            elif u < 0.65:
+                events["drop"] += 1
+                pre._drop_payload(r)
+                re_prefill(r)
+            else:
+                still.append(r)
+        transit[:] = still
+        if dec.has_work():
+            rng, fin = dec.step(rng, strict=False)
+            for r in fin:
+                finish(r)
+        if rs.rand() < 0.06:             # worker death: harvest + re-route
+            victim = (pre, dec)[int(rs.randint(2))]
+            events["failover"] += 1
+            if victim is pre:
+                for r in pre.drain_ready():
+                    transit.append(r)
+            for r in victim.extract_all(detach=(handoff == "pages")):
+                route_harvested(r)
+        checks()
+        if (rid >= 5 and not pre.has_work() and not dec.has_work()
+                and not transit and len(finished) == rid):
+            break
+    else:
+        raise AssertionError(
+            f"trace did not drain: finished {len(finished)}/{rid}, "
+            f"transit {len(transit)}, events {events}")
+
+    for r_id, (_, max_new) in meta.items():
+        assert finished[r_id] == max_new, \
+            (f"request {r_id} finished with {finished[r_id]} of "
+             f"{max_new} tokens", events)
+    checks()
+    # drained pools hold nothing beyond prefix-trie refs
+    if shared is not None:
+        trie = {}
+        for cb in (pre, dec):
+            if cb.prefix is not None:
+                for p, c in walk_trie_pages(cb.prefix).items():
+                    trie[p] = trie.get(p, 0) + c
+        assert dict(shared.page_refs) == trie
+    return events
+
+
+N_MIGRATION_TRACES = 40
+
+
+def test_migration_failover_traces_seeded(dbm_params):
+    dbm, params = dbm_params
+    totals = {"migrate": 0, "drop": 0, "failover": 0, "re_prefill": 0}
+    for seed in range(N_MIGRATION_TRACES):
+        ev = run_migration_trace(dbm, params, seed)
+        for k in totals:
+            totals[k] += ev[k]
+    # the sweep must actually exercise every seam
+    assert all(v > 0 for v in totals.values()), totals
 
 
 # ---------------------------------------------------------------------------
