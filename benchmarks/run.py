@@ -28,7 +28,8 @@ def main() -> None:
                             table12_walltime, table13_blockparallel,
                             table14_kernel_grads, table15_decode,
                             table16_prefill, table17_conditioned,
-                            table18_load, table19_slo, table20_disagg)
+                            table18_load, table19_slo, table20_disagg,
+                            table21_faulttrain)
     from benchmarks.common import emit
 
     tables = {
@@ -49,6 +50,7 @@ def main() -> None:
         "table18_load": table18_load.run_rows,
         "table19_slo": table19_slo.run_rows,
         "table20_disagg": table20_disagg.run_rows,
+        "table21_faulttrain": table21_faulttrain.run_rows,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

@@ -1,0 +1,292 @@
+"""Table 21 (beyond-paper): fault-tolerant elastic block-parallel training —
+resume parity, per-block anomaly isolation, and a chaos training run
+(ROADMAP robustness item: crash-consistent checkpoints + supervised loop).
+
+Two acceptance gates, both ASSERTED (not just reported):
+
+  resume-parity   a training run KILLED at a seeded step (``halt_after`` —
+                  no shutdown checkpoint; work since the last cadence
+                  generation is lost) and resumed from the atomic manifest
+                  checkpoint produces BIT-IDENTICAL final params AND
+                  optimizer state to an uninterrupted run. Checked for
+                  ``--mode db`` and ``--block-parallel`` on both engine
+                  paths (shard_map when the host has a pod per block,
+                  round-robin always).
+  chaos           with seeded pod kills (degrade to round-robin + re-adopt),
+                  NaN gradient injections (per-block guard skips), and a
+                  checkpoint generation corrupted mid-write (checksum
+                  fallback) all firing in ONE run, training completes with
+                  finite per-block losses within tolerance of a clean run's
+                  — and the injected faults demonstrably fired.
+
+CPU caveat: tiny model, synthetic Markov data; the measurements are the
+parity bits and the chaos-survival invariants, not wall-clock. Writes
+``BENCH_faulttrain.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import tree_digest
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import DiffusionBlocksModel
+from repro.data import MarkovLM, MarkovStream
+from repro.launch.faults import FaultInjector
+from repro.launch.trainrunner import TrainRunner
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CFG = ModelConfig(name="bench-faulttrain", family="dense", n_layers=8,
+                  d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+                  vocab_size=64)
+B = 4
+BATCH, SEQ = 4, 16
+
+
+def _build(steps):
+    dbm = DiffusionBlocksModel(CFG, DBConfig(num_blocks=B,
+                                             overlap_gamma=0.05))
+    tcfg = TrainConfig(steps=steps, batch_size=BATCH, seq_len=SEQ, lr=2e-3,
+                       warmup_steps=2, log_every=0)
+    return dbm, tcfg
+
+
+def _make_data_factory():
+    lm = MarkovLM(vocab_size=CFG.vocab_size, seed=7)
+
+    def make_data(cur):
+        return (lm.stream(BATCH, SEQ) if cur is None
+                else MarkovStream.from_cursor(cur))
+    return make_data
+
+
+def _opt_digests(runner):
+    if runner.mode == "block-parallel":
+        return (tree_digest(jax.device_get(runner.state.stack_opt)),
+                tree_digest(jax.device_get(runner.state.periph_opt)))
+    return tuple(tree_digest(o) for o in runner.opt_states)
+
+
+def _parity_case(mode, steps, ckpt_every, halt_after, devices=None):
+    """clean vs (killed at ``halt_after`` → resumed) — assert bit parity."""
+    dbm, tcfg = _build(steps)
+    make_data = _make_data_factory()
+    rng = jax.random.PRNGKey(0)
+    quiet = lambda *a: None  # noqa: E731
+
+    def runner(ckpt_dir):
+        return TrainRunner(dbm, tcfg, mode=mode, ckpt_dir=ckpt_dir,
+                           ckpt_every=ckpt_every, devices=devices, log=quiet)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        r_clean = runner(d1)
+        p_clean, _ = r_clean.train(make_data, rng)
+        r_kill = runner(d2)
+        r_kill.train(make_data, rng, halt_after=halt_after)
+        r_res = runner(d2)
+        p_res, _ = r_res.train(make_data, rng, resume=True)
+        engine = (r_clean.trainer.mode if mode == "block-parallel" else "n/a")
+        params_ok = tree_digest(p_clean) == tree_digest(p_res)
+        opt_ok = _opt_digests(r_clean) == _opt_digests(r_res)
+    assert params_ok, f"resume params diverged ({mode}/{engine})"
+    assert opt_ok, f"resume optimizer state diverged ({mode}/{engine})"
+    return {"mode": mode, "engine": engine, "steps": steps,
+            "killed_at": halt_after, "ckpt_every": ckpt_every,
+            "params_bit_identical": True, "opt_bit_identical": True}
+
+
+def _final_block_losses(history, n_blocks):
+    out = {}
+    for it, b, loss in history:
+        if b >= 0:
+            out[b] = loss
+    return [out.get(b, float("nan")) for b in range(n_blocks)]
+
+
+def _chaos_parallel(steps, tol_abs=0.75, tol_rel=0.4):
+    """Seeded pod kill + NaN injections + a corrupted generation, one run."""
+    dbm, tcfg = _build(steps)
+    make_data = _make_data_factory()
+    rng = jax.random.PRNGKey(0)
+    quiet = lambda *a: None  # noqa: E731
+
+    with tempfile.TemporaryDirectory() as d:
+        r_clean = TrainRunner(dbm, tcfg, mode="block-parallel", ckpt_dir=d,
+                              ckpt_every=2, log=quiet)
+        _, h_clean = r_clean.train(make_data, rng)
+    faults = FaultInjector({"pod_die": {"at": [3]},
+                            "grad_nan": {"at": [2, 5]},
+                            "ckpt_corrupt": {"at": [2]},
+                            "data_stall": {"at": [4], "sleep": 0.01}}, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        r = TrainRunner(dbm, tcfg, mode="block-parallel", ckpt_dir=d,
+                        ckpt_every=2, faults=faults, pod_restart_after=2,
+                        log=quiet)
+        _, h = r.train(make_data, rng)
+        # the corrupted generation must be detected, not loaded: a resume
+        # from the chaos run's directory still works (falls back)
+        r2 = TrainRunner(dbm, tcfg, mode="block-parallel", ckpt_dir=d,
+                         ckpt_every=2, log=quiet)
+        p2, _ = r2.train(make_data, jax.random.PRNGKey(0), resume=True)
+        assert np.all(np.isfinite(
+            np.concatenate([np.ravel(x) for x in
+                            jax.tree_util.tree_leaves(p2)])))
+    clean = np.asarray(_final_block_losses(h_clean, B))
+    chaos = np.asarray(_final_block_losses(h, B))
+    inj = faults.stats()
+    stats = r.stats()["counters"]
+    assert np.isfinite(chaos).all(), chaos
+    tol = tol_abs + tol_rel * np.abs(clean)
+    assert (np.abs(chaos - clean) <= tol).all(), (clean, chaos, tol)
+    assert inj["pod_die"]["fired"] >= 1, inj
+    assert inj["grad_nan"]["fired"] >= 2, inj
+    assert inj["ckpt_corrupt"]["fired"] >= 1, inj
+    assert stats["pod_deaths"] >= 1 and stats["readoptions"] >= 1, stats
+    assert stats["nan_injected"] >= 2, stats
+    assert stats["degraded_batches"] >= 1, stats
+    return {"mode": "block-parallel", "engine": r.trainer.mode,
+            "steps": steps,
+            "final_loss_clean": [float(x) for x in clean],
+            "final_loss_chaos": [float(x) for x in chaos],
+            "max_abs_gap": float(np.abs(chaos - clean).max()),
+            "within_tolerance": True,
+            "pod_deaths": stats["pod_deaths"],
+            "readoptions": stats["readoptions"],
+            "degraded_batches": stats["degraded_batches"],
+            "nan_injected": stats["nan_injected"],
+            "data_stalls": stats["data_stalls"],
+            "ckpt_corrupt_fired": inj["ckpt_corrupt"]["fired"],
+            "resume_after_chaos_ok": True}
+
+
+def _chaos_db(steps, tol_abs=0.75, tol_rel=0.4):
+    """db mode: pod_die = simulated process death → bounded restart from the
+    latest generation; NaNs guarded per block."""
+    dbm, tcfg = _build(steps)
+    make_data = _make_data_factory()
+    rng = jax.random.PRNGKey(0)
+    quiet = lambda *a: None  # noqa: E731
+
+    with tempfile.TemporaryDirectory() as d:
+        r_clean = TrainRunner(dbm, tcfg, mode="db", ckpt_dir=d,
+                              ckpt_every=4, log=quiet)
+        _, h_clean = r_clean.train(make_data, rng)
+    faults = FaultInjector({"pod_die": {"at": [9]},
+                            "grad_nan": {"at": [5]},
+                            "ckpt_corrupt": {"at": [3]}}, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        r = TrainRunner(dbm, tcfg, mode="db", ckpt_dir=d, ckpt_every=4,
+                        faults=faults, max_restarts=3, log=quiet)
+        _, h = r.train(make_data, rng)
+    # per-iteration mean over the tail (block sampling is random, so compare
+    # the mean of the final quarter rather than per-block last losses)
+    tail = max(1, len(h_clean) // 4)
+    clean = float(np.mean([l for _, _, l in h_clean[-tail:]]))
+    chaos = float(np.mean([l for _, _, l in h[-tail:]]))
+    inj = faults.stats()
+    stats = r.stats()["counters"]
+    assert np.isfinite(chaos), chaos
+    assert abs(chaos - clean) <= tol_abs + tol_rel * abs(clean), (clean,
+                                                                  chaos)
+    assert stats["restarts"] >= 1, stats
+    assert inj["grad_nan"]["fired"] >= 1, inj
+    return {"mode": "db", "steps": steps, "final_loss_clean": clean,
+            "final_loss_chaos": chaos, "gap": abs(chaos - clean),
+            "within_tolerance": True, "restarts": stats["restarts"],
+            "nan_injected": stats["nan_injected"],
+            "ckpt_corrupt_fired": inj["ckpt_corrupt"]["fired"]}
+
+
+def run(quick: bool = True, out: str = None):
+    db_steps = 10 if quick else 40
+    par_steps = 12 if quick else 48
+
+    parity = []
+    parity.append(_parity_case("db", db_steps, ckpt_every=4, halt_after=7))
+    print(f"[parity db] bit-identical after kill@7/resume "
+          f"({db_steps} steps)")
+    # round-robin engine path: pin the mesh to one device
+    parity.append(_parity_case("block-parallel", par_steps, ckpt_every=1,
+                               halt_after=2, devices=[jax.devices()[0]]))
+    print(f"[parity block-parallel/{parity[-1]['engine']}] bit-identical "
+          f"after kill@2/resume ({par_steps} steps)")
+    if jax.device_count() >= B:
+        parity.append(_parity_case("block-parallel", par_steps,
+                                   ckpt_every=1, halt_after=2))
+        print(f"[parity block-parallel/{parity[-1]['engine']}] "
+              f"bit-identical after kill@2/resume ({par_steps} steps)")
+    else:
+        print(f"[parity] shard_map path skipped: {jax.device_count()} "
+              f"devices < {B} blocks")
+
+    chaos_par = _chaos_parallel(32 if quick else 96)
+    print(f"[chaos block-parallel/{chaos_par['engine']}] "
+          f"{chaos_par['pod_deaths']} pod deaths, "
+          f"{chaos_par['nan_injected']} NaNs, "
+          f"{chaos_par['ckpt_corrupt_fired']} corrupted generations | "
+          f"max |loss gap| {chaos_par['max_abs_gap']:.3f} (within tol)")
+    chaos_db = _chaos_db(24 if quick else 80)
+    print(f"[chaos db] {chaos_db['restarts']} restarts, "
+          f"{chaos_db['nan_injected']} NaNs | loss gap "
+          f"{chaos_db['gap']:.3f} (within tol)")
+
+    report = {
+        "meta": {"model": CFG.name, "blocks": B,
+                 "backend": jax.default_backend(),
+                 "devices": jax.device_count(), "quick": bool(quick)},
+        "resume_parity": parity,
+        "chaos": {"block_parallel": chaos_par, "db": chaos_db},
+        "note": ("CPU figures for a tiny model; the measurements are the "
+                 "bit-parity gates and chaos-survival invariants, not "
+                 "wall-clock."),
+    }
+    out = out or os.path.join(ROOT, "BENCH_faulttrain.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print("wrote", out)
+    return report
+
+
+def run_rows(quick: bool = True):
+    """benchmarks.run adapter: flatten the report into emit()-style rows."""
+    r = run(quick=quick)
+    rows = []
+    for p in r["resume_parity"]:
+        rows.append({"name": f"parity_{p['mode']}_{p['engine']}",
+                     "steps": p["steps"], "killed_at": p["killed_at"],
+                     "params_bit_identical": int(p["params_bit_identical"]),
+                     "opt_bit_identical": int(p["opt_bit_identical"])})
+    c = r["chaos"]["block_parallel"]
+    rows.append({"name": "chaos_block_parallel", "steps": c["steps"],
+                 "pod_deaths": c["pod_deaths"],
+                 "readoptions": c["readoptions"],
+                 "degraded_batches": c["degraded_batches"],
+                 "nan_injected": c["nan_injected"],
+                 "ckpt_corrupt_fired": c["ckpt_corrupt_fired"],
+                 "max_abs_loss_gap": c["max_abs_gap"],
+                 "within_tolerance": int(c["within_tolerance"])})
+    c = r["chaos"]["db"]
+    rows.append({"name": "chaos_db", "steps": c["steps"],
+                 "restarts": c["restarts"],
+                 "nan_injected": c["nan_injected"],
+                 "ckpt_corrupt_fired": c["ckpt_corrupt_fired"],
+                 "loss_gap": c["gap"],
+                 "within_tolerance": int(c["within_tolerance"])})
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", default=True)
+    ap.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--out", default=None)
+    a = ap.parse_args()
+    run(quick=a.quick, out=a.out)

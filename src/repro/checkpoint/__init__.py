@@ -1,3 +1,6 @@
-from repro.checkpoint.ckpt import (load_block_opt, load_blocks, load_metadata,
-                                   load_pytree, save_block, save_block_opt,
-                                   save_pytree)
+from repro.checkpoint.ckpt import (CheckpointCorrupt, CheckpointError,
+                                   CheckpointManager, file_sha256,
+                                   key_from_json, key_to_json, load_block_opt,
+                                   load_blocks, load_metadata, load_pytree,
+                                   save_block, save_block_opt, save_pytree,
+                                   tree_digest)

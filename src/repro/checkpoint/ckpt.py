@@ -2,16 +2,49 @@
 plus BLOCK-WISE checkpoints — each DiffusionBlocks block saves/restores its
 unit slice independently, which is what block-parallel training across pods
 needs (each pod writes only its block; a merge step assembles the full model).
+
+Crash consistency
+-----------------
+Every write in this module is ATOMIC: the payload goes to a temp file in the
+destination directory, is fsync'd, and only then renamed over the final path
+(``os.replace`` — atomic on POSIX). A crash mid-save therefore never leaves a
+truncated ``.npz`` under the real name; readers see either the old complete
+file or the new complete file. A file that is nonetheless unreadable (torn by
+a pre-atomic writer, bit rot, truncation by an injected ``ckpt_corrupt``
+fault) raises ``CheckpointCorrupt`` with the offending path — never a raw
+zipfile/KeyError traceback.
+
+On top of the atomic primitives, ``CheckpointManager`` provides VERSIONED
+GENERATIONS for fault-tolerant training (``repro.launch.trainrunner``): each
+save writes a fresh ``gen_NNNNNN/`` directory of npz files, then atomically
+publishes ``MANIFEST-NNNNNN.json`` carrying the training step, rng state,
+data-loader cursor, guard counters, and a sha256 per file. ``load_latest``
+verifies every checksum and falls back to the previous generation when any
+file of the newest one is corrupt — a torn or rotted checkpoint is DETECTED,
+not silently loaded.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
-from typing import Any, Dict, Optional
+import tempfile
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorrupt(CheckpointError):
+    """A checkpoint file exists but cannot be read back (truncated archive,
+    missing key, checksum mismatch). The message names the file and the
+    remedy: delete it (flat layout) or let the manifest loader fall back to
+    the previous generation (managed layout)."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -26,25 +59,79 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+def _atomic_write(path: str, write_fn: Callable[[Any], None],
+                  mode: str = "wb") -> None:
+    """Write via temp-file + fsync + rename so ``path`` is never torn."""
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp")
+    try:
+        with os.fdopen(fd, mode) as f:
+            write_fn(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def file_sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def tree_digest(tree) -> str:
+    """sha256 over every leaf's bytes (sorted by flattened key) — two trees
+    share a digest iff they are BIT-identical. The resume-parity gate
+    compares params and optimizer state this way."""
+    h = hashlib.sha256()
     flat = _flatten(tree)
-    np.savez(path, **flat)
+    for k in sorted(flat):
+        arr = np.ascontiguousarray(flat[k])
+        h.update(k.encode())
+        h.update(str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def save_pytree(path: str, tree, metadata: Optional[dict] = None) -> None:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    flat = _flatten(tree)
+    _atomic_write(path, lambda f: np.savez(f, **flat))
     if metadata is not None:
-        with open(path + ".meta.json", "w") as f:
-            json.dump(metadata, f)
+        meta = path[:-4] + ".meta.json"
+        _atomic_write(meta, lambda f: f.write(json.dumps(metadata)), "w")
 
 
 def load_pytree(path: str, template) -> Any:
     if not path.endswith(".npz"):
         path = path + ".npz"
-    data = np.load(path)
+    try:
+        data = np.load(path)
+    except Exception as e:
+        raise CheckpointCorrupt(
+            f"checkpoint {path!r} is unreadable ({type(e).__name__}: {e}) — "
+            f"likely a torn write from a crashed run; delete the file or "
+            f"resume from an earlier manifest generation") from e
     leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
     out = []
     for p, leaf in leaves_t:
         key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
                        for q in p)
-        arr = jnp.asarray(data[key])
+        try:
+            arr = jnp.asarray(data[key])
+        except Exception as e:
+            raise CheckpointCorrupt(
+                f"checkpoint {path!r} is missing or cannot decode key "
+                f"{key!r} ({type(e).__name__}) — the archive is incomplete; "
+                f"delete the file or resume from an earlier manifest "
+                f"generation") from e
         assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
         out.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(
@@ -106,3 +193,162 @@ def load_blocks(ckpt_dir: str, params_template, ranges) -> Any:
         view = load_pytree(path, tmpl)
         params = write_back_block_view(params, view, start)
     return params
+
+
+# ---------------------------------------------------------------------------
+# Versioned manifest generations (fault-tolerant training)
+# ---------------------------------------------------------------------------
+MANIFEST_PREFIX = "MANIFEST-"
+
+
+class CheckpointManager:
+    """Generational checkpoints under one directory:
+
+        ckpt_dir/
+          gen_000001/<name>.npz ...     one npz per named pytree
+          MANIFEST-000001.json          published LAST (atomic rename)
+          gen_000002/...
+          MANIFEST-000002.json
+
+    The manifest carries the caller's ``state`` payload (training step, rng,
+    data cursor, guard counters, periphery policy — anything JSON) plus a
+    sha256 per file. A generation is only visible once its manifest exists,
+    and only loadable when every file passes its checksum, so a crash at ANY
+    point of ``save`` (or corruption after it) degrades to "the previous
+    generation loads" rather than "the run is poisoned".
+
+    ``faults``: an optional ``repro.launch.faults.FaultInjector``; the
+    ``ckpt_corrupt`` hook (consulted once per save) truncates one freshly
+    written file AFTER the manifest publish — the exact torn-write the
+    checksum fallback exists to catch.
+    """
+
+    def __init__(self, ckpt_dir: str, keep: int = 2, faults=None):
+        if keep < 1:
+            raise ValueError("keep must be >= 1")
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.faults = faults
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    # -- layout helpers -----------------------------------------------------
+    def _manifest_path(self, gen: int) -> str:
+        return os.path.join(self.ckpt_dir, f"{MANIFEST_PREFIX}{gen:06d}.json")
+
+    def _gen_dir(self, gen: int) -> str:
+        return os.path.join(self.ckpt_dir, f"gen_{gen:06d}")
+
+    def generations(self):
+        """Published generation numbers, ascending (manifest exists)."""
+        out = []
+        for name in os.listdir(self.ckpt_dir):
+            if name.startswith(MANIFEST_PREFIX) and name.endswith(".json"):
+                try:
+                    out.append(int(name[len(MANIFEST_PREFIX):-5]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    # -- save ---------------------------------------------------------------
+    def save(self, trees: Dict[str, Any], state: dict) -> int:
+        """Write one generation: every named pytree, then the manifest.
+        Returns the generation number."""
+        gens = self.generations()
+        gen = (gens[-1] + 1) if gens else 1
+        gdir = self._gen_dir(gen)
+        os.makedirs(gdir, exist_ok=True)
+        files = {}
+        for name, tree in trees.items():
+            fname = f"{name}.npz"
+            save_pytree(os.path.join(gdir, fname), tree)
+            files[fname] = file_sha256(os.path.join(gdir, fname))
+        manifest = {"generation": gen, "dir": os.path.basename(gdir),
+                    "files": files, "state": state}
+        _atomic_write(self._manifest_path(gen),
+                      lambda f: f.write(json.dumps(manifest, indent=1)), "w")
+        if self.faults is not None:
+            # torn write: truncate one file of the generation we just
+            # published — load_latest must detect it and fall back
+            self.faults.maybe_corrupt(
+                "ckpt_corrupt", os.path.join(gdir, sorted(files)[0]))
+        self._prune(keep_at_least=gen)
+        return gen
+
+    def _prune(self, keep_at_least: int) -> None:
+        gens = self.generations()
+        for g in gens[:-self.keep]:
+            if g == keep_at_least:
+                continue
+            gdir = self._gen_dir(g)
+            try:
+                os.unlink(self._manifest_path(g))
+                if os.path.isdir(gdir):
+                    for f in os.listdir(gdir):
+                        os.unlink(os.path.join(gdir, f))
+                    os.rmdir(gdir)
+            except OSError:
+                pass                     # best-effort; never fail a save
+
+    # -- load ---------------------------------------------------------------
+    def verify(self, gen: int) -> bool:
+        """All files of ``gen`` exist and match their manifest checksums."""
+        try:
+            with open(self._manifest_path(gen)) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError):
+            return False
+        gdir = self._gen_dir(gen)
+        for fname, digest in manifest["files"].items():
+            p = os.path.join(gdir, fname)
+            if not os.path.exists(p) or file_sha256(p) != digest:
+                return False
+        return True
+
+    def load_latest(self, templates: Dict[str, Any],
+                    log=None) -> Tuple[Optional[Dict[str, Any]],
+                                       Optional[dict]]:
+        """Newest generation whose every file verifies → (trees, manifest);
+        corrupt generations are skipped with a log line. (None, None) when
+        nothing loadable exists."""
+        for gen in reversed(self.generations()):
+            if not self.verify(gen):
+                if log:
+                    log(f"[ckpt] generation {gen} failed checksum "
+                        f"verification; falling back")
+                continue
+            with open(self._manifest_path(gen)) as f:
+                manifest = json.load(f)
+            gdir = self._gen_dir(gen)
+            trees = {}
+            try:
+                for name, tmpl in templates.items():
+                    trees[name] = load_pytree(
+                        os.path.join(gdir, f"{name}.npz"), tmpl)
+            except CheckpointCorrupt:
+                if log:
+                    log(f"[ckpt] generation {gen} unreadable despite "
+                        f"checksum pass; falling back")
+                continue
+            return trees, manifest
+        return None, None
+
+    def load_tree(self, gen: int, name: str, template) -> Any:
+        """One named pytree from one generation (per-block rewind)."""
+        return load_pytree(os.path.join(self._gen_dir(gen), f"{name}.npz"),
+                           template)
+
+    def latest_good_generation(self) -> Optional[int]:
+        for gen in reversed(self.generations()):
+            if self.verify(gen):
+                return gen
+        return None
+
+
+# -- rng key serialization (manifest-friendly) ------------------------------
+def key_to_json(key) -> list:
+    """PRNGKey → JSON list of uint32 words (bit-exact round-trip)."""
+    return [int(x) for x in np.asarray(key).ravel()]
+
+
+def key_from_json(words) -> jax.Array:
+    return jnp.asarray(np.asarray(words, np.uint32))

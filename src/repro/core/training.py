@@ -11,9 +11,11 @@ structural, not simulated.
 """
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Dict, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro import precision as precision_mod
 from repro.configs.base import TrainConfig
@@ -21,6 +23,37 @@ from repro.core.blocks import DiffusionBlocksModel
 from repro.optim import adamw, apply_updates, warmup_cosine
 
 STACK_KEYS = ("layers", "units")
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Per-block anomaly guard (paper §3 independence as a FAULT boundary):
+    a non-finite loss/grad-norm or a loss spike skips ONLY the offending
+    block's update — its params, AdamW moments, and step counter stay put,
+    and (in the block-parallel engine) its periphery gradient contribution
+    is masked out of the psum. A spike is ``loss > spike_factor * ewma +
+    margin`` once the block's loss EWMA is initialized (first clean step);
+    ``rewind_after`` consecutive anomalies tell the supervisor
+    (``repro.launch.trainrunner``) to rewind that block alone to its last
+    checkpoint generation."""
+    spike_factor: float = 8.0
+    margin: float = 2.0
+    ewma_decay: float = 0.9
+    rewind_after: int = 3
+
+    def classify(self, loss, gnorm, ewma, active=True):
+        """(ok, new_ewma) — jit-safe scalars. ``ewma < 0`` means
+        uninitialized (spike check disarmed); the EWMA only advances on
+        clean steps so an anomaly can't drag the baseline toward itself.
+        ``active=False`` (a dead pod / masked block) forces not-ok without
+        touching the EWMA."""
+        finite = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+        spike = (ewma > 0) & (loss > self.spike_factor * ewma + self.margin)
+        ok = finite & ~spike & active
+        d = self.ewma_decay
+        new_ewma = jnp.where(
+            ok, jnp.where(ewma < 0, loss, d * ewma + (1 - d) * loss), ewma)
+        return ok, new_ewma
 
 
 def extract_block_view(params: Dict, start: int, size: int) -> Dict:
@@ -60,7 +93,7 @@ def make_optimizer(tcfg: TrainConfig):
 def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
                        impl: str = "auto", jit: bool = True,
                        donate: bool = False, unit_range=None,
-                       precision=None):
+                       precision=None, guard: Optional[GuardConfig] = None):
     """Returns (init_opt_state_fn, step_fn).
 
     step_fn(params, opt_state_b, tokens, rng, aux_inputs=None)
@@ -74,6 +107,18 @@ def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
     copies (the cast's transpose accumulates grads back to fp32). ``donate``
     donates the (params, opt_state) buffers to the jitted step so the update
     happens in place — no second copy of the model in HBM.
+
+    ``guard`` (a ``GuardConfig``) switches to the ANOMALY-GUARDED signature:
+
+    step_fn(params, opt_state_b, ewma, tokens, rng, aux_inputs=None,
+            loss_mult=1.0) -> (params, opt_state_b, ewma, loss, metrics)
+
+    where ``ewma`` is the block's scalar loss EWMA (pass -1.0 to start), a
+    non-finite or spiking loss leaves params AND optimizer state (including
+    the step counter) untouched, and ``metrics["ok"]`` reports the verdict.
+    ``loss_mult`` scales the loss inside the grad (the ``grad_nan`` fault
+    injection point — NaN in, guard catches it). With ``guard=None`` the
+    behavior and signature are exactly the historical ones.
     """
     start, size = unit_range if unit_range is not None else dbm.ranges[b]
     pol = precision_mod.get_policy(precision)
@@ -82,27 +127,50 @@ def make_db_train_step(dbm: DiffusionBlocksModel, b: int, tcfg: TrainConfig,
     def init_opt(params):
         return opt_init(extract_block_view(params, start, size))
 
-    def step(params, opt_state, tokens, rng, aux_inputs=None):
+    def grads_of(params, tokens, rng, aux_inputs, loss_mult=None):
         view = extract_block_view(params, start, size)
 
         def loss_fn(v):
             vc = precision_mod.cast_params_for_compute(pol, v,
                                                        dbm.cfg.family)
-            return dbm.block_loss(vc, b, tokens, rng, aux_inputs=aux_inputs,
-                                  impl=impl, unit_range=(0, size),
-                                  precision=pol)
+            loss, metrics = dbm.block_loss(vc, b, tokens, rng,
+                                           aux_inputs=aux_inputs,
+                                           impl=impl, unit_range=(0, size),
+                                           precision=pol)
+            if loss_mult is not None:
+                loss = loss * loss_mult
+            return loss, metrics
 
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(view)
+        return view, loss, metrics, grads
+
+    def step(params, opt_state, tokens, rng, aux_inputs=None):
+        view, loss, metrics, grads = grads_of(params, tokens, rng, aux_inputs)
         updates, opt_state, om = opt_update(grads, opt_state, view)
         view = apply_updates(view, updates)
         params = write_back_block_view(params, view, start)
         metrics = {**metrics, **om}
         return params, opt_state, loss, metrics
 
+    def guarded_step(params, opt_state, ewma, tokens, rng, aux_inputs=None,
+                     loss_mult=1.0):
+        view, loss, metrics, grads = grads_of(params, tokens, rng,
+                                              aux_inputs, loss_mult)
+        updates, opt2, om = opt_update(grads, opt_state, view)
+        view2 = apply_updates(view, updates)
+        ok, ewma = guard.classify(loss, om["grad_norm"], ewma)
+        sel = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+        view = jax.tree_util.tree_map(sel, view2, view)
+        opt_state = jax.tree_util.tree_map(sel, opt2, opt_state)
+        params = write_back_block_view(params, view, start)
+        metrics = {**metrics, **om, "ok": ok}
+        return params, opt_state, ewma, loss, metrics
+
+    fn = step if guard is None else guarded_step
     if jit:
-        step = jax.jit(step, donate_argnums=(0, 1) if donate else ())
-    return init_opt, step
+        fn = jax.jit(fn, donate_argnums=(0, 1) if donate else ())
+    return init_opt, fn
 
 
 def make_e2e_train_step(dbm: DiffusionBlocksModel, tcfg: TrainConfig,

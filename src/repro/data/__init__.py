@@ -1,4 +1,5 @@
 from repro.data.synthetic import (GaussianMixtureImages, MarkovLM,
-                                  MixtureImagesContinuous, arithmetic_stream)
+                                  MarkovStream, MixtureImagesContinuous,
+                                  arithmetic_stream)
 from repro.data.pipeline import HostDataLoader, repeat_batches
 from repro.data.tokenizer import ByteTokenizer, Text8Tokenizer

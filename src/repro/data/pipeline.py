@@ -16,11 +16,20 @@ import numpy as np
 
 
 class HostDataLoader:
+    """Prefetching loader. When the wrapped ``gen`` exposes a ``cursor()``
+    (e.g. ``repro.data.MarkovStream``), ``cursor()`` here returns that
+    cursor advanced to the CONSUMER position — ``delivered`` counts batches
+    handed to the trainer, not batches the prefetch thread has pulled ahead,
+    so a resume from the cursor replays exactly the batches the trainer has
+    not yet seen."""
+
     def __init__(self, gen: Iterator, host_id: int = 0, num_hosts: int = 1,
                  sharding=None, prefetch: int = 2):
         self.gen = gen
         self.host_id, self.num_hosts = host_id, num_hosts
         self.sharding = sharding
+        self.delivered = 0
+        self._cursor0 = gen.cursor() if hasattr(gen, "cursor") else None
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -55,7 +64,17 @@ class HostDataLoader:
         item = self._q.get()
         if isinstance(item, Exception):
             raise item
+        self.delivered += 1
         return item
+
+    def cursor(self) -> dict:
+        """Source cursor at the CONSUMER position (None when the wrapped
+        generator has no ``cursor()``)."""
+        if self._cursor0 is None:
+            return None
+        cur = dict(self._cursor0)
+        cur["batches"] = cur.get("batches", 0) + self.delivered
+        return cur
 
     def close(self):
         self._stop.set()

@@ -1,12 +1,21 @@
-"""Deterministic fault injection for the serving engine.
+"""Deterministic fault injection — ONE injector shared by serving AND
+training.
 
-Chaos hooks let tests and the load harness force the engine down its rare
-paths — allocator exhaustion, engine-thread crashes, token-stream stalls —
-on a SEEDED schedule, so every failure a test provokes is reproducible
-bit-for-bit. The engine never imports randomness for this itself: a
-``FaultInjector`` is handed to ``ContinuousBatcher(faults=...)`` /
-``EngineRunner`` and consulted at named hook points; with no injector (the
-default) every hook is a no-op costing one attribute check.
+Chaos hooks let tests and the harnesses force the stack down its rare paths
+— allocator exhaustion, engine-thread crashes, token-stream stalls, pod
+deaths, NaN gradients, torn checkpoint writes — on a SEEDED schedule, so
+every failure a test provokes is reproducible bit-for-bit. Hosts never
+import randomness for this themselves: a ``FaultInjector`` is handed in
+(``ContinuousBatcher(faults=...)``, ``EngineRunner``, ``TrainRunner``,
+``CheckpointManager(faults=...)``) and consulted at named hook points; with
+no injector (the default) every hook is a no-op costing one attribute check.
+
+The injector is HOST-AGNOSTIC: hooks are plain names, nothing here knows
+about batcher or trainer call sites. Any host consults any hook with the
+same four consumption patterns — ``fire`` (boolean), ``maybe_raise``
+(raise a configurable exception), ``maybe_sleep`` (latency), and
+``maybe_corrupt`` (truncate a file, for torn-write simulation) — so serve
+and train share one injector and one schedule namespace.
 
 Hook names used by the serving stack:
 
@@ -30,6 +39,26 @@ Hook names used by the serving stack:
   ``handoff_stall``   sleeps inside the router's handoff send (pair with
                       ``{"sleep": s}`` above the router's handoff timeout)
                       — exercises the bounded retry/backoff path.
+
+Hook names used by the training stack (``repro.launch.trainrunner``):
+
+  ``pod_die``         block-parallel: the supervisor marks the victim
+                      block's pod dead (device state lost → rewind to the
+                      last generation), degrades it to the round-robin
+                      orphan path, and re-adopts it onto the mesh when the
+                      pod revives. db mode has no pods: ``pod_die`` raises
+                      ``PodDied`` = simulated PROCESS death → bounded
+                      restart from the latest good generation.
+  ``grad_nan``        poisons ONE block's loss with NaN for one batch (via
+                      the engine's per-block ``loss_mult``) — exercises the
+                      per-block anomaly guard: only that block's update is
+                      skipped. Optional ``{"block": b}`` pins the victim
+                      (default: rotate by fire count).
+  ``data_stall``      sleeps inside the training data fetch — exercises the
+                      supervisor's heartbeat/stall accounting.
+  ``ckpt_corrupt``    ``CheckpointManager`` truncates one freshly written
+                      file after publishing a generation — exercises the
+                      checksum fallback to the previous manifest generation.
 
 Each hook is configured with ONE trigger spec:
 
@@ -61,6 +90,13 @@ class WorkerDied(InjectedFault):
     Supervisors must NOT restart on this — recovery is the router's job
     (heartbeat detection → failover), which is exactly what the fault
     exists to exercise."""
+
+
+class PodDied(InjectedFault):
+    """A ``pod_die`` hook fired: one training pod (block group) is
+    (simulated) dead. The training supervisor must NOT treat this as an
+    engine crash — the other blocks keep training; the orphaned block
+    degrades to the round-robin path until the pod revives."""
 
 
 class FaultInjector:
@@ -101,14 +137,27 @@ class FaultInjector:
             self.fired[hook] += 1
         return hit
 
-    def maybe_raise(self, hook: str) -> None:
+    def maybe_raise(self, hook: str, exc: type = InjectedFault) -> None:
+        """Raise ``exc`` when the hook fires (``exc`` lets hosts signal
+        distinguishable failure classes — e.g. ``PodDied`` — without the
+        injector knowing their call sites)."""
         if self.fire(hook):
-            raise InjectedFault(
+            raise exc(
                 f"injected fault {hook!r} (call {self.calls[hook]})")
 
     def maybe_sleep(self, hook: str, default: float = 0.05) -> None:
         if self.fire(hook):
             time.sleep(float(self.specs[hook].get("sleep", default)))
+
+    def maybe_corrupt(self, hook: str, path: str) -> bool:
+        """Truncate ``path`` to half its size when the hook fires (torn-write
+        simulation); True when corruption happened. The file must exist."""
+        if not self.fire(hook):
+            return False
+        import os
+        with open(path, "r+b") as f:
+            f.truncate(max(0, os.path.getsize(path) // 2))
+        return True
 
     def stats(self) -> Dict[str, dict]:
         return {k: {"calls": self.calls[k], "fired": self.fired[k]}

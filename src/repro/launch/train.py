@@ -12,6 +12,12 @@ Wires the mesh + sharding rules into the DiffusionBlocks training loop:
     and per-block checkpoints (repro.checkpoint) are the merge points. With
     fewer devices than blocks the engine degrades to the round-robin scan.
 
+  * --supervise (implied by --resume / --faults): the TrainRunner
+    fault-tolerant loop — generational crash-consistent checkpoints in
+    --ckpt-dir, per-block anomaly guards with rewind, heartbeats, pod-death
+    degradation/re-adoption, bounded restart, and seeded fault injection
+    (docs/training.md).
+
 Runs on real local devices (CPU dev: 1 device; tests use
 --xla_force_host_platform_device_count to exercise sharding).
 """
@@ -68,6 +74,32 @@ def main():
                          "block count, or a float; default off)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
+    # -- fault-tolerant supervisor (repro.launch.trainrunner) --------------
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the TrainRunner supervisor: generational "
+                         "crash-consistent checkpoints in --ckpt-dir, "
+                         "per-block anomaly guards with rewind, heartbeats, "
+                         "bounded restart (implied by --resume / --faults)")
+    ap.add_argument("--ckpt-every", type=int, default=20,
+                    help="supervisor checkpoint cadence (batches in "
+                         "--block-parallel, steps in --mode db)")
+    ap.add_argument("--ckpt-keep", type=int, default=3,
+                    help="checkpoint generations to retain")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume bit-identically from the latest good "
+                         "generation in --ckpt-dir")
+    ap.add_argument("--faults", default="",
+                    help="JSON fault-injection spec, e.g. "
+                         "'{\"pod_die\": {\"every\": 50}, "
+                         "\"grad_nan\": {\"p\": 0.02}}' "
+                         "(hooks: pod_die grad_nan data_stall ckpt_corrupt)")
+    ap.add_argument("--fault-seed", type=int, default=0)
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restart budget for simulated process death "
+                         "(--mode db pod_die)")
+    ap.add_argument("--pod-restart-after", type=int, default=2,
+                    help="batches a dead pod stays down before its block is "
+                         "re-adopted (--block-parallel pod_die)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -94,6 +126,48 @@ def main():
 
     lm = MarkovLM(vocab_size=cfg.vocab_size, seed=7)
     t_shard = tokens_sharding(mesh, args.batch)
+
+    supervise = args.supervise or args.resume or bool(args.faults)
+    if supervise:
+        # fault-tolerant path: TrainRunner owns checkpoints, guards,
+        # restarts, and the (cursor-able) data stream
+        if args.mode == "e2e":
+            raise SystemExit("--supervise covers --mode db and "
+                             "--block-parallel only")
+        if args.block_parallel and args.model_parallel > 1:
+            raise SystemExit(
+                "--block-parallel builds its own (pod, data) mesh and does "
+                "not compose with --model-parallel yet; drop one of the two")
+        import json
+
+        from repro.data import MarkovStream
+        from repro.launch.faults import make_injector
+        from repro.launch.trainrunner import TrainRunner
+
+        faults = make_injector(json.loads(args.faults) if args.faults
+                               else None, seed=args.fault_seed)
+
+        def make_data(cur):
+            src = (lm.stream(args.batch, args.seq) if cur is None
+                   else MarkovStream.from_cursor(cur))
+            return HostDataLoader(src, sharding=t_shard)
+
+        runner = TrainRunner(
+            dbm, tcfg,
+            mode="block-parallel" if args.block_parallel else "db",
+            periphery=args.periphery, impl=args.impl,
+            precision=args.precision,
+            periphery_lr_scale=args.periphery_lr_scale,
+            ckpt_dir=args.ckpt_dir or None, ckpt_every=args.ckpt_every,
+            keep=args.ckpt_keep, faults=faults,
+            max_restarts=args.max_restarts,
+            pod_restart_after=args.pod_restart_after)
+        params, _ = runner.train(make_data, rng, params=params,
+                                 resume=args.resume)
+        print("supervisor stats:", json.dumps(runner.stats()))
+        print("done")
+        return
+
     data = HostDataLoader(lm.iterator(args.batch, args.seq),
                           sharding=t_shard)
 

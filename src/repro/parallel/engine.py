@@ -50,6 +50,7 @@ from repro import precision as precision_mod
 from repro.configs.base import TrainConfig
 from repro.core import partition as P
 from repro.core.blocks import DiffusionBlocksModel
+from repro.core.training import GuardConfig
 from repro.optim import adamw, apply_updates, clip_by_global_norm, global_norm
 from repro.optim.schedules import warmup_cosine
 from repro.parallel.state import (BlockParallelState, split_periphery,
@@ -98,7 +99,7 @@ class BlockParallelTrainer:
                  periphery: str = "replicate+psum-mean",
                  freeze_steps: Optional[int] = None, impl: str = "auto",
                  devices=None, jit: bool = True, precision=None,
-                 periphery_lr_scale=None):
+                 periphery_lr_scale=None, guard: Optional[GuardConfig] = None):
         self.dbm, self.tcfg, self.impl = dbm, tcfg, impl
         self.precision = precision_mod.get_policy(precision)
         self.policy = _POLICY_ALIASES.get(periphery, periphery)
@@ -107,6 +108,11 @@ class BlockParallelTrainer:
                              f"one of {PERIPHERY_POLICIES}")
         self.B = dbm.num_blocks
         self.u = uniform_block_size(dbm.ranges)
+        self.guard = GuardConfig() if guard is None else guard
+        self.guard_ewma = jnp.full((self.B,), -1.0, jnp.float32)
+        self.anomaly_streak = np.zeros(self.B, np.int64)
+        self.anomalies = np.zeros(self.B, np.int64)
+        self.last_ok = np.ones(self.B, bool)
         self.freeze_steps = (tcfg.warmup_steps if freeze_steps is None
                              else freeze_steps)
         self.mesh = rules.block_parallel_mesh(self.B, devices)
@@ -133,6 +139,7 @@ class BlockParallelTrainer:
         dbm, tcfg, u, B = self.dbm, self.tcfg, self.u, self.B
         policy, impl, freeze_steps = self.policy, self.impl, self.freeze_steps
         pol = self.precision
+        guard = self.guard
         opt_update = self._opt_update
         popt_update = self._popt_update
         pod_ax = rules.BLOCK_AXIS if self.mode == "shard_map" else None
@@ -140,7 +147,7 @@ class BlockParallelTrainer:
         data_ax = "data" if (self.mode == "shard_map" and data_size > 1) \
             else None
 
-        def block_grads(view, tokens, rng, q_lo, q_hi):
+        def block_grads(view, tokens, rng, q_lo, q_hi, loss_mult):
             if data_ax is not None:
                 # each data shard must draw its OWN σ/ε for its batch slice
                 rng = jax.random.fold_in(rng, jax.lax.axis_index(data_ax))
@@ -148,10 +155,13 @@ class BlockParallelTrainer:
             def loss_fn(v):
                 vc = precision_mod.cast_params_for_compute(pol, v,
                                                            dbm.cfg.family)
-                return dbm.block_loss(vc, 0, tokens, rng, impl=impl,
-                                      unit_range=(0, u),
-                                      sigma_qrange=(q_lo, q_hi),
-                                      precision=pol)
+                loss, metrics = dbm.block_loss(vc, 0, tokens, rng, impl=impl,
+                                               unit_range=(0, u),
+                                               sigma_qrange=(q_lo, q_hi),
+                                               precision=pol)
+                # the grad_nan injection point: NaN loss_mult → NaN grads;
+                # the multiply by the usual 1.0 is bit-exact
+                return loss * loss_mult, metrics
 
             (loss, _), grads = jax.value_and_grad(
                 loss_fn, has_aux=True)(view)
@@ -165,51 +175,89 @@ class BlockParallelTrainer:
             return loss, grads, gnorm
 
         def local_update(stacks, stack_opt, periph, periph_opt, tokens,
-                         rngs, qranges, block_ids):
+                         rngs, qranges, block_ids, loss_mult, active, ewma,
+                         upd_periph):
             """Advance the (locally held) blocks; scan keeps only ONE block's
             activations live at a time — under shard_map each pod holds one
             block (scan length 1); in round-robin mode the scan IS the
-            schedule."""
+            schedule. Per-block ANOMALY GUARD: a non-finite or spiking loss
+            (or ``active=0``, a dead pod) skips that block's stack update and
+            masks its periphery contribution out of the psum; the clean path
+            is bit-identical to the unguarded engine (selects of the same
+            values, scale exactly 1.0)."""
 
             def body(acc, xs):
-                stack_b, opt_b, rng_b, qr_b, bid = xs
+                stack_b, opt_b, rng_b, qr_b, bid, mult_b, act_b, ewma_b = xs
                 view = {**periph, **stack_b}
                 loss, grads, gnorm = block_grads(view, tokens, rng_b,
-                                                 qr_b[0], qr_b[1])
+                                                 qr_b[0], qr_b[1], mult_b)
+                ok, ewma_b = guard.classify(loss, gnorm, ewma_b, act_b > 0)
                 g_stack = {k: grads[k] for k in stack_b}
                 g_per = {k: grads[k] for k in periph}
                 if policy == "owner-broadcast":
                     w = (bid == B - 1).astype(jnp.float32)
                 else:
                     w = jnp.float32(1.0 / B)
-                acc = jax.tree_util.tree_map(
-                    lambda a, g: a + w * g.astype(jnp.float32), acc, g_per)
-                updates, opt_b, _ = opt_update(g_stack, opt_b, stack_b)
-                stack_b = apply_updates(stack_b, updates)
-                return acc, (stack_b, opt_b, loss, gnorm)
+                w = jnp.where(ok, w, 0.0)
+                acc_g, acc_n, acc_w = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, g: a + w * jnp.where(ok, g.astype(jnp.float32),
+                                                   0.0), acc_g, g_per)
+                acc_n = acc_n + ok.astype(jnp.int32)
+                acc_w = acc_w + w
+                updates, opt_b2, _ = opt_update(g_stack, opt_b, stack_b)
+                stack_b2 = apply_updates(stack_b, updates)
+                sel = lambda new, old: jnp.where(ok, new, old)  # noqa: E731
+                stack_b = jax.tree_util.tree_map(sel, stack_b2, stack_b)
+                opt_b = jax.tree_util.tree_map(sel, opt_b2, opt_b)
+                return (acc_g, acc_n, acc_w), (stack_b, opt_b, loss, gnorm,
+                                               ok, ewma_b)
 
-            acc0 = jax.tree_util.tree_map(
-                lambda x: jnp.zeros(x.shape, jnp.float32), periph)
-            acc, (stacks, stack_opt, losses, gnorms) = jax.lax.scan(
-                body, acc0, (stacks, stack_opt, rngs, qranges, block_ids))
+            acc0 = (jax.tree_util.tree_map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), periph),
+                jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32))
+            acc, (stacks, stack_opt, losses, gnorms, oks, ewma) = \
+                jax.lax.scan(body, acc0, (stacks, stack_opt, rngs, qranges,
+                                          block_ids, loss_mult, active, ewma))
+            acc_g, acc_n, acc_w = acc
             if pod_ax is not None:
-                acc = jax.lax.psum(acc, pod_ax)
-            updates, new_popt, _ = popt_update(acc, periph_opt, periph)
+                acc_g = jax.lax.psum(acc_g, pod_ax)
+                acc_n = jax.lax.psum(acc_n, pod_ax)
+                acc_w = jax.lax.psum(acc_w, pod_ax)
+            # renormalize the periphery mean over the SURVIVING blocks. In
+            # the owner policy acc_g already carries exactly the owner's
+            # grads (w ∈ {0,1}), so the scale stays 1; in the mean policies
+            # B/n_ok re-weights the (1/B)Σ_ok sum to a true mean — exactly
+            # 1.0 when every block is clean (bit-parity with the old path).
+            if policy == "owner-broadcast":
+                scale = jnp.float32(1.0)
+                per_ok = acc_w > 0
+            else:
+                scale = B / jnp.maximum(acc_n.astype(jnp.float32), 1.0)
+                per_ok = acc_n > 0
+            g_per = jax.tree_util.tree_map(lambda a: a * scale, acc_g)
+            updates, new_popt, _ = popt_update(g_per, periph_opt, periph)
             new_periph = apply_updates(periph, updates)
+            do_per = per_ok & upd_periph
+            sel_p = lambda new, old: jnp.where(do_per, new, old)  # noqa: E731
+            new_periph = jax.tree_util.tree_map(sel_p, new_periph, periph)
+            new_popt = jax.tree_util.tree_map(sel_p, new_popt, periph_opt)
             if policy == "freeze-after-warmup":
                 frozen = periph_opt.step >= freeze_steps
                 keep = lambda old, new: jnp.where(frozen, old, new)  # noqa: E731
                 new_periph = jax.tree_util.tree_map(keep, periph, new_periph)
                 new_popt = jax.tree_util.tree_map(keep, periph_opt, new_popt)
-            return stacks, stack_opt, new_periph, new_popt, losses, gnorms
+            return (stacks, stack_opt, new_periph, new_popt, losses, gnorms,
+                    oks, ewma)
 
         fn = local_update
         if self.mode == "shard_map":
             specs = rules.block_state_specs()
             sp, rp, tk = specs["stacked"], specs["replicated"], specs["tokens"]
             fn = shard_map(local_update, mesh=self.mesh,
-                           in_specs=(sp, sp, rp, rp, tk, sp, sp, sp),
-                           out_specs=(sp, sp, rp, rp, sp, sp),
+                           in_specs=(sp, sp, rp, rp, tk, sp, sp, sp, sp, sp,
+                                     sp, rp),
+                           out_specs=(sp, sp, rp, rp, sp, sp, sp, sp),
                            check_rep=False)
         return jax.jit(fn) if jit else fn
 
@@ -229,18 +277,89 @@ class BlockParallelTrainer:
             periph_opt = jax.device_put(periph_opt, rp)
         return BlockParallelState(stacks, periph, stack_opt, periph_opt)
 
-    def step(self, state: BlockParallelState, tokens, rngs):
+    def step(self, state: BlockParallelState, tokens, rngs, loss_mult=None,
+             active=None, update_periphery: bool = True):
         """One batch → one update of EVERY block. ``rngs``: (B, 2) per-block
-        PRNG keys. Returns (state', per-block losses (B,), grad norms (B,))."""
+        PRNG keys. Returns (state', per-block losses (B,), grad norms (B,)).
+
+        ``loss_mult`` (B,) scales each block's loss inside the grad (the
+        ``grad_nan`` injection point; default all-ones is bit-neutral).
+        ``active`` (B,) masks blocks out entirely (dead pods / orphan-only
+        degraded passes): an inactive block gets no stack update and no
+        periphery contribution. ``update_periphery=False`` freezes the
+        periphery for this call (used by the supervisor's orphan round-robin
+        passes so the mesh remains the single periphery writer).
+
+        Guard outcomes land on the trainer: ``last_ok`` (B,) bool,
+        cumulative ``anomalies``, consecutive ``anomaly_streak`` (only
+        blocks that actually ran are counted), and the per-block loss EWMA
+        ``guard_ewma`` advances only on clean steps."""
+        B = self.B
+        loss_mult = (jnp.ones((B,), jnp.float32) if loss_mult is None
+                     else jnp.asarray(loss_mult, jnp.float32))
+        active = (jnp.ones((B,), jnp.float32) if active is None
+                  else jnp.asarray(active, jnp.float32))
         if self.mesh is not None:
+            specs = rules.block_state_specs()
             tokens = jax.device_put(
-                tokens, NamedSharding(self.mesh,
-                                      rules.block_state_specs()["tokens"]))
-        stacks, stack_opt, periph, periph_opt, losses, gnorms = self._step_fn(
+                tokens, NamedSharding(self.mesh, specs["tokens"]))
+            sp = NamedSharding(self.mesh, specs["stacked"])
+            loss_mult = jax.device_put(loss_mult, sp)
+            active = jax.device_put(active, sp)
+        (stacks, stack_opt, periph, periph_opt, losses, gnorms, oks,
+         ewma) = self._step_fn(
             state.stacks, state.stack_opt, state.periph, state.periph_opt,
-            tokens, rngs, self.qranges, self.block_ids)
+            tokens, rngs, self.qranges, self.block_ids, loss_mult, active,
+            self.guard_ewma, jnp.asarray(bool(update_periphery)))
+        self.guard_ewma = ewma
+        oks_np = np.asarray(oks).astype(bool)
+        ran = np.asarray(active) > 0
+        bad = ran & ~oks_np
+        self.last_ok = oks_np | ~ran
+        self.anomalies += bad
+        self.anomaly_streak = np.where(
+            bad, self.anomaly_streak + 1,
+            np.where(ran, 0, self.anomaly_streak))
         return (BlockParallelState(stacks, periph, stack_opt, periph_opt),
                 losses, gnorms)
+
+    # ------------------------------------------------------------------
+    def guard_state(self) -> dict:
+        """JSON-serializable guard state (manifest payload)."""
+        return {"ewma": [float(x) for x in np.asarray(self.guard_ewma)],
+                "streak": [int(x) for x in self.anomaly_streak],
+                "anomalies": [int(x) for x in self.anomalies]}
+
+    def set_guard_state(self, gs: Optional[dict]) -> None:
+        if not gs:
+            return
+        self.guard_ewma = jnp.asarray(np.asarray(gs["ewma"], np.float32))
+        self.anomaly_streak = np.asarray(gs["streak"], np.int64)
+        self.anomalies = np.asarray(gs["anomalies"], np.int64)
+
+    def block_trees(self, state: BlockParallelState, b: int):
+        """(stack_view, opt_view) for block ``b`` — host-side slices of the
+        stacked state (checkpoint payloads, rewind templates)."""
+        stack = jax.device_get(jax.tree_util.tree_map(
+            lambda x: x[b], state.stacks))
+        opt = jax.device_get(jax.tree_util.tree_map(
+            lambda x: x[b], state.stack_opt))
+        return stack, opt
+
+    def write_block(self, state: BlockParallelState, b: int, stack_view,
+                    opt_view) -> BlockParallelState:
+        """Overwrite ONE block's stacked slice + optimizer moments (rewind /
+        pod re-adoption) — every other block's state is untouched."""
+        stacks = jax.tree_util.tree_map(
+            lambda whole, blk: whole.at[b].set(
+                jnp.asarray(blk, whole.dtype)), state.stacks, stack_view)
+        stack_opt = jax.tree_util.tree_map(
+            lambda whole, blk: whole.at[b].set(
+                jnp.asarray(blk, whole.dtype)), state.stack_opt, opt_view)
+        self.anomaly_streak[b] = 0
+        self.guard_ewma = self.guard_ewma.at[b].set(-1.0)
+        return BlockParallelState(stacks, state.periph, stack_opt,
+                                  state.periph_opt)
 
     # ------------------------------------------------------------------
     def train(self, data_iter, rng, params=None, log=print,

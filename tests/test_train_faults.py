@@ -1,0 +1,284 @@
+"""Fault-tolerant training: per-block anomaly guards, the TrainRunner
+supervisor (pod death → round-robin degrade → re-adoption, per-block rewind,
+deterministic resume), and checkpoint-generation corruption fallback.
+
+The four mandated behaviors:
+  * a NaN gradient skips ONLY that block's update — every other block's new
+    state is BIT-identical to the clean step's;
+  * a loss-spike streak rewinds ONLY the offending block to its last
+    checkpoint generation — the other blocks keep their trained state;
+  * pod death degrades the orphaned block to the round-robin path and
+    training CONTINUES (then re-adopts on revival);
+  * a corrupted generation (``ckpt_corrupt`` torn write) is detected by
+    checksum and the PREVIOUS generation loads instead.
+
+Everything runs on the round-robin engine path (device-count agnostic);
+``benchmarks/table21_faulttrain.py`` covers shard_map parity under
+``--xla_force_host_platform_device_count=8``."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, tree_digest
+from repro.configs import DBConfig
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import DiffusionBlocksModel
+from repro.core.training import GuardConfig, make_db_train_step
+from repro.data import MarkovLM, MarkovStream
+from repro.launch.faults import FaultInjector
+from repro.launch.trainrunner import TrainFailed, TrainRunner
+from repro.parallel import BlockParallelTrainer
+
+TINY = ModelConfig(name="tiny8", family="dense", n_layers=8, d_model=32,
+                   n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64)
+B = 4
+BATCH, SEQ = 4, 16
+QUIET = staticmethod(lambda *a: None)
+
+
+@pytest.fixture(scope="module")
+def dbm():
+    return DiffusionBlocksModel(TINY, DBConfig(num_blocks=B,
+                                               overlap_gamma=0.05))
+
+
+@pytest.fixture(scope="module")
+def params(dbm):
+    return dbm.init(jax.random.PRNGKey(0))
+
+
+def tcfg(steps=8, **kw):
+    kw.setdefault("batch_size", BATCH)
+    kw.setdefault("seq_len", SEQ)
+    kw.setdefault("lr", 2e-3)
+    kw.setdefault("warmup_steps", 2)
+    kw.setdefault("log_every", 0)
+    return TrainConfig(steps=steps, **kw)
+
+
+def make_data_factory():
+    lm = MarkovLM(vocab_size=TINY.vocab_size, seed=7)
+
+    def make_data(cur):
+        return (lm.stream(BATCH, SEQ) if cur is None
+                else MarkovStream.from_cursor(cur))
+    return make_data
+
+
+def tokens_batch(i=0):
+    lm = MarkovLM(vocab_size=TINY.vocab_size, seed=7)
+    s = lm.stream(BATCH, SEQ, start_batch=i)
+    return jnp.asarray(next(s))
+
+
+def one_device():
+    return [jax.devices()[0]]
+
+
+# ---------------------------------------------------------------------------
+# 1. NaN skip isolation (engine level, bitwise)
+# ---------------------------------------------------------------------------
+def test_nan_skips_only_that_block_bitwise(dbm, params):
+    victim = 1
+    tokens = tokens_batch()
+    rngs = jax.random.split(jax.random.PRNGKey(42), B)
+
+    def run(mult):
+        tr = BlockParallelTrainer(dbm, tcfg(), devices=one_device())
+        state = tr.init_state(params)
+        state, losses, _ = tr.step(state, tokens, rngs, loss_mult=mult)
+        return tr, state, np.asarray(losses)
+
+    tr_c, clean, _ = run(None)
+    mult = np.ones(B, np.float32)
+    mult[victim] = np.nan
+    tr_n, nand, losses = run(mult)
+    assert not np.isfinite(losses[victim])
+    assert not tr_n.last_ok[victim] and tr_n.anomalies[victim] == 1
+    assert all(tr_n.last_ok[b] for b in range(B) if b != victim)
+
+    tr0 = BlockParallelTrainer(dbm, tcfg(), devices=one_device())
+    state0 = tr0.init_state(params)
+    for b in range(B):
+        s_clean, o_clean = tr_c.block_trees(clean, b)
+        s_nan, o_nan = tr_n.block_trees(nand, b)
+        if b == victim:
+            s0, o0 = tr0.block_trees(state0, b)
+            # victim: untouched — params AND moments AND step counter
+            assert tree_digest(s_nan) == tree_digest(s0)
+            assert tree_digest(o_nan) == tree_digest(o0)
+            assert int(o_nan.step) == 0
+        else:
+            # everyone else: BIT-identical to the clean step
+            assert tree_digest(s_nan) == tree_digest(s_clean)
+            assert tree_digest(o_nan) == tree_digest(o_clean)
+            assert int(o_nan.step) == 1
+
+
+def test_db_guarded_step_nan_skip(dbm, params):
+    guard = GuardConfig()
+    init_opt, step = make_db_train_step(dbm, 0, tcfg(), guard=guard)
+    opt0 = init_opt(params)
+    tokens = tokens_batch()
+    rng = jax.random.PRNGKey(3)
+    p1, o1, e1, l1, m1 = step(params, opt0, jnp.float32(-1.0), tokens, rng)
+    assert bool(m1["ok"]) and np.isfinite(float(l1))
+    pn, on, en, ln, mn = step(params, opt0, jnp.float32(-1.0), tokens, rng,
+                              None, float("nan"))
+    assert not bool(mn["ok"])
+    assert tree_digest(pn) == tree_digest(params)      # params untouched
+    assert tree_digest(on) == tree_digest(opt0)        # moments + step too
+    assert float(en) == -1.0                           # ewma not dragged
+
+
+# ---------------------------------------------------------------------------
+# 2. loss-spike / anomaly streak rewinds ONLY the offending block
+# ---------------------------------------------------------------------------
+def test_streak_rewind_restores_only_offending_block(dbm, tmp_path):
+    """grad_nan pinned to block 1 for rewind_after consecutive batches; the
+    only checkpoint generation is the initial one, so the rewind must put
+    block 1 back at its INITIAL state while every other block keeps exactly
+    the trained state a no-rewind control run reaches."""
+    victim, batches = 1, 4
+    guard = GuardConfig(rewind_after=2)
+    make_data = make_data_factory()
+    rng = jax.random.PRNGKey(0)
+
+    def run(rewind_after, ckpt_dir):
+        faults = FaultInjector({"grad_nan": {"at": [3, 4],
+                                             "block": victim}}, seed=0)
+        r = TrainRunner(dbm, tcfg(steps=batches * B), mode="block-parallel",
+                        guard=GuardConfig(rewind_after=rewind_after),
+                        ckpt_dir=ckpt_dir, ckpt_every=100,   # only gen 1
+                        faults=faults, devices=one_device(),
+                        log=lambda *a: None)
+        r.train(make_data, rng)
+        return r
+
+    ctrl = run(rewind_after=100, ckpt_dir=str(tmp_path / "ctrl"))
+    test = run(rewind_after=guard.rewind_after,
+               ckpt_dir=str(tmp_path / "test"))
+    assert test.counters["rewinds"] == 1
+    assert ctrl.counters["rewinds"] == 0
+
+    mgr = CheckpointManager(str(tmp_path / "test"))
+    gen = mgr.latest_good_generation()
+    for b in range(B):
+        s_test, o_test = test.trainer.block_trees(test.state, b)
+        s_ctrl, _ = ctrl.trainer.block_trees(ctrl.state, b)
+        if b == victim:
+            s_init = mgr.load_tree(gen, f"block_{b:02d}", s_test)
+            assert tree_digest(s_test) == tree_digest(s_init)
+        else:
+            assert tree_digest(s_test) == tree_digest(s_ctrl)
+
+
+# ---------------------------------------------------------------------------
+# 3. pod death → degrade to round-robin orphan passes → re-adoption
+# ---------------------------------------------------------------------------
+def test_pod_death_degrades_and_readopts(dbm):
+    batches = 5
+    make_data = make_data_factory()
+    faults = FaultInjector({"pod_die": {"at": [2]}}, seed=0)
+    r = TrainRunner(dbm, tcfg(steps=batches * B), mode="block-parallel",
+                    faults=faults, pod_restart_after=2,
+                    devices=one_device(), log=lambda *a: None)
+    params, hist = r.train(make_data, jax.random.PRNGKey(0))
+    c = r.counters
+    assert c["pod_deaths"] == 1
+    assert c["degraded_batches"] == 2      # down for pod_restart_after
+    assert c["readoptions"] == 1
+    # training continued through the outage: every block's loss on every
+    # batch is finite (the orphan advanced via the round-robin passes)
+    losses = np.asarray([l for _, _, l in hist])
+    assert losses.shape[0] == batches * B and np.isfinite(losses).all()
+    # every block heartbeat reaches the final batch
+    assert all(r.heartbeats[b] == batches - 1 for b in range(B))
+    # and every block took one optimizer step per batch (orphan included —
+    # its counter restarts from the rewind generation, i.e. initialization)
+    opt = jax.device_get(r.state.stack_opt)
+    assert [int(s) for s in opt.step] == [batches] * B
+
+
+def test_db_pod_die_bounded_restart(dbm, tmp_path):
+    make_data = make_data_factory()
+    faults = FaultInjector({"pod_die": {"at": [5]}}, seed=0)
+    r = TrainRunner(dbm, tcfg(steps=8), mode="db",
+                    ckpt_dir=str(tmp_path), ckpt_every=3, faults=faults,
+                    max_restarts=2, log=lambda *a: None)
+    params, hist = r.train(make_data, jax.random.PRNGKey(0))
+    assert r.counters["restarts"] == 1
+    assert len(hist) == 8 + 1              # one step replayed after restart
+    assert np.isfinite([l for _, _, l in hist]).all()
+
+    faults = FaultInjector({"pod_die": {"every": 2}}, seed=0)
+    r = TrainRunner(dbm, tcfg(steps=8), mode="db",
+                    ckpt_dir=str(tmp_path / "x"), ckpt_every=3,
+                    faults=faults, max_restarts=2, log=lambda *a: None)
+    with pytest.raises(TrainFailed, match="budget"):
+        r.train(make_data, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# 4. ckpt_corrupt → checksum detects, previous generation loads
+# ---------------------------------------------------------------------------
+def test_ckpt_corrupt_falls_back_to_previous_generation(tmp_path):
+    tree1 = {"w": jnp.arange(8, dtype=jnp.float32)}
+    faults = FaultInjector({"ckpt_corrupt": {"at": [2]}}, seed=0)
+    mgr = CheckpointManager(str(tmp_path), keep=3, faults=faults)
+    g1 = mgr.save({"state": tree1}, {"it": 1})
+    g2 = mgr.save({"state": {"w": tree1["w"] + 1}}, {"it": 2})   # corrupted
+    assert mgr.verify(g1) and not mgr.verify(g2)
+    logs = []
+    trees, manifest = mgr.load_latest(
+        {"state": jax.tree_util.tree_map(jnp.zeros_like, tree1)},
+        log=logs.append)
+    assert manifest["generation"] == g1 and manifest["state"]["it"] == 1
+    np.testing.assert_array_equal(np.asarray(trees["state"]["w"]),
+                                  np.arange(8, dtype=np.float32))
+    assert any("falling back" in s for s in logs)
+    assert mgr.latest_good_generation() == g1
+
+
+def test_runner_resumes_past_corrupted_generation(dbm, tmp_path):
+    """End-to-end: corrupt the LAST generation of a finished run; a resume
+    must fall back to the previous one and still complete."""
+    make_data = make_data_factory()
+    faults = FaultInjector({"ckpt_corrupt": {"at": [3]}}, seed=0)
+    r = TrainRunner(dbm, tcfg(steps=8), mode="db", ckpt_dir=str(tmp_path),
+                    ckpt_every=3, faults=faults, log=lambda *a: None)
+    r.train(make_data, jax.random.PRNGKey(0), halt_after=7)
+    mgr = CheckpointManager(str(tmp_path))
+    gens = mgr.generations()
+    assert not mgr.verify(gens[-1])        # the torn write landed
+    assert mgr.latest_good_generation() == gens[-2]
+    r2 = TrainRunner(dbm, tcfg(steps=8), mode="db", ckpt_dir=str(tmp_path),
+                     ckpt_every=3, log=lambda *a: None)
+    params, hist = r2.train(make_data, jax.random.PRNGKey(0), resume=True)
+    assert np.isfinite([l for _, _, l in hist]).all()
+
+
+# ---------------------------------------------------------------------------
+# deterministic resume (round-robin path; shard_map in table21)
+# ---------------------------------------------------------------------------
+def test_parallel_kill_resume_bit_parity(dbm, tmp_path):
+    make_data = make_data_factory()
+    rng = jax.random.PRNGKey(0)
+
+    def runner(d):
+        return TrainRunner(dbm, tcfg(steps=3 * B), mode="block-parallel",
+                           ckpt_dir=str(d), ckpt_every=1,
+                           devices=one_device(), log=lambda *a: None)
+
+    r_clean = runner(tmp_path / "clean")
+    p_clean, _ = r_clean.train(make_data, rng)
+    r_kill = runner(tmp_path / "kill")
+    r_kill.train(make_data, rng, halt_after=2)
+    r_res = runner(tmp_path / "kill")
+    p_res, _ = r_res.train(make_data, rng, resume=True)
+    assert tree_digest(p_clean) == tree_digest(p_res)
+    assert (tree_digest(jax.device_get(r_clean.state.stack_opt))
+            == tree_digest(jax.device_get(r_res.state.stack_opt)))
+    assert (tree_digest(jax.device_get(r_clean.state.periph_opt))
+            == tree_digest(jax.device_get(r_res.state.periph_opt)))
