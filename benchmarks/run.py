@@ -29,7 +29,7 @@ def main() -> None:
                             table14_kernel_grads, table15_decode,
                             table16_prefill, table17_conditioned,
                             table18_load, table19_slo, table20_disagg,
-                            table21_faulttrain)
+                            table21_faulttrain, table22_quantkv)
     from benchmarks.common import emit
 
     tables = {
@@ -51,6 +51,7 @@ def main() -> None:
         "table19_slo": table19_slo.run_rows,
         "table20_disagg": table20_disagg.run_rows,
         "table21_faulttrain": table21_faulttrain.run_rows,
+        "table22_quantkv": table22_quantkv.run_rows,
     }
     if args.only:
         tables = {k: v for k, v in tables.items() if args.only in k}

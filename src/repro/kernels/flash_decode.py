@@ -48,9 +48,15 @@ NEG_INF = -1e30
 MIN_GROUP_PAD = 8
 
 
-def _decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
-                   m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
-                   n_pages: int, window: Optional[int]):
+def _decode_kernel(*refs, scale: float, page_size: int,
+                   n_pages: int, window: Optional[int], quantized: bool):
+    if quantized:
+        (table_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         o_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (table_ref, len_ref, q_ref, k_ref, v_ref,
+         o_ref, lse_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -71,6 +77,13 @@ def _decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
         q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            # int8 bytes stream from HBM; dequant happens here in-register
+            # with this PHYSICAL page's fp32 scale, scalar-prefetched like
+            # the page table itself.
+            phys = table_ref[b, p]
+            k = k * ks_ref[phys]
+            v = v * vs_ref[phys]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -101,6 +114,8 @@ def _decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
 def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                  page_table: jax.Array, lengths: jax.Array, *,
                  window: Optional[int] = None,
+                 k_scale: Optional[jax.Array] = None,
+                 v_scale: Optional[jax.Array] = None,
                  interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Split-KV paged decode attention over committed tokens.
 
@@ -110,6 +125,10 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                 page; entries past a sequence's allocation MUST still be
                 in-bounds (point them at a reserved page — see nn.cache)
     lengths:    (B,) int32 committed-token counts (mask: idx < lengths[b])
+    k_scale/v_scale: per-PHYSICAL-page fp32 dequant scales for an int8 pool
+                ((P,) or (P, 1, 1, 1); both given or both None). They are
+                scalar-prefetched exactly like the page table and applied
+                in-register after the int8 page streams into VMEM.
 
     Returns ``(out, lse)``: out (B, KV, G, hd) fp32 — softmax-normalized over
     the committed tokens only — and lse (B, KV, G) fp32, the partials'
@@ -119,28 +138,35 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     psz = k_pages.shape[1]
     n_pages = page_table.shape[1]
     scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
     Gp = max(G, MIN_GROUP_PAD)
     if Gp != G:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
 
     kernel = functools.partial(_decode_kernel, scale=scale, page_size=psz,
-                               n_pages=n_pages, window=window)
+                               n_pages=n_pages, window=window,
+                               quantized=quantized)
+    # with scales, the index_map lambdas receive two extra prefetch refs —
+    # keep the unquantized specs verbatim so the bf16 program is unchanged
+    if quantized:
+        q_map = lambda b, kv, p, tbl, lens, ks, vs: (b, kv, 0, 0)
+        kv_map = lambda b, kv, p, tbl, lens, ks, vs: (tbl[b, p], 0, kv, 0)
+        lse_map = lambda b, kv, p, tbl, lens, ks, vs: (b, kv, 0)
+    else:
+        q_map = lambda b, kv, p, tbl, lens: (b, kv, 0, 0)
+        kv_map = lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)
+        lse_map = lambda b, kv, p, tbl, lens: (b, kv, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, KV, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, Gp, hd),
-                         lambda b, kv, p, tbl, lens: (b, kv, 0, 0)),
-            pl.BlockSpec((1, psz, 1, hd),
-                         lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)),
-            pl.BlockSpec((1, psz, 1, hd),
-                         lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)),
+            pl.BlockSpec((1, 1, Gp, hd), q_map),
+            pl.BlockSpec((1, psz, 1, hd), kv_map),
+            pl.BlockSpec((1, psz, 1, hd), kv_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, Gp, hd),
-                         lambda b, kv, p, tbl, lens: (b, kv, 0, 0)),
-            pl.BlockSpec((1, 1, Gp),
-                         lambda b, kv, p, tbl, lens: (b, kv, 0)),
+            pl.BlockSpec((1, 1, Gp, hd), q_map),
+            pl.BlockSpec((1, 1, Gp), lse_map),
         ],
         scratch_shapes=[
             pltpu.VMEM((Gp,), jnp.float32),      # m (running max)
@@ -148,6 +174,10 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pltpu.VMEM((Gp, hd), jnp.float32),   # acc (weighted values)
         ],
     )
+    prefetch = (page_table.astype(jnp.int32), lengths.astype(jnp.int32))
+    if quantized:
+        prefetch += (k_scale.reshape(-1).astype(jnp.float32),
+                     v_scale.reshape(-1).astype(jnp.float32))
     out, lse = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -156,8 +186,7 @@ def flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             jax.ShapeDtypeStruct((B, KV, Gp), jnp.float32),
         ],
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      q, k_pages, v_pages)
+    )(*prefetch, q, k_pages, v_pages)
     return out[:, :, :G], lse[:, :, :G]
 
 

@@ -49,10 +49,16 @@ NEG_INF = -1e30
 MIN_ROW_PAD = 8
 
 
-def _prefill_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                    m_ref, l_ref, acc_ref, *, scale: float, page_size: int,
+def _prefill_kernel(*refs, scale: float, page_size: int,
                     n_pages: int, chunk: int, group: int,
-                    window: Optional[int]):
+                    window: Optional[int], quantized: bool):
+    if quantized:
+        (table_ref, len_ref, ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+    else:
+        (table_ref, len_ref, q_ref, k_ref, v_ref,
+         o_ref, m_ref, l_ref, acc_ref) = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     p = pl.program_id(2)
 
@@ -73,6 +79,11 @@ def _prefill_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)            # (rows, hd)
         k = k_ref[0, :, 0].astype(jnp.float32)         # (page_size, hd)
         v = v_ref[0, :, 0].astype(jnp.float32)
+        if quantized:
+            # in-register dequant with this physical page's prefetched scale
+            phys = table_ref[b, p]
+            k = k * ks_ref[phys]
+            v = v * vs_ref[phys]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         idx = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -103,6 +114,8 @@ def _prefill_kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 def flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                   page_table: jax.Array, lengths: jax.Array, *,
                   window: Optional[int] = None,
+                  k_scale: Optional[jax.Array] = None,
+                  v_scale: Optional[jax.Array] = None,
                   interpret: bool = False) -> jax.Array:
     """Chunked-prefill paged attention (history + intra-chunk causal).
 
@@ -114,6 +127,9 @@ def flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     page_table: (B, n_logical_pages) int32; entries past a sequence's
                 allocation MUST be in-bounds (reserved trash page — nn.cache)
     lengths:    (B,) int32 committed tokens per slot BEFORE this chunk
+    k_scale/v_scale: per-PHYSICAL-page fp32 dequant scales for an int8 pool
+                ((P,) or (P, 1, 1, 1); both given or both None),
+                scalar-prefetched like the table and applied in-register
 
     Returns out (B, C, KV, G, hd) fp32 — fully softmax-normalized (no lse:
     the chunk's self keys are in the pool, nothing left to fold in).
@@ -122,6 +138,7 @@ def flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     psz = k_pages.shape[1]
     n_pages = page_table.shape[1]
     scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
     rows = C * G
     Rp = -(-rows // MIN_ROW_PAD) * MIN_ROW_PAD
     # rows flatten (C, G) with G minor, so row r = i*G + g as the mask expects
@@ -131,21 +148,25 @@ def flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     kernel = functools.partial(_prefill_kernel, scale=scale, page_size=psz,
                                n_pages=n_pages, chunk=C, group=G,
-                               window=window)
+                               window=window, quantized=quantized)
+    # with scales, the index_map lambdas receive two extra prefetch refs —
+    # keep the unquantized specs verbatim so the bf16 program is unchanged
+    if quantized:
+        q_map = lambda b, kv, p, tbl, lens, ks, vs: (b, kv, 0, 0)
+        kv_map = lambda b, kv, p, tbl, lens, ks, vs: (tbl[b, p], 0, kv, 0)
+    else:
+        q_map = lambda b, kv, p, tbl, lens: (b, kv, 0, 0)
+        kv_map = lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quantized else 2,
         grid=(B, KV, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, Rp, hd),
-                         lambda b, kv, p, tbl, lens: (b, kv, 0, 0)),
-            pl.BlockSpec((1, psz, 1, hd),
-                         lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)),
-            pl.BlockSpec((1, psz, 1, hd),
-                         lambda b, kv, p, tbl, lens: (tbl[b, p], 0, kv, 0)),
+            pl.BlockSpec((1, 1, Rp, hd), q_map),
+            pl.BlockSpec((1, psz, 1, hd), kv_map),
+            pl.BlockSpec((1, psz, 1, hd), kv_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, Rp, hd),
-                         lambda b, kv, p, tbl, lens: (b, kv, 0, 0)),
+            pl.BlockSpec((1, 1, Rp, hd), q_map),
         ],
         scratch_shapes=[
             pltpu.VMEM((Rp,), jnp.float32),      # m (running max)
@@ -153,11 +174,14 @@ def flash_prefill(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
             pltpu.VMEM((Rp, hd), jnp.float32),   # acc (weighted values)
         ],
     )
+    prefetch = (page_table.astype(jnp.int32), lengths.astype(jnp.int32))
+    if quantized:
+        prefetch += (k_scale.reshape(-1).astype(jnp.float32),
+                     v_scale.reshape(-1).astype(jnp.float32))
     [out] = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((B, KV, Rp, hd), jnp.float32)],
         interpret=interpret,
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-      qr, k_pages, v_pages)
+    )(*prefetch, qr, k_pages, v_pages)
     return out[:, :, :rows].reshape(B, KV, C, G, hd).transpose(0, 2, 1, 3, 4)

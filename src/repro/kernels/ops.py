@@ -125,24 +125,31 @@ def edm_loss(f, z, y, sigma, sigma_data: float = 0.5):
 
 @functools.partial(jax.jit, static_argnames=("window",))
 def flash_decode(q, k_pages, v_pages, page_table, lengths,
-                 window: Optional[int] = None):
+                 window: Optional[int] = None,
+                 k_scale=None, v_scale=None):
     """Split-KV paged decode attention (flash-decoding). q: (B, KV, G, hd);
-    k/v pages: (P, page_size, KV, hd). Returns (out, lse) fp32 partials over
-    the committed tokens; fold in the current token's own k/v with
-    ``flash_decode.combine_self``. This is the decode route — the prefill /
-    train masks above never see 1-token queries."""
+    k/v pages: (P, page_size, KV, hd). For int8 pools pass the per-page fp32
+    ``k_scale``/``v_scale`` arrays — dequant is fused into the kernel.
+    Returns (out, lse) fp32 partials over the committed tokens; fold in the
+    current token's own k/v with ``flash_decode.combine_self``. This is the
+    decode route — the prefill / train masks above never see 1-token
+    queries."""
     return _fd.flash_decode(q, k_pages, v_pages, page_table, lengths,
-                            window=window, interpret=_interpret())
+                            window=window, k_scale=k_scale, v_scale=v_scale,
+                            interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("window",))
 def flash_prefill(q, k_pages, v_pages, page_table, lengths,
-                  window: Optional[int] = None):
+                  window: Optional[int] = None,
+                  k_scale=None, v_scale=None):
     """Chunked-prefill paged attention. q: (B, C, KV, G, hd) — one prompt
     CHUNK of grouped queries at absolute positions [lengths[b], lengths[b]+C)
     whose own k/v are already appended to the pool
-    (``repro.nn.cache.append_paged_chunk``). Returns the fully-normalized
-    fp32 output over [committed history || intra-chunk causal] — the serving
-    ingest counterpart of ``flash_decode``."""
+    (``repro.nn.cache.append_paged_chunk``). For int8 pools pass the
+    per-page fp32 ``k_scale``/``v_scale`` arrays (fused dequant). Returns
+    the fully-normalized fp32 output over [committed history || intra-chunk
+    causal] — the serving ingest counterpart of ``flash_decode``."""
     return _fp.flash_prefill(q, k_pages, v_pages, page_table, lengths,
-                             window=window, interpret=_interpret())
+                             window=window, k_scale=k_scale, v_scale=v_scale,
+                             interpret=_interpret())

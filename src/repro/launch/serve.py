@@ -303,16 +303,20 @@ class DecodeEngine:
 
 _ENGINE_DEFAULTS = dict(steps_per_block=1, temperature=0.0, top_k=0,
                         precision="bf16", impl="auto", prefill="chunked",
-                        chunk_size=DEFAULT_CHUNK)
+                        chunk_size=DEFAULT_CHUNK, kv_dtype=None)
 
 
 def get_engine(dbm: DiffusionBlocksModel, **config) -> DecodeEngine:
     """Memoized engine per (dbm, static config): repeated ``generate`` calls
     reuse the compiled scan programs instead of thrashing the jit cache.
     The key is normalized against the engine defaults, so ``get_engine(dbm)``
-    and an explicit-defaults call share one engine."""
+    and an explicit-defaults call share one engine. ``kv_dtype`` (the
+    ``--kv-dtype`` flag: int8 | bf16 | None) is folded into the precision
+    policy name — ``('bf16', 'int8')`` and ``('bf16_kvint8', None)`` resolve
+    to the same engine."""
     cfg = {**_ENGINE_DEFAULTS, **config}
-    cfg["precision"] = precision_mod.get_policy(cfg["precision"]).name
+    cfg["precision"] = precision_mod.with_kv_dtype(
+        cfg["precision"], cfg.pop("kv_dtype", None)).name
     key = tuple(sorted(cfg.items()))
     cache = dbm.__dict__.setdefault("_serve_engines", {})
     if key not in cache:
@@ -323,6 +327,7 @@ def get_engine(dbm: DiffusionBlocksModel, **config) -> DecodeEngine:
 def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
              steps_per_block: int = 1, rng=None, *, prompt_lengths=None,
              temperature: float = 0.0, top_k: int = 0, precision="bf16",
+             kv_dtype=None,
              impl: str = "auto", page_size: int = KVC.DEFAULT_PAGE_SIZE,
              prefill: str = "chunked", chunk_size: int = DEFAULT_CHUNK,
              aux_inputs=None, cond_lengths=None, reference: bool = False):
@@ -338,8 +343,8 @@ def generate(dbm, params, prompts: jnp.ndarray, max_new: int,
     per token)."""
     eng = get_engine(dbm, steps_per_block=steps_per_block,
                      temperature=temperature, top_k=top_k,
-                     precision=precision, impl=impl, prefill=prefill,
-                     chunk_size=chunk_size)
+                     precision=precision, kv_dtype=kv_dtype, impl=impl,
+                     prefill=prefill, chunk_size=chunk_size)
     return eng.generate(params, prompts, max_new, rng,
                         prompt_lengths=prompt_lengths, page_size=page_size,
                         aux_inputs=aux_inputs, cond_lengths=cond_lengths,
@@ -518,7 +523,8 @@ class ContinuousBatcher:
                  max_prompt: int = 64, max_len: int = 128,
                  total_pages: Optional[int] = None, seg_len: int = 16,
                  steps_per_block: int = 1, temperature: float = 0.0,
-                 top_k: int = 0, precision="bf16", impl: str = "auto",
+                 top_k: int = 0, precision="bf16", kv_dtype=None,
+                 impl: str = "auto",
                  prefill: str = "chunked",
                  chunk_size: Optional[int] = None,
                  prefix_cache: bool = False,
@@ -531,7 +537,8 @@ class ContinuousBatcher:
                       else chunk_size)
         self.eng = get_engine(dbm, steps_per_block=steps_per_block,
                               temperature=temperature, top_k=top_k,
-                              precision=precision, impl=impl,
+                              precision=precision, kv_dtype=kv_dtype,
+                              impl=impl,
                               prefill=prefill, chunk_size=chunk_size)
         self.chunked = prefill == "chunked"
         self.chunk_size = chunk_size
@@ -575,10 +582,11 @@ class ContinuousBatcher:
                 shared_pool.paged = mine
             else:
                 assert len(shared_pool.paged) == len(mine) and all(
-                    a.k.shape == b.k.shape for a, b in
+                    a.k.shape == b.k.shape and a.k.dtype == b.k.dtype
+                    and a.quantized == b.quantized for a, b in
                     zip(shared_pool.paged, mine)), \
                     "batchers sharing a pool must serve the same model with " \
-                    "the same page_size/total_pages"
+                    "the same page_size/total_pages/kv_dtype"
                 self.kv = _graft_paged(self.kv, shared_pool.paged)
         self.num_slots = num_slots
         self.table = np.zeros((num_slots, pps), np.int32)   # 0 = trash page
@@ -636,6 +644,17 @@ class ContinuousBatcher:
             priority = PRIORITY_CLASSES[priority]
         priority = int(priority)
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        # Reject degenerate requests BEFORE any state is touched: an empty
+        # prompt allocates zero pages (pages_for(0) == 0) and would dispatch
+        # a prefill chunk whose every write lands in the trash page; a
+        # max_new < 1 request could never retire through the stop_at check.
+        # ValueError (not assert) so the HTTP frontend maps these to a 400.
+        if prompt.size == 0:
+            raise ValueError(
+                "empty prompt: a request must carry at least one token "
+                "(the serving stack has no BOS convention to invent one)")
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
         assert prompt.size <= self.max_prompt, "prompt exceeds max_prompt"
         assert prompt.size + max_new <= self.max_len, "request exceeds max_len"
         if aux_inputs:
@@ -679,6 +698,20 @@ class ContinuousBatcher:
         with self._lock:
             self.queue.append(req)
         return rid
+
+    def kv_stats(self) -> dict:
+        """Pool-bytes surface for ``/v1/health``: the pool storage dtype and
+        total cache bytes counted per leaf — mixed-dtype aware, so an int8
+        pool reports its fp32 per-page scale arrays instead of silently
+        under-reporting them."""
+        leaves = _paged_leaves(self.kv)
+        return {
+            "kv_dtype": (jnp.dtype(leaves[0].k.dtype).name if leaves
+                         else None),
+            "kv_quantized": bool(leaves and leaves[0].quantized),
+            "kv_bytes": int(KVC.cache_bytes(self.kv)),
+            "kv_bytes_by_dtype": KVC.cache_bytes_by_dtype(self.kv),
+        }
 
     def submit_request(self, req: Request) -> None:
         """Enqueue a pre-built ``Request`` (thread-safe). The disaggregation
@@ -1426,6 +1459,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("int8", "bf16", "fp32", "auto"),
+                    help="paged KV pool storage dtype: int8 quantizes pages "
+                         "with one fp32 absmax scale per page per tensor "
+                         "(halves pool bytes again vs bf16); default follows "
+                         "--precision")
     ap.add_argument("--impl", default="auto",
                     help="attention impl: auto | kernels (Pallas flash-"
                          "decode + flash-prefill; interpret-mode on CPU)")
@@ -1477,7 +1516,8 @@ def main():
                      for _ in range(args.cond_pool)]
     kw = dict(steps_per_block=args.steps_per_block,
               temperature=args.temperature, top_k=args.top_k,
-              precision=args.precision, impl=args.impl,
+              precision=args.precision, kv_dtype=args.kv_dtype,
+              impl=args.impl,
               prefill=args.prefill,
               chunk_size=min(args.chunk_size, max(args.prompt_len, 1)))
 
@@ -1501,7 +1541,7 @@ def main():
         pool_abstract = jax.eval_shape(          # report size; allocate nothing
             lambda: dbm.model.init_paged_cache(
                 args.batch, 1 + args.batch * pps, args.page_size,
-                args.precision))
+                precision_mod.with_kv_dtype(args.precision, args.kv_dtype)))
         print(f"[static] generated {args.batch}x{args.max_new} tokens in "
               f"{dt:.2f}s ({n_tok/dt:.1f} tok/s incl. compile) | "
               f"dispatches={eng.dispatches} "

@@ -441,6 +441,8 @@ class InferenceServer:
             "queued": len(cb.queue),
             "free_pages": len(cb.free_pages),
             "total_pages": cb.total_pages,
+            # pool BYTES, mixed-dtype aware (int8 pages + fp32 scales)
+            **cb.kv_stats(),
             "served": self.runner.served,
             "cancelled": cb.cancelled_count,
             "backpressure_pauses": self.backpressure_pauses,
@@ -800,7 +802,8 @@ def build_batcher_from_args(args):
         num_slots=args.num_slots, page_size=args.page_size,
         max_prompt=args.prompt_len, max_len=args.prompt_len + args.max_new,
         seg_len=args.seg_len, temperature=args.temperature,
-        top_k=args.top_k, precision=args.precision, impl=args.impl,
+        top_k=args.top_k, precision=args.precision,
+        kv_dtype=getattr(args, "kv_dtype", None), impl=args.impl,
         prefill=args.prefill,
         chunk_size=min(args.chunk_size, max(args.prompt_len, 1)),
         prefix_cache=args.prefix_cache)
@@ -834,6 +837,12 @@ def add_server_args(ap: argparse.ArgumentParser):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=("int8", "bf16", "fp32", "auto"),
+                    help="KV pool storage dtype; 'int8' quantizes pages "
+                         "per-page (symmetric absmax, one fp32 scale per "
+                         "page) for ~2x pool capacity (default: the "
+                         "precision policy's native KV dtype)")
     ap.add_argument("--impl", default="auto")
     ap.add_argument("--conditioned", action="store_true",
                     help="register a pool of named conditioning inputs "

@@ -231,6 +231,8 @@ class Worker:
             "heartbeat_age_s": round(self.heartbeat_age, 3),
             "free_pages": len(self.cb.free_pages),
             "total_pages": self.cb.total_pages,
+            # pool BYTES, mixed-dtype aware (int8 pages + fp32 scales)
+            **self.cb.kv_stats(),
             "inflight": int(self.cb.active.sum()),
             "queued": len(self.cb.queue),
             "served": self.served_total + r.served,

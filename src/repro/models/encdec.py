@@ -272,8 +272,10 @@ class EncDecModel(BaseModel):
         dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                           cfg.rope_theta)
         self_one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
+        # cross conditioning blocks are dense (no per-page scales): under an
+        # int8 paged policy they stay in the compute dtype
         cross_one = A.init_kv_cache(num_slots, cfg.n_audio_frames, dims,
-                                    pol.kv)
+                                    pol.kv_dense)
         bc = lambda x: jnp.broadcast_to(x[None], (self.n_units,) + x.shape)
         return {"self": jax.tree_util.tree_map(bc, self_one),
                 "cross": jax.tree_util.tree_map(bc, cross_one)}

@@ -231,7 +231,10 @@ class VLMModel(BaseModel):
         dims = A.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                           cfg.rope_theta)
         one = KVC.init_paged_kv(n_pages, page_size, dims, pol.kv)
-        x_one = A.init_kv_cache(num_slots, cfg.n_image_tokens, dims, pol.kv)
+        # cross conditioning blocks are dense (no per-page scales): under an
+        # int8 paged policy they stay in the compute dtype
+        x_one = A.init_kv_cache(num_slots, cfg.n_image_tokens, dims,
+                                pol.kv_dense)
         bc = lambda x, n: jnp.broadcast_to(x[None], (n,) + x.shape)
         return {
             "self": jax.tree_util.tree_map(

@@ -45,12 +45,24 @@ DEFAULT_PAGE_SIZE = 16
 class PagedKV:
     """One layer's paged key/value pool. Registered as a pytree so it can be
     stacked over units, carried through ``lax.scan``, and sliced with
-    ``tree_map`` exactly like the dense cache dicts it replaces."""
+    ``tree_map`` exactly like the dense cache dicts it replaces.
+
+    ``k_scale``/``v_scale`` are present ONLY when the pool stores quantized
+    pages (integer storage dtype): one fp32 scalar per physical page per
+    tensor. They are shaped ``(*units, P, 1, 1, 1)`` so their page axis sits
+    at ``PAGE_AXIS`` exactly like the page data itself (the same gather /
+    scatter index expressions move pages and their scales together) and
+    dequantization is a plain broadcast multiply. Float pools leave them
+    ``None`` — the unquantized pytree structure, and therefore every compiled
+    program on the bf16 path, is byte-identical to the pre-quantization
+    layout."""
     k: jax.Array    # (P, page_size, KV, hd) — leading unit axes when stacked
     v: jax.Array
+    k_scale: Optional[jax.Array] = None   # (P, 1, 1, 1) fp32, quantized only
+    v_scale: Optional[jax.Array] = None
 
     def tree_flatten(self):
-        return (self.k, self.v), None
+        return (self.k, self.v, self.k_scale, self.v_scale), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -60,11 +72,57 @@ class PagedKV:
     def page_size(self) -> int:
         return self.k.shape[-3]
 
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+KV_SCALE_DTYPE = jnp.float32
+
+
+def resolve_kv_dtype(dtype):
+    """Resolve a KV storage dtype spec (``'bf16' | 'int8' | np/jnp dtype``)
+    to a numpy dtype."""
+    if isinstance(dtype, str):
+        dtype = {"bf16": jnp.bfloat16, "fp32": jnp.float32,
+                 "fp16": jnp.float16, "f32": jnp.float32}.get(dtype, dtype)
+    return jnp.dtype(dtype)
+
+
+def is_quantized_dtype(dtype) -> bool:
+    """True for KV storage dtypes that need per-page scales (int8)."""
+    return jnp.issubdtype(resolve_kv_dtype(dtype), jnp.integer)
+
+
+def quantize_pages(x: jax.Array, dtype=jnp.int8):
+    """Per-page symmetric absmax quantization. ``x`` is ``(..., psz, KV,
+    hd)`` float pages (any number of leading page/unit axes); returns
+    ``(q, scale)`` with ``q`` in ``dtype`` and ``scale`` fp32 shaped
+    ``(..., 1, 1, 1)`` so ``dequantize_pages`` is a broadcast multiply.
+    All-zero pages get scale 0 (q == 0 dequantizes to exactly 0)."""
+    qmax = float(jnp.iinfo(dtype).max)
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=(-3, -2, -1), keepdims=True)
+    scale = absmax / qmax
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    q = jnp.clip(jnp.round(xf * inv), -qmax, qmax).astype(dtype)
+    return q, scale.astype(KV_SCALE_DTYPE)
+
+
+def dequantize_pages(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of ``quantize_pages``: fp32 pages from int pages + scales."""
+    return q.astype(jnp.float32) * scale
+
 
 def init_paged_kv(n_pages: int, page_size: int, dims: A.AttnDims,
                   dtype=jnp.bfloat16) -> PagedKV:
+    dtype = resolve_kv_dtype(dtype)
     shape = (n_pages, page_size, dims.n_kv_heads, dims.head_dim)
-    return PagedKV(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+    k, v = jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+    if is_quantized_dtype(dtype):
+        scale = jnp.zeros((n_pages, 1, 1, 1), KV_SCALE_DTYPE)
+        return PagedKV(k, v, scale, scale)
+    return PagedKV(k, v)
 
 
 def pages_for(n_tokens: int, page_size: int) -> int:
@@ -81,9 +139,24 @@ def identity_page_table(batch: int, pages_per_slot: int) -> jax.Array:
 def cache_bytes(tree) -> int:
     """Total bytes of a cache pytree (paged or dense; also accepts the
     ``jax.eval_shape`` abstract tree, so sizes can be reported without
-    allocating)."""
-    return sum(int(x.size) * x.dtype.itemsize
+    allocating). Mixed-dtype trees — an int8 pool with its fp32 scale
+    leaves, fp32 recurrent states beside bf16 pages — are summed per leaf:
+    every leaf contributes size × itemsize of its OWN dtype, so quantized
+    pools report page bytes AND scale bytes rather than assuming one
+    homogeneous dtype."""
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
                for x in jax.tree_util.tree_leaves(tree))
+
+
+def cache_bytes_by_dtype(tree) -> Dict[str, int]:
+    """Per-dtype byte breakdown of a cache pytree — the health/stats
+    surface for mixed-dtype (quantized) pools, where a single total hides
+    the fp32 scale arrays riding beside the int8 pages."""
+    out: Dict[str, int] = {}
+    for x in jax.tree_util.tree_leaves(tree):
+        d = jnp.dtype(x.dtype)
+        out[d.name] = out.get(d.name, 0) + int(np.prod(x.shape)) * d.itemsize
+    return out
 
 
 def reset_slots(tree, init_tree, slot_mask: jax.Array, batch_axis: int):
@@ -118,10 +191,30 @@ def append_paged(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
     phys = jnp.take_along_axis(page_table, logical[:, None], axis=1)[:, 0]
     if active is not None:
         phys = jnp.where(active, phys, TRASH_PAGE)
-    return PagedKV(
-        pkv.k.at[phys, slot].set(k_new.astype(pkv.k.dtype)),
-        pkv.v.at[phys, slot].set(v_new.astype(pkv.v.dtype)),
-    )
+    if not pkv.quantized:
+        return PagedKV(
+            pkv.k.at[phys, slot].set(k_new.astype(pkv.k.dtype)),
+            pkv.v.at[phys, slot].set(v_new.astype(pkv.v.dtype)),
+        )
+    # Quantized pool: the page is the quantization granule, so the write is
+    # read-modify-REQUANTIZE on the B touched pages. Positions past the new
+    # token are zeroed before the absmax — recycled pages carry stale
+    # garbage that would otherwise inflate the scale and crush the real
+    # tokens' precision (attention masks hide the zeros exactly as they hid
+    # the garbage).
+    B = k_new.shape[0]
+    rows = jnp.arange(B)
+    keep = (jnp.arange(psz)[None, :] <= slot[:, None])[..., None, None]
+
+    def one(pool, scale, new):
+        pg = dequantize_pages(pool[phys], scale[phys])    # (B, psz, KV, hd)
+        pg = pg.at[rows, slot].set(new.astype(jnp.float32))
+        q, s = quantize_pages(jnp.where(keep, pg, 0.0), pool.dtype)
+        return pool.at[phys].set(q), scale.at[phys].set(s)
+
+    k_p, k_s = one(pkv.k, pkv.k_scale, k_new)
+    v_p, v_s = one(pkv.v, pkv.v_scale, v_new)
+    return PagedKV(k_p, v_p, k_s, v_s)
 
 
 def append_paged_chunk(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
@@ -138,19 +231,56 @@ def append_paged_chunk(pkv: PagedKV, k_new: jax.Array, v_new: jax.Array,
     """
     B, C = k_new.shape[:2]
     psz = pkv.page_size
-    pos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)[None, :]
-    logical = jnp.clip(pos // psz, 0, page_table.shape[1] - 1)
-    slot = pos % psz
-    phys = jnp.take_along_axis(page_table, logical, axis=1)     # (B, C)
-    valid = jnp.arange(C)[None, :] < n_valid[:, None]
-    phys = jnp.where(valid, phys, TRASH_PAGE)
-    fp, fs = phys.reshape(-1), slot.reshape(-1)
-    k_flat = k_new.reshape(B * C, *k_new.shape[2:])
-    v_flat = v_new.reshape(B * C, *v_new.shape[2:])
-    return PagedKV(
-        pkv.k.at[fp, fs].set(k_flat.astype(pkv.k.dtype)),
-        pkv.v.at[fp, fs].set(v_flat.astype(pkv.v.dtype)),
-    )
+    if not pkv.quantized:
+        pos = lengths[:, None] + jnp.arange(C, dtype=lengths.dtype)[None, :]
+        logical = jnp.clip(pos // psz, 0, page_table.shape[1] - 1)
+        slot = pos % psz
+        phys = jnp.take_along_axis(page_table, logical, axis=1)     # (B, C)
+        valid = jnp.arange(C)[None, :] < n_valid[:, None]
+        phys = jnp.where(valid, phys, TRASH_PAGE)
+        fp, fs = phys.reshape(-1), slot.reshape(-1)
+        k_flat = k_new.reshape(B * C, *k_new.shape[2:])
+        v_flat = v_new.reshape(B * C, *v_new.shape[2:])
+        return PagedKV(
+            pkv.k.at[fp, fs].set(k_flat.astype(pkv.k.dtype)),
+            pkv.v.at[fp, fs].set(v_flat.astype(pkv.v.dtype)),
+        )
+    # Quantized pool: requantize every page the chunk touches. A C-token
+    # chunk starting mid-page spans at most C // psz + 1 pages per slot;
+    # gather those, dequantize, splice the chunk in at its per-slot offset,
+    # zero everything past lengths + n_valid (ragged tails AND stale
+    # garbage — see ``append_paged``), requantize, scatter pages + scales
+    # back. Touched pages with no valid token (inactive slots) are
+    # redirected to the trash page, same no-branch trick as above.
+    npg = page_table.shape[1]
+    npt = C // psz + 1
+    base = lengths // psz
+    tlog = base[:, None] + jnp.arange(npt, dtype=lengths.dtype)   # (B, npt)
+    tphys = jnp.take_along_axis(page_table, jnp.clip(tlog, 0, npg - 1),
+                                axis=1)
+    end = lengths + n_valid
+    real = tlog * psz < end[:, None]
+    tphys = jnp.where(real, tphys, TRASH_PAGE)
+    span = npt * psz
+    rows = jnp.arange(B)[:, None]
+    rel = (lengths % psz)[:, None] + jnp.arange(C, dtype=lengths.dtype)
+    keep = ((base[:, None] * psz + jnp.arange(span))
+            < end[:, None])[..., None, None]                  # (B,span,1,1)
+    fp = tphys.reshape(-1)
+
+    def one(pool, scale, new):
+        pg = dequantize_pages(pool[tphys], scale[tphys])  # (B,npt,psz,KV,hd)
+        tail = pg.shape[3:]
+        flat = pg.reshape(B, span, *tail)
+        flat = flat.at[rows, rel].set(new.astype(jnp.float32))
+        flat = jnp.where(keep, flat, 0.0)
+        q, s = quantize_pages(flat.reshape(B, npt, psz, *tail), pool.dtype)
+        return (pool.at[fp].set(q.reshape(B * npt, psz, *tail)),
+                scale.at[fp].set(s.reshape(B * npt, 1, 1, 1)))
+
+    k_p, k_s = one(pkv.k, pkv.k_scale, k_new)
+    v_p, v_s = one(pkv.v, pkv.v_scale, v_new)
+    return PagedKV(k_p, v_p, k_s, v_s)
 
 
 # the page axis of a PagedKV leaf counted from the END: leaves are
@@ -175,12 +305,19 @@ def copy_pool_pages(cache, src, dst):
     k_self axis), so positional ``[:, page]`` indexing would silently hit
     the wrong axis. Dense per-slot leaves (recurrent states, cross blocks)
     pass through untouched. This is the device half of copy-on-write prefix
-    sharing."""
+    sharing. Quantized pools move each page's scale alongside its data —
+    the scale arrays share ``PAGE_AXIS``, so the same index expressions
+    apply."""
     def one(x):
         if isinstance(x, PagedKV):
             idx = _page_index(dst)
-            return PagedKV(x.k.at[idx].set(jnp.take(x.k, src, axis=PAGE_AXIS)),
-                           x.v.at[idx].set(jnp.take(x.v, src, axis=PAGE_AXIS)))
+
+            def cp(a):
+                if a is None:
+                    return None
+                return a.at[idx].set(jnp.take(a, src, axis=PAGE_AXIS))
+
+            return PagedKV(cp(x.k), cp(x.v), cp(x.k_scale), cp(x.v_scale))
         return x
     return jax.tree_util.tree_map(one, cache,
                                   is_leaf=lambda x: isinstance(x, PagedKV))
@@ -249,7 +386,13 @@ class SpilledSlot:
         arrays = {"n_pages": np.asarray(self.n_pages, np.int64)}
         kinds, dtypes = [], []
         for i, entry in enumerate(self.data):
-            if isinstance(entry, tuple):        # PagedKV leaf: (k, v) pages
+            if isinstance(entry, tuple) and len(entry) == 4:
+                # quantized PagedKV leaf: (k, v, k_scale, v_scale)
+                kinds.append(2)
+                dtypes.append(entry[0].dtype.name)
+                arrays[f"k{i}"], arrays[f"v{i}"] = entry[0], entry[1]
+                arrays[f"ks{i}"], arrays[f"vs{i}"] = entry[2], entry[3]
+            elif isinstance(entry, tuple):      # PagedKV leaf: (k, v) pages
                 kinds.append(1)
                 dtypes.append(entry[0].dtype.name)
                 arrays[f"k{i}"], arrays[f"v{i}"] = entry
@@ -273,7 +416,11 @@ class SpilledSlot:
             data = []
             for i, kind in enumerate(kinds):
                 dt = np.dtype(str(dtypes[i]))
-                if kind:
+                if kind == 2:
+                    data.append((z[f"k{i}"].view(dt), z[f"v{i}"].view(dt),
+                                 z[f"ks{i}"].view(np.float32),
+                                 z[f"vs{i}"].view(np.float32)))
+                elif kind == 1:
                     data.append((z[f"k{i}"].view(dt), z[f"v{i}"].view(dt)))
                 else:
                     data.append(z[f"d{i}"].view(dt))
@@ -306,8 +453,14 @@ def spill_slot(cache, slot: int, page_ids, dense_axes=None) -> SpilledSlot:
     data = []
     for path, leaf in leaves:
         if _is_pkv(leaf):
-            data.append((np.asarray(jnp.take(leaf.k, ids, axis=PAGE_AXIS)),
-                         np.asarray(jnp.take(leaf.v, ids, axis=PAGE_AXIS))))
+            entry = (np.asarray(jnp.take(leaf.k, ids, axis=PAGE_AXIS)),
+                     np.asarray(jnp.take(leaf.v, ids, axis=PAGE_AXIS)))
+            if leaf.quantized:
+                entry += (np.asarray(jnp.take(leaf.k_scale, ids,
+                                              axis=PAGE_AXIS)),
+                          np.asarray(jnp.take(leaf.v_scale, ids,
+                                              axis=PAGE_AXIS)))
+            data.append(entry)
         else:
             ax = _dense_slot_axis(path, dense_axes)
             data.append(np.asarray(jnp.take(leaf, slot, axis=ax)))
@@ -332,21 +485,55 @@ def restore_slot(cache, slot: int, page_ids, spilled: SpilledSlot,
     new = []
     for (path, leaf), saved in zip(leaves, spilled.data):
         if _is_pkv(leaf):
+            if not isinstance(saved, tuple):
+                raise ValueError(
+                    f"cache-state snapshot mismatch at "
+                    f"{jax.tree_util.keystr(path)}: the snapshot holds a "
+                    "dense row where the target pool has a paged leaf — "
+                    "spill and restore caches come from different model "
+                    "families")
+            _check_restore_dtypes(path, leaf, saved)
             if spilled.n_pages == 0:
                 # dense-rows-only snapshot (page-handle migration): the
                 # handed pages already hold the KV — no paged writes
                 new.append(leaf)
                 continue
             idx = _page_index(ids)
-            k_s, v_s = saved
-            new.append(PagedKV(leaf.k.at[idx].set(jnp.asarray(k_s)),
-                               leaf.v.at[idx].set(jnp.asarray(v_s))))
+            k_s, v_s = saved[0], saved[1]
+            restored = PagedKV(leaf.k.at[idx].set(jnp.asarray(k_s)),
+                               leaf.v.at[idx].set(jnp.asarray(v_s)))
+            if leaf.quantized:
+                restored = PagedKV(
+                    restored.k, restored.v,
+                    leaf.k_scale.at[idx].set(jnp.asarray(saved[2])),
+                    leaf.v_scale.at[idx].set(jnp.asarray(saved[3])))
+            new.append(restored)
         else:
             ax = _dense_slot_axis(path, dense_axes)
             idx = (slice(None),) * ax + (slot,)
             new.append(leaf.at[idx].set(
                 jnp.asarray(saved).astype(leaf.dtype)))
     return jax.tree_util.tree_unflatten(treedef, new)
+
+
+def _check_restore_dtypes(path, leaf: PagedKV, saved: tuple):
+    """Refuse to scatter a snapshot's pages into a pool with a different
+    storage dtype or quantization layout. Reinterpreting e.g. int8 page
+    bytes as bf16 (mismatched ``--kv-dtype`` between disagg workers) would
+    silently serve garbage KV — fail loudly with the remediation instead."""
+    have_scales = len(saved) == 4
+    snap_dt, pool_dt = np.dtype(saved[0].dtype), np.dtype(leaf.k.dtype)
+    if snap_dt != pool_dt or have_scales != leaf.quantized:
+        def _desc(dt, scaled):
+            return (f"{np.dtype(dt).name} pages "
+                    f"{'WITH' if scaled else 'without'} per-page scales")
+        raise ValueError(
+            f"cache-state dtype mismatch at {jax.tree_util.keystr(path)}: "
+            f"snapshot carries {_desc(snap_dt, have_scales)} but the target "
+            f"pool stores {_desc(pool_dt, leaf.quantized)}. The spilling and "
+            "restoring pools must be built with the same --kv-dtype; "
+            "re-prefill the request on the destination worker instead of "
+            "migrating its cache state.")
 
 
 # ---------------------------------------------------------------------------
@@ -422,6 +609,9 @@ def _attend_pages_ref(qg, pkv: PagedKV, page_table, lengths, k_self, v_self,
     L = npg * psz
     kk = pkv.k[page_table].astype(jnp.float32)        # (B, npg, psz, KV, hd)
     vv = pkv.v[page_table].astype(jnp.float32)
+    if pkv.quantized:                 # per-page dequant: broadcast multiply
+        kk = kk * pkv.k_scale[page_table]
+        vv = vv * pkv.v_scale[page_table]
     kk = kk.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)   # (B, KV, L, hd)
     vv = vv.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
     scale = 1.0 / (hd ** 0.5)
@@ -449,7 +639,9 @@ def attend_paged(qg, pkv: PagedKV, page_table, lengths, k_self, v_self, *,
         from repro.kernels import ops as kops
         from repro.kernels import flash_decode as FD
         out_p, lse = kops.flash_decode(qg, pkv.k, pkv.v, page_table,
-                                       lengths, window=window)
+                                       lengths, window=window,
+                                       k_scale=pkv.k_scale,
+                                       v_scale=pkv.v_scale)
         scale = 1.0 / (qg.shape[-1] ** 0.5)
         s_self = jnp.einsum("bkgd,bkd->bkg", qg.astype(jnp.float32),
                             k_self.astype(jnp.float32)) * scale
@@ -506,6 +698,9 @@ def _attend_prefill_ref(qg, pkv: PagedKV, page_table, lengths,
     L = npg * psz
     kk = pkv.k[page_table].astype(jnp.float32)        # (B, npg, psz, KV, hd)
     vv = pkv.v[page_table].astype(jnp.float32)
+    if pkv.quantized:                 # per-page dequant: broadcast multiply
+        kk = kk * pkv.k_scale[page_table]
+        vv = vv * pkv.v_scale[page_table]
     kk = kk.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)   # (B, KV, L, hd)
     vv = vv.reshape(B, L, KV, hd).transpose(0, 2, 1, 3)
     scale = 1.0 / (hd ** 0.5)
@@ -529,7 +724,8 @@ def attend_prefill(qg, pkv: PagedKV, page_table, lengths, *,
     if impl in ("pallas", "kernels"):
         from repro.kernels import ops as kops
         return kops.flash_prefill(qg, pkv.k, pkv.v, page_table, lengths,
-                                  window=window)
+                                  window=window, k_scale=pkv.k_scale,
+                                  v_scale=pkv.v_scale)
     return _attend_prefill_ref(qg, pkv, page_table, lengths, window)
 
 
@@ -688,6 +884,14 @@ class PrefixPageCache:
             if not known:
                 node.tails.append((pages[i], tail.copy()))
                 refcount[pages[i]] = refcount.get(pages[i], 0) + 1
+        # If nothing was registered under a freshly created root (prompt
+        # shorter than a page with no tail page to offer, say), drop the
+        # root again: an empty root matches nothing, survives eviction
+        # sweeps that stop as soon as enough pages are free, and would
+        # accumulate forever across fingerprints.
+        root = self.roots.get(cond_fp)
+        if root is not None and not root.children and not root.tails:
+            del self.roots[cond_fp]
 
     # ---- eviction ----------------------------------------------------
     def evict(self, refcount: Dict[int, int], free_pages: List[int],
@@ -721,10 +925,12 @@ class PrefixPageCache:
                 drop(page)
 
         for fp in list(self.roots):
-            if len(free_pages) >= need:
-                break
             root = self.roots[fp]
-            walk(root)
+            if len(free_pages) < need:
+                walk(root)
+            # Prune emptied roots even when eviction was satisfied mid-walk
+            # (or before this root was reached): breaking out of the sweep
+            # used to strand empty roots in ``self.roots``.
             if not root.children and not root.tails:
                 del self.roots[fp]
         return freed

@@ -59,6 +59,19 @@ class Policy:
         """KV-cache storage dtype (bf16 under the serving default)."""
         return self.compute_dtype if self.kv_dtype is None else self.kv_dtype
 
+    @property
+    def kv_quantized(self) -> bool:
+        """True when the paged pool stores integer pages + per-page scales."""
+        return jnp.issubdtype(jnp.dtype(self.kv), jnp.integer)
+
+    @property
+    def kv_dense(self):
+        """Storage dtype for DENSE (non-paged) per-slot KV blocks — the
+        fixed cross-attention conditioning memories. These have no per-page
+        scale machinery, so they never quantize: under an int8 paged policy
+        they fall back to the compute dtype."""
+        return self.compute_dtype if self.kv_quantized else self.kv
+
     def state_for(self, family: Optional[str] = None):
         """Recurrent-state storage dtype (mamba/xLSTM): compounded rounding
         over the sequence keeps these fp32 under the bf16 policy."""
@@ -71,9 +84,17 @@ class Policy:
 
 FP32 = Policy("fp32")
 BF16 = Policy("bf16", compute_dtype=jnp.bfloat16)
+# int8 paged-KV variants: compute stays bf16/fp32, only the PAGE POOL stores
+# int8 (+ one fp32 absmax scale per page per tensor — repro.nn.cache). Each
+# gets a distinct name because engine memoization keys on get_policy(x).name.
+BF16_KVINT8 = Policy("bf16_kvint8", compute_dtype=jnp.bfloat16,
+                     kv_dtype=jnp.int8)
+FP32_KVINT8 = Policy("fp32_kvint8", kv_dtype=jnp.int8)
 
 _POLICIES = {"fp32": FP32, "float32": FP32, "bf16": BF16, "bfloat16": BF16,
-             "mixed": BF16, None: FP32, "none": FP32}
+             "mixed": BF16, None: FP32, "none": FP32,
+             "bf16_kvint8": BF16_KVINT8, "fp32_kvint8": FP32_KVINT8,
+             "int8": BF16_KVINT8, "kvint8": BF16_KVINT8}
 
 PolicyLike = Union[None, str, Policy]
 
@@ -87,6 +108,31 @@ def get_policy(policy: PolicyLike) -> Policy:
         raise ValueError(
             f"unknown precision policy {policy!r}; one of "
             f"{sorted(k for k in _POLICIES if isinstance(k, str))}") from None
+
+
+def with_kv_dtype(policy: PolicyLike, kv_dtype) -> Policy:
+    """Resolve a (precision, --kv-dtype) flag pair to a registered policy:
+    ``with_kv_dtype('bf16', 'int8') -> BF16_KVINT8``. ``kv_dtype`` of
+    ``None``/``'auto'`` keeps the base policy; a float kv dtype matching the
+    policy's existing storage dtype is likewise a no-op. Anything else must
+    name a registered variant (the engine memoizes on ``Policy.name``, so
+    ad-hoc unnamed combinations are refused rather than silently aliased)."""
+    pol = get_policy(policy)
+    if kv_dtype in (None, "", "auto"):
+        return pol
+    from repro.nn.cache import resolve_kv_dtype
+    want = resolve_kv_dtype(kv_dtype)
+    if jnp.dtype(pol.kv) == want:
+        return pol
+    for cand in _POLICIES.values():
+        if (cand.compute_dtype == pol.compute_dtype
+                and cand.param_dtype == pol.param_dtype
+                and jnp.dtype(cand.kv) == want):
+            return cand
+    raise ValueError(
+        f"no registered precision policy stores {want} KV pages over "
+        f"{pol.name!r} compute; known policies: "
+        f"{sorted(k for k in _POLICIES if isinstance(k, str))}")
 
 
 def _is_float(x) -> bool:

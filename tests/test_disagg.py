@@ -318,15 +318,24 @@ FAMILY_CFGS = {"dense": TINY, "hybrid": TINY_HYBRID, "vlm": TINY_VLM,
                "audio": TINY_AUDIO}
 
 
-@pytest.mark.parametrize("family", ["dense", "hybrid", "vlm", "audio"])
-def test_spilled_slot_roundtrip_across_pools(family):
+@pytest.mark.parametrize("family,kv_dtype", [
+    ("dense", None), ("hybrid", None), ("vlm", None), ("audio", None),
+    ("dense", "int8"), ("hybrid", "int8"),
+])
+def test_spilled_slot_roundtrip_across_pools(family, kv_dtype):
     """spill -> ``to_bytes`` -> ``from_bytes`` -> restore into a DIFFERENT
     pool's free pages is exact for every cache-state family: pure paged
     attention (dense), paged KV + recurrent mamba rows (hybrid), and the
     per-slot cross blocks (vlm, audio). The receiving batcher has a
     different pool size and a rotated free list, so the snapshot lands in
     physically different pages; the finished output must still be
-    bit-identical to an uninterrupted single-batcher run."""
+    bit-identical to an uninterrupted single-batcher run.
+
+    The int8 variants run the same round trip on quantized pools: the wire
+    payload then carries int8 page bytes PLUS their fp32 per-page scales,
+    and a restore into a same-dtype pool is a byte copy — so the migrated
+    output must match an uninterrupted int8 run bit-for-bit (the spill is
+    exact even though quantization itself is lossy)."""
     cfg = FAMILY_CFGS[family]
     dbm = DiffusionBlocksModel(cfg, DBConfig(num_blocks=2,
                                              overlap_gamma=0.1))
@@ -342,10 +351,10 @@ def test_spilled_slot_roundtrip_across_pools(family):
                .randn(cfg.n_audio_frames, cfg.d_model).astype(np.float32)}
     prompt = (np.arange(1, 9) * 5 % cfg.vocab_size).astype(np.int32)
     max_new, seed = 8, 11
-    kw = dict(CB_KW, num_slots=1)
+    kw = dict(CB_KW, num_slots=1, kv_dtype=kv_dtype)
 
     base = unified_seq(dbm, params, [(prompt, max_new, aux)], seed,
-                       num_slots=1)[0]
+                       num_slots=1, kv_dtype=kv_dtype)[0]
 
     # interrupted run: 2 prefill chunks + 1 decode segment, then spill
     src = ContinuousBatcher(dbm, params, **kw)
@@ -367,6 +376,13 @@ def test_spilled_slot_roundtrip_across_pools(family):
     req.spilled = SpilledSlot.from_bytes(raw)
     assert {e[0].shape[0] if isinstance(e, tuple) else None
             for e in req.spilled.data} == used_src
+    paged_entries = [e for e in req.spilled.data if isinstance(e, tuple)]
+    if kv_dtype == "int8":   # scales must survive the wire round trip
+        assert paged_entries and all(len(e) == 4 for e in paged_entries)
+        assert all(e[0].dtype == np.int8 and e[2].dtype == np.float32
+                   for e in paged_entries)
+    else:
+        assert all(len(e) == 2 for e in paged_entries)
 
     # different pool (bigger, rotated free list) so the restore cannot
     # land in the same physical ids; same num_slots (see unified_seq note)
@@ -382,3 +398,35 @@ def test_spilled_slot_roundtrip_across_pools(family):
     assert dst.restores == 1
     assert list(fin[0].out) == base, (family, fin[0].out, base)
     assert len(dst.free_pages) == dst.total_pages - 1 and not dst.page_refs
+
+
+def test_spilled_slot_cross_dtype_restore_refused(dense_env):
+    """A snapshot spilled from an int8 pool must NOT restore into a pool
+    with a different KV storage dtype: reinterpreting int8 page bytes as
+    dense floats would silently serve garbage KV. The restoring step has to
+    fail LOUDLY with the remediation (same ``--kv-dtype`` everywhere, or
+    re-prefill on the destination) — and the mismatch must survive the wire
+    round trip, which is exactly where disagg deployments with divergent
+    worker configs would hit it."""
+    dbm, params = dense_env
+    prompt = (np.arange(1, 9) * 5 % TINY.vocab_size).astype(np.int32)
+    kw = dict(CB_KW, num_slots=1)
+
+    src = ContinuousBatcher(dbm, params, **dict(kw, kv_dtype="int8"))
+    src.submit(prompt, 8)
+    rng = jax.random.PRNGKey(11)
+    for _ in range(3):
+        rng, f = src.step(rng, strict=False)
+        assert not f
+    with src._pool_lock:
+        req = src._spill_slot(0)
+    req.spilled = SpilledSlot.from_bytes(req.spilled.to_bytes())
+
+    # destination pool keeps the policy's dense KV dtype (fp32 here)
+    dst = ContinuousBatcher(dbm, params, **kw)
+    dst.submit_request(req)
+    with pytest.raises(ValueError,
+                       match=r"cache-state dtype mismatch") as ei:
+        dst.step(rng, strict=False)
+    msg = str(ei.value)
+    assert "--kv-dtype" in msg and "re-prefill" in msg, msg

@@ -153,3 +153,127 @@ def test_edm_loss_sweep(B, S, d, dtype):
     out = edm_loss(f, z, y, sig, 0.5, interpret=True)
     expect = ref.edm_loss_reference(f, z, y, sig, 0.5)
     np.testing.assert_allclose(float(out), float(expect), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV: quantize round-trip bounds + quantized kernels vs reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("psz,KV,hd", [(4, 2, 16), (8, 1, 32), (16, 4, 8)])
+def test_quantize_roundtrip_error_bound(psz, KV, hd):
+    """Per-page symmetric absmax int8: |dequant - x| <= scale/2 elementwise
+    (half a quantization step), scales are fp32 with the page axis aligned
+    to PAGE_AXIS, and an all-zero page round-trips exactly with scale 0."""
+    rng = np.random.RandomState(0)
+    P = 6
+    x = jnp.asarray(rng.randn(P, psz, KV, hd) *
+                    rng.uniform(0.1, 10.0, size=(P, 1, 1, 1)), jnp.float32)
+    x = x.at[-1].set(0.0)                       # empty page
+    q, s = KVC.quantize_pages(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert s.shape == (P, 1, 1, 1)              # broadcasts at PAGE_AXIS
+    got = KVC.dequantize_pages(q, s)
+    err = np.abs(np.asarray(got) - np.asarray(x))
+    bound = np.asarray(s) / 2 + 1e-7
+    assert (err <= bound).all(), (err.max(), np.asarray(s).ravel())
+    np.testing.assert_array_equal(np.asarray(got[-1]), 0.0)
+    assert float(s[-1].reshape(())) == 0.0
+    # the max-magnitude element of each non-empty page hits the full range
+    np.testing.assert_allclose(
+        np.abs(np.asarray(q[:-1])).reshape(P - 1, -1).max(1), 127.0)
+
+
+def _quantized_pool(rng, P, psz, KV, hd):
+    kf = jnp.asarray(rng.randn(P, psz, KV, hd), jnp.float32)
+    vf = jnp.asarray(rng.randn(P, psz, KV, hd), jnp.float32)
+    qk, ks = KVC.quantize_pages(kf)
+    qv, vs = KVC.quantize_pages(vf)
+    return KVC.PagedKV(qk, qv, ks, vs)
+
+
+@pytest.mark.parametrize("window", [None, 7])
+@pytest.mark.parametrize("B,KV,G,hd,psz,npg", [
+    (2, 2, 2, 32, 8, 4),      # GQA
+    (1, 4, 1, 64, 16, 2),     # MQA-ish (G=1: group-pad path)
+    (3, 1, 8, 32, 4, 8),      # wide group, many small pages
+])
+def test_flash_decode_int8_sweep(B, KV, G, hd, psz, npg, window):
+    """int8 decode kernel (scales scalar-prefetched, dequant fused in
+    registers) vs the quantized gather reference — the SAME dequantized
+    values feed both, so parity is tight fp32."""
+    rng = np.random.RandomState(3)
+    pool = _quantized_pool(rng, 1 + B * npg, psz, KV, hd)
+    assert pool.quantized
+    table = KVC.identity_page_table(B, npg)
+    lengths = jnp.asarray(np.linspace(0, npg * psz, B).astype(np.int32))
+    q = jnp.asarray(rng.randn(B, KV, G, hd), jnp.float32)
+    k_self = jnp.asarray(rng.randn(B, KV, hd), jnp.float32)
+    v_self = jnp.asarray(rng.randn(B, KV, hd), jnp.float32)
+    out_p, lse = flash_decode(q, pool.k, pool.v, table, lengths,
+                              window=window, k_scale=pool.k_scale,
+                              v_scale=pool.v_scale, interpret=True)
+    scale = 1.0 / (hd ** 0.5)
+    s_self = jnp.einsum("bkgd,bkd->bkg", q, k_self) * scale
+    got = combine_self(out_p, lse, s_self, v_self)
+    expect = KVC._attend_pages_ref(q, pool, table, lengths, k_self, v_self,
+                                   window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_flash_decode_int8_trash_page_inert():
+    """Poisoned trash-page CONTENT and SCALE must never leak into output."""
+    KV, G, hd, psz, npg = 2, 2, 32, 4, 3
+    rng = np.random.RandomState(4)
+    pool = _quantized_pool(rng, 1 + npg, psz, KV, hd)
+    table = jnp.asarray([[1, KVC.TRASH_PAGE, KVC.TRASH_PAGE]], jnp.int32)
+    lengths = jnp.asarray([3], jnp.int32)
+    q = jnp.asarray(rng.randn(1, KV, G, hd), jnp.float32)
+    out1, lse1 = flash_decode(q, pool.k, pool.v, table, lengths,
+                              k_scale=pool.k_scale, v_scale=pool.v_scale,
+                              interpret=True)
+    poisoned = KVC.PagedKV(
+        pool.k.at[KVC.TRASH_PAGE].set(127), pool.v.at[KVC.TRASH_PAGE].set(127),
+        pool.k_scale.at[KVC.TRASH_PAGE].set(1e3),
+        pool.v_scale.at[KVC.TRASH_PAGE].set(1e3))
+    out2, lse2 = flash_decode(q, poisoned.k, poisoned.v, table, lengths,
+                              k_scale=poisoned.k_scale,
+                              v_scale=poisoned.v_scale, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+    np.testing.assert_allclose(np.asarray(lse1), np.asarray(lse2))
+
+
+@pytest.mark.parametrize("window", [None, 5])
+@pytest.mark.parametrize("G", [1, 2])
+def test_flash_prefill_int8_matches_ref(window, G):
+    """int8 chunked-prefill kernel vs the quantized gather reference over a
+    pool built through the REAL quantized append paths (token + chunk)."""
+    rng = np.random.RandomState(5)
+    B, C, KV, hd, psz = 3, 6, 2, 16, 4
+    from repro.nn import attention as A
+    dims = A.AttnDims(KV * G, KV, hd)
+    lengths = jnp.asarray([0, 3, 9], jnp.int32)
+    pps = KVC.pages_for(16, psz)
+    pkv = KVC.init_paged_kv(1 + B * pps, psz, dims, jnp.int8)
+    assert pkv.quantized
+    table = KVC.identity_page_table(B, pps)
+    for t in range(int(jnp.max(lengths))):
+        kt = jnp.asarray(rng.randn(B, KV, hd), jnp.float32)
+        pkv = KVC.append_paged(pkv, kt, kt * 0.5, table,
+                               jnp.minimum(lengths, t), active=t < lengths)
+    k_new = jnp.asarray(rng.randn(B, C, KV, hd), jnp.float32)
+    v_new = jnp.asarray(rng.randn(B, C, KV, hd), jnp.float32)
+    n_valid = jnp.asarray([6, 4, 2], jnp.int32)
+    pkv = KVC.append_paged_chunk(pkv, k_new, v_new, table, lengths, n_valid)
+    q = jnp.asarray(rng.randn(B, C, KV, G, hd), jnp.float32)
+    ref_out = KVC.attend_prefill(q, pkv, table, lengths, window=window,
+                                 impl="auto")
+    ker_out = KVC.attend_prefill(q, pkv, table, lengths, window=window,
+                                 impl="kernels")
+    for b in range(B):
+        nv = int(n_valid[b])
+        if nv:
+            np.testing.assert_allclose(np.asarray(ker_out)[b, :nv],
+                                       np.asarray(ref_out)[b, :nv],
+                                       atol=1e-4, rtol=1e-4)

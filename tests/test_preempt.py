@@ -123,6 +123,23 @@ def test_preempt_bit_parity_conditioned(vlm_env):
         assert pool_whole(cb)
 
 
+def test_preempt_bit_parity_int8_pool(dense_env):
+    """The spill/restore round trip stays exact on a QUANTIZED pool: the
+    snapshot carries the int8 page bytes plus their fp32 per-page scales,
+    so a preempted request's greedy continuation is bit-identical to an
+    uninterrupted int8 run — quantization is lossy, migrating the quantized
+    state is not."""
+    dbm, params = dense_env
+    prompt = (np.arange(1, 9) * 3) % TINY.vocab_size
+    base, _ = run_with_preempt(dbm, params, prompt, 8, kv_dtype="int8")
+    for at in (1, 3):
+        got, cb = run_with_preempt(dbm, params, prompt, 8, preempt_at=at,
+                                   kv_dtype="int8")
+        assert cb.preemptions >= 1 and cb.restores == cb.preemptions
+        assert got == base, (at, got, base)
+        assert pool_whole(cb)
+
+
 def test_spill_restore_primitives_roundtrip_different_pages(vlm_env):
     """``spill_slot``/``restore_slot`` round-trip EXACTLY through different
     physical pages: page content lands at the new ids, dense per-slot rows

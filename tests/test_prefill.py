@@ -393,6 +393,51 @@ def test_prefix_cache_cow_on_partial_tail(dbm_params):
     assert req3.out == cb_ref.run(jax.random.PRNGKey(7))[0].out
 
 
+def test_prefix_cache_cow_and_sharing_int8(dbm_params):
+    """Prefix sharing and boundary-page copy-on-write on an int8 pool: a
+    page and its per-page scale share/copy as one unit.
+
+    Two parity claims, chosen so each is EXACT (no tolerance):
+      * identical full prompt re-served through the cache (full pages + CoW
+        of the partial tail) is bit-identical to the first serve — the CoW
+        copy carries the pristine prefill-time int8 bytes and scale, and
+        decode appends the same fp values on top;
+      * a diverging suffix behind a PAGE-ALIGNED shared prefix matches a
+        from-scratch int8 serve bit-for-bit — the suffix page quantizes
+        once from identical fp content in both runs. (A partial-tail CoW
+        page would instead REquantize already-quantized bytes, which is
+        deterministic but not byte-equal to a single-pass quantization, so
+        the scratch-parity claim is made at the page boundary.)"""
+    dbm, params = dbm_params
+    rs = np.random.RandomState(9)
+    sys_p = rs.randint(0, TINY.vocab_size, size=26)   # 6.5 pages of 4
+    u1 = rs.randint(0, TINY.vocab_size, size=4)
+    cb = _mk_prefix_batcher(dbm, params, num_slots=1, kv_dtype="int8")
+    cb.submit(np.concatenate([sys_p, u1]), max_new=4)
+    out1 = cb.run(jax.random.PRNGKey(6))[0].out
+    cows0 = cb.cow_copies
+    cb.submit(np.concatenate([sys_p, u1]), max_new=4)
+    req2 = cb.run(jax.random.PRNGKey(6))[0]
+    assert req2.shared_tokens == 30                   # whole prompt shared
+    assert cb.cow_copies > cows0                      # quantized tail CoW'd
+    assert req2.out == out1, (req2.out, out1)
+
+    # page-aligned prefix: diverging suffix == unshared int8 reference
+    sys_a = rs.randint(0, TINY.vocab_size, size=24)   # exactly 6 pages
+    u2 = rs.randint(0, TINY.vocab_size, size=6)
+    cb.submit(np.concatenate([sys_a, u1]), max_new=4)
+    cb.run(jax.random.PRNGKey(8))
+    cb.submit(np.concatenate([sys_a, u2]), max_new=4)
+    req3 = cb.run(jax.random.PRNGKey(7))[0]
+    assert req3.shared_tokens == 24
+    ref = ContinuousBatcher(dbm, params, num_slots=1, max_prompt=32,
+                            max_len=48, seg_len=4, page_size=4,
+                            chunk_size=8, precision="fp32",
+                            kv_dtype="int8")
+    ref.submit(np.concatenate([sys_a, u2]), max_new=4)
+    assert req3.out == ref.run(jax.random.PRNGKey(7))[0].out
+
+
 def test_prefix_cache_rejects_recurrent_family():
     cfg = configs.reduced(configs.get_config("xlstm-125m"))
     dbm = make_dbm(cfg, blocks=2)

@@ -187,6 +187,14 @@ def check_invariants(cb: ContinuousBatcher, *, cross_restores=False):
     assert set(free) | set(refs) == set(range(1, total)), \
         "pages leaked or invented"
     assert all(r > 0 for r in refs.values())
+    # -- no empty trie roots: evict prunes a root it drains, insert never
+    #    leaves a fresh root with nothing registered under it (an empty
+    #    root matches nothing but would accumulate forever across
+    #    conditioning fingerprints)
+    if cb.prefix is not None:
+        for fp, root in cb.prefix.roots.items():
+            assert root.children or root.tails, \
+                f"empty prefix root survived for fingerprint {fp}"
     # -- refcounts decompose exactly into slot maps + trie holds
     expected = walk_trie_pages(cb.prefix) if cb.prefix is not None else {}
     for s in range(cb.num_slots):
@@ -229,14 +237,14 @@ def check_conditioning_state(cb: ContinuousBatcher):
 # Trace driver
 # ---------------------------------------------------------------------------
 
-def run_trace(dbm, params, seed: int):
+def run_trace(dbm, params, seed: int, **extra):
     rs = np.random.RandomState(seed)
     num_slots = int(rs.randint(1, 4))
     # modest pool so eviction paths run; floor covers one max request + CoW
     pps = KVC.pages_for(MAX_LEN, PSZ)
     total_pages = 1 + int(rs.randint(pps + 2, num_slots * pps + 4))
     cb = make_batcher(dbm, params, num_slots=num_slots,
-                      total_pages=total_pages)
+                      total_pages=total_pages, **extra)
 
     # conditioning pool: collisions on purpose (same fp shares, different
     # fp must not), plus unconditioned requests
@@ -353,6 +361,35 @@ def test_scheduler_traces_seeded(dbm_params):
     dbm, params = dbm_params
     for seed in range(N_TRACES):
         run_trace(dbm, params, seed)
+
+
+def test_scheduler_traces_seeded_int8(dbm_params):
+    """A slice of the same traces on an int8-quantized pool. The fake
+    dispatches skip KV math, but the REAL quantized pool still backs every
+    scheduler path the traces drive: spill snapshots must carry int8 pages
+    plus their fp32 per-page scales, restores must scatter both back, and
+    copy-on-write must move the scales with the page bytes — under the same
+    conservation / refcount / empty-root invariants as the dense pool."""
+    dbm, params = dbm_params
+    for seed in range(25):
+        run_trace(dbm, params, seed, kv_dtype="int8")
+
+
+def test_prefix_cache_insert_registers_nothing_leaves_no_root():
+    """An insert that registers nothing (sub-page prompt with no page to
+    offer as a tail candidate) must not leave an empty root behind — an
+    empty root matches nothing, survives need-bounded eviction sweeps, and
+    would accumulate forever across conditioning fingerprints."""
+    pc = KVC.PrefixPageCache(page_size=4)
+    refs = {}
+    pc.insert(np.arange(2), [], refs, cond_fp=9)
+    assert 9 not in pc.roots and not refs
+    # a tail-only root IS kept — and evicting it prunes the root again
+    pc.insert(np.arange(3), [5], refs, cond_fp=10)
+    assert pc.roots[10].tails and refs == {5: 1}
+    free = []
+    assert pc.evict(refs, free, need=1) == 1
+    assert 10 not in pc.roots and not refs and free == [5]
 
 
 def test_retire_returns_all_pages_without_prefix_cache(dbm_params):

@@ -512,3 +512,39 @@ def test_slo_fields_validated_and_echoed(dbm_params):
     code, obj = asyncio.run(main())
     assert code == 200 and obj["preempted"] == 0
     assert "deadline_blown" not in obj      # only present when it happened
+
+
+# ---------------------------------------------------------------------------
+# Zero-length prompts: the engine-level guard behind the HTTP 400
+# ---------------------------------------------------------------------------
+
+def test_zero_length_prompt_rejected_no_leak(dbm_params):
+    """Direct ``submit`` of a zero-length prompt (or ``max_new < 1``) raises
+    ``ValueError`` BEFORE any queue/slot/page state is touched. The HTTP
+    frontend's 400 (covered in ``test_request_validation``) is backed by
+    this engine-level guard, so embedders driving the batcher directly
+    cannot wedge the scheduler with a request that could never retire
+    (``stop_at`` would start satisfied, or at 0 for an empty prompt with
+    ``max_new`` pinned, and the slot would spin forever). After the
+    rejections the engine must serve a well-formed request normally."""
+    dbm, params = dbm_params
+    cb = ContinuousBatcher(dbm, params, num_slots=1, **CB_KW)
+    free0 = len(cb.free_pages)
+    with pytest.raises(ValueError, match="empty prompt"):
+        cb.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        cb.submit(np.asarray([1, 2], np.int32), 0)
+    with pytest.raises(ValueError, match="max_new"):
+        cb.submit(np.asarray([1, 2], np.int32), -3)
+    assert not cb.queue and not cb.active.any(), "rejected request enqueued"
+    assert len(cb.free_pages) == free0 and not cb.page_refs, "pages leaked"
+
+    rid = cb.submit(np.asarray([1, 2, 3], np.int32), 3)
+    rng = jax.random.PRNGKey(5)
+    fin = []
+    while cb.has_work():
+        rng, f = cb.step(rng, strict=False)
+        fin.extend(f)
+    assert [r.rid for r in fin] == [rid] and fin[0].error is None
+    assert len(fin[0].out) == 3
+    assert len(cb.free_pages) == free0 and not cb.page_refs
